@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: pure-JAX reference path wall-clock on CPU.
+
+(Pallas kernels target TPU; interpret-mode timing is not meaningful, so we
+time the reference implementations the models actually execute on CPU and
+report the kernels' analytic VMEM tile footprints as the derived column.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels import ref
+
+
+def run():
+    key = jax.random.key(0)
+
+    # Flash attention reference (B, NQ, S, D layout).
+    B, NQ, NKV, S, D = 2, 8, 2, 1024, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, NQ, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, NKV, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, NKV, S, D), jnp.float32)
+    fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    _, us = timed(lambda: jax.block_until_ready(fn(q, k, v)))
+    tile_kb = (256 * D * 2 + 2 * 512 * D * 2 + 256 * D * 4 + 256 * 512 * 4) / 1024
+    emit("kernels/flash_attention_ref", us, f"S={S} vmem_tile={tile_kb:.0f}KiB")
+
+    # Decode attention.
+    G = 4
+    q1 = jax.random.normal(ks[0], (B, NKV, G, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, NKV, S, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, NKV, S, D), jnp.float32)
+    sp = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    fn = jax.jit(lambda *a: ref.decode_attention_ref(*a))
+    _, us = timed(lambda: jax.block_until_ready(fn(q1, kc, vc, sp, pos)))
+    stream_mb = B * NKV * S * D * 2 * 2 / 2**20
+    emit("kernels/decode_attention_ref", us, f"cache_stream={stream_mb:.1f}MiB/step")
+
+    # RG-LRU scan.
+    W = 512
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W)))
+    b = jax.random.normal(ks[1], (B, S, W)) * 0.1
+    h0 = jnp.zeros((B, W))
+    fn = jax.jit(lambda a, b, h0: ref.rglru_scan_ref(a, b, h0))
+    _, us = timed(lambda: jax.block_until_ready(fn(a, b, h0)))
+    emit("kernels/rglru_scan_ref", us, f"S={S} W={W} (assoc-scan; kernel=seq@HBM-bw)")
+
+    # RMSNorm.
+    x = jax.random.normal(ks[0], (B * S, 2048), jnp.float32)
+    w = jnp.ones((2048,), jnp.float32)
+    fn = jax.jit(lambda x, w: ref.rms_norm_ref(x, w))
+    _, us = timed(lambda: jax.block_until_ready(fn(x, w)))
+    emit("kernels/rms_norm_ref", us, "fused 1-pass in Pallas kernel")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Roofline table from the dry-run JSON (EXPERIMENTS.md §Roofline source).
+
+Reads results/roofline.json (produced by repro.launch.dryrun) and emits one
+row per compiled (arch x shape) cell: the three terms, the dominant one,
+and MODEL_FLOPS/HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DEFAULT = Path(__file__).resolve().parent.parent / "results" / "roofline.json"
+
+
+def run(path=DEFAULT):
+    path = Path(path)
+    if not path.exists():
+        emit("roofline/missing", 0.0, f"run repro.launch.dryrun first ({path})")
+        return
+    cells = json.loads(path.read_text())["cells"]
+    for c in cells:
+        name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c["status"] == "skipped":
+            emit(name, 0.0, f"SKIP: {c['note']}")
+            continue
+        if c["status"] == "error":
+            emit(name, 0.0, f"ERROR: {c['note']}")
+            continue
+        mem = c["memory"]["per_device_total"] / 2**30
+        if "terms_s" in c:
+            t = c["terms_s"]
+            step_us = max(t.values()) * 1e6
+            emit(
+                name,
+                step_us,
+                f"compute={t['compute_s']*1e3:.1f}ms memory={t['memory_s']*1e3:.1f}ms "
+                f"collective={t['collective_s']*1e3:.1f}ms dom={c['dominant']} "
+                f"useful={c['model_flops_over_hlo']*100:.0f}% mem/dev={mem:.2f}GiB",
+            )
+        else:
+            emit(name, 0.0, f"compiled mem/dev={mem:.2f}GiB census={c['collective_census']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,95 @@
+"""Beyond-paper: the §VII "Spanning Subsets" direction, made concrete.
+
+The paper conjectures a small subset of models could serve nearly all
+requests (cutting serving cost).  We compute it: for a workload (network
+distribution x SLA mix), greedily pick the subset whose MDInference
+aggregate accuracy stays within epsilon of the full zoo's.
+
+Also answers the paper's "without resorting to empirical measurement"
+challenge with a closed-form observation: a model can only be selected if
+it is the accuracy-argmax for SOME budget, i.e. it lies on the Pareto
+frontier of (mu+sigma, accuracy) — dominated models (DenseNet,
+InceptionResNetV2, NasNet Mobile...) can be dropped a priori.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.configs.mdinference_zoo import paper_zoo
+from repro.core import FixedCVNetwork
+from repro.core.registry import ModelRegistry
+from repro.core.simulator import SimConfig, run_simulation
+
+
+def pareto_frontier(reg: ModelRegistry):
+    """Models that are accuracy-argmax for some budget (undominated)."""
+    keep = []
+    for i, p in enumerate(reg):
+        dominated = any(
+            (q.mu_ms + q.sigma_ms <= p.mu_ms + p.sigma_ms)
+            and q.accuracy > p.accuracy
+            for q in reg
+        )
+        if not dominated:
+            keep.append(i)
+    return keep
+
+
+def accuracy_of(subset_idx, reg, sla, net, n=6000, seed=13):
+    sub = ModelRegistry([reg[i] for i in subset_idx])
+    m = run_simulation(
+        SimConfig(registry=sub, algorithm="mdinference", t_sla_ms=sla,
+                  n_requests=n, network=net, duplication=True, seed=seed)
+    ).metrics
+    return m.aggregate_accuracy
+
+
+def run():
+    reg = paper_zoo()
+    net = FixedCVNetwork(100.0, 0.5)
+    slas = [100.0, 150.0, 250.0]
+
+    frontier = pareto_frontier(reg)
+    emit(
+        "spanning/pareto_frontier",
+        0.0,
+        f"{len(frontier)}/{len(reg)} undominated: "
+        + " ".join(reg.names[i] for i in frontier),
+    )
+
+    def workload_acc(subset):
+        return float(np.mean([accuracy_of(subset, reg, s, net) for s in slas]))
+
+    full_acc, us = timed(lambda: workload_acc(list(range(len(reg)))), repeats=1)
+    emit("spanning/full_zoo", us, f"acc={full_acc:.2f} models={len(reg)}")
+
+    # Greedy forward selection from the frontier.
+    chosen: list[int] = []
+    remaining = list(frontier)
+    while remaining:
+        best_gain, best_i = -1.0, None
+        for i in remaining:
+            acc = workload_acc(chosen + [i])
+            if acc > best_gain:
+                best_gain, best_i = acc, i
+        chosen.append(best_i)
+        remaining.remove(best_i)
+        emit(
+            f"spanning/greedy_k{len(chosen)}",
+            0.0,
+            f"acc={best_gain:.2f} (+{reg.names[best_i]})"
+            f" gap={full_acc - best_gain:.2f}",
+        )
+        if best_gain >= full_acc - 0.25:
+            break
+    emit(
+        "spanning/result",
+        0.0,
+        f"{len(chosen)} models within 0.25pt of the {len(reg)}-model zoo: "
+        + " ".join(reg.names[i] for i in chosen),
+    )
+
+
+if __name__ == "__main__":
+    run()

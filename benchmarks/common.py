@@ -1,0 +1,18 @@
+"""Shared benchmark plumbing: CSV emission in ``name,us_per_call,derived``."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 3, **kwargs):
+    """Run fn repeatedly, return (result, mean_us)."""
+    fn(*args, **kwargs)  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us

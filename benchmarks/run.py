@@ -1,0 +1,61 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,table4]
+"""
+from __future__ import annotations
+
+import argparse
+import traceback
+
+from benchmarks import (
+    bench_fig3,
+    bench_fig4_fig5,
+    bench_fig6,
+    bench_kernels,
+    bench_roofline,
+    bench_serving,
+    bench_spanning,
+    bench_table3,
+    bench_table4,
+)
+
+SUITES = {
+    "table3": bench_table3.run,
+    "fig3": bench_fig3.run,
+    "fig4_fig5": bench_fig4_fig5.run,
+    "fig6": bench_fig6.run,
+    "table4": bench_table4.run,
+    "serving": bench_serving.run,
+    "spanning": bench_spanning.run,
+    "kernels": bench_kernels.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in SUITES.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        return 1
+    print("# all suites complete")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

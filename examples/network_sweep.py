@@ -1,0 +1,28 @@
+"""Network-adaptiveness demo (paper Fig 4/5): sweep CV, watch MDInference
+trade model diversity for SLA attainment.
+
+Run:  PYTHONPATH=src python examples/network_sweep.py
+"""
+from repro.configs import paper_zoo
+from repro.core import FixedCVNetwork, SimConfig, run_simulation
+
+zoo = paper_zoo()
+print(f"{'CV':>4s}  {'SLA=100ms':^34s}  {'SLA=250ms':^34s}")
+print(f"{'':4s}  {'acc':>7s} {'attain':>7s} {'models':>7s}     "
+      f"{'acc':>7s} {'attain':>7s} {'models':>7s}")
+for cv in (0.0, 0.2, 0.4, 0.6, 0.74, 1.0):
+    cols = []
+    for sla in (100.0, 250.0):
+        m = run_simulation(
+            SimConfig(
+                registry=zoo, algorithm="mdinference", t_sla_ms=sla,
+                n_requests=10_000, network=FixedCVNetwork(100.0, cv), seed=1,
+            )
+        ).metrics
+        diverse = sum(1 for v in m.model_usage.values() if v > 0.01)
+        cols.append(f"{m.aggregate_accuracy:7.2f} {m.sla_attainment*100:6.1f}% {diverse:7d}")
+    print(f"{cv:4.2f}  {cols[0]}     {cols[1]}")
+
+print("\nAs the paper observes: with a dead-stable network at SLA=100ms the "
+      "budget is always zero (attainment<50%); variability lets MDInference "
+      "exploit fast draws with bigger models.")

@@ -1,0 +1,52 @@
+"""Quickstart: the MDInference algorithm in 40 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs import paper_zoo
+from repro.core import (
+    DEFAULT_ON_DEVICE,
+    FixedCVNetwork,
+    SimConfig,
+    compute_budget,
+    run_simulation,
+    select_ref,
+)
+
+# --- one request through the three-stage selection ------------------------
+zoo = paper_zoo()  # Table III: 11 functionally-equivalent image classifiers
+t_sla, t_nw = 250.0, 100.0  # SLA and estimated network time (ms)
+budget = compute_budget(t_sla, t_nw)
+
+rng = np.random.default_rng(0)
+sel = select_ref(zoo, budget, rng)
+print(f"budget {budget:.0f}ms -> base={zoo[sel.base_index].name!r} "
+      f"selected={zoo[sel.index].name!r} "
+      f"(M_E size {len(sel.exploration_set)})")
+
+# --- 10,000 simulated requests, with and without duplication ---------------
+net = FixedCVNetwork(mean_ms=100.0, cv=0.5)  # the paper's 100 +- 50 ms network
+for dup in (False, True):
+    res = run_simulation(
+        SimConfig(
+            registry=zoo,
+            algorithm="mdinference",
+            t_sla_ms=t_sla,
+            n_requests=10_000,
+            network=net,
+            duplication=dup,
+            ondevice=DEFAULT_ON_DEVICE,
+            seed=0,
+        )
+    )
+    m = res.metrics
+    print(f"duplication={dup!s:5s}  {m.row()}")
+
+# Compare against the static baselines of the paper's Table IV.
+for alg in ("static_latency", "static_accuracy", "static_greedy"):
+    m = run_simulation(
+        SimConfig(registry=zoo, algorithm=alg, t_sla_ms=t_sla,
+                  n_requests=10_000, network=net, duplication=True, seed=0)
+    ).metrics
+    print(f"{alg:16s}  {m.row()}")

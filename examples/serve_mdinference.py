@@ -1,0 +1,13 @@
+"""End-to-end serving example: MDInference over REAL model execution.
+
+Three functionally-equivalent LM tiers (tiny configs of the gemma / llama3 /
+qwen3 families) are built and profiled with real wall-clock measurements;
+a request stream is then served with network-aware tier selection plus
+hedged duplication.  This is the paper's Figure 1(d) running for real.
+
+Run:  PYTHONPATH=src python examples/serve_mdinference.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    raise SystemExit(main(["--requests", "30", "--sla", "2500", "--gen", "8"]))

@@ -1,0 +1,24 @@
+"""Train a ~100M-parameter llama-family model for a few hundred steps.
+
+Demonstrates the full training substrate on CPU: synthetic resumable data,
+AdamW + cosine schedule, remat, checkpointing every 100 steps.
+
+Run:  PYTHONPATH=src python examples/train_small.py
+(~100M params is slow on one CPU core; pass --d-model 128 for a fast demo.)
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = [
+        "--arch", "llama3-8b",
+        "--d-model", "512",       # 512 wide x 8 layers + 256-wide head ~ 100M
+        "--layers", "8",
+        "--steps", "300",
+        "--batch", "8",
+        "--seq", "256",
+        "--ckpt-dir", "/tmp/repro_train_small",
+        "--ckpt-every", "100",
+    ] + sys.argv[1:]
+    raise SystemExit(main(args))

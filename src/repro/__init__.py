@@ -1,0 +1,6 @@
+"""MDInference on TPU: SLA-bounded multi-model serving in JAX.
+
+Reproduction + extension of Ogden & Guo (2020).  See README.md / DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing with reshard-on-restore."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,10 @@
+"""Configs: the 10 assigned architectures + the paper's Table III zoo."""
+from repro.configs.archs import ARCHS, ARCH_IDS, get_config, reduced
+from repro.configs.mdinference_zoo import TABLE_III, ablation_zoo, paper_zoo
+from repro.configs.shapes import SHAPES, applicable, input_specs, skip_reason
+
+__all__ = [
+    "ARCHS", "ARCH_IDS", "get_config", "reduced",
+    "TABLE_III", "ablation_zoo", "paper_zoo",
+    "SHAPES", "applicable", "input_specs", "skip_reason",
+]

@@ -1,0 +1,43 @@
+"""The paper's model zoo (Table III).
+
+Top-1 accuracy on ILSVRC-2012 and execution-latency statistics measured on
+an AWS p2.xlarge GPU server over 1 000 runs (values transcribed from the
+paper).  ``NasNet Fictional`` is the paper's synthetic low-accuracy copy of
+NasNet Large, used *only* in the §VI-C stage ablation.
+"""
+from __future__ import annotations
+
+from repro.core.registry import ModelProfile, ModelRegistry
+
+__all__ = [
+    "TABLE_III",
+    "NASNET_FICTIONAL",
+    "paper_zoo",
+    "ablation_zoo",
+]
+
+TABLE_III: tuple[ModelProfile, ...] = (
+    ModelProfile("SqueezeNet", 49.0, 4.91, 0.06),
+    ModelProfile("MobileNetV1 0.25", 49.7, 3.21, 0.08),
+    ModelProfile("MobileNetV1 0.5", 63.2, 4.21, 0.06),
+    ModelProfile("DenseNet", 64.2, 25.49, 0.14),
+    ModelProfile("MobileNetV1 0.75", 68.3, 4.67, 0.07),
+    ModelProfile("MobileNetV1 1.0", 71.0, 5.43, 0.11),
+    ModelProfile("NasNet Mobile", 73.9, 21.18, 0.17),
+    ModelProfile("InceptionResNetV2", 77.5, 50.85, 0.33),
+    ModelProfile("InceptionV3", 77.9, 31.11, 0.19),
+    ModelProfile("InceptionV4", 80.1, 59.21, 0.22),
+    ModelProfile("NasNet Large", 82.6, 112.61, 0.36),
+)
+
+NASNET_FICTIONAL = ModelProfile("NasNet Fictional", 50.0, 112.61, 0.36)
+
+
+def paper_zoo() -> ModelRegistry:
+    """The default cloud-side zoo (Table III without the fictional model)."""
+    return ModelRegistry(TABLE_III)
+
+
+def ablation_zoo() -> ModelRegistry:
+    """Zoo for the §VI-C decomposition study (adds NasNet Fictional)."""
+    return ModelRegistry(TABLE_III + (NASNET_FICTIONAL,))

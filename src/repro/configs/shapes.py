@@ -1,0 +1,98 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Four shape cells per architecture:
+  train_4k     seq 4096,   global batch 256  -> train_step
+  prefill_32k  seq 32768,  global batch 32   -> prefill (serve_step)
+  decode_32k   KV 32768,   global batch 128  -> decode  (serve_step)
+  long_500k    KV 524288,  global batch 1    -> decode, sub-quadratic only
+
+Applicability (DESIGN.md §Arch-applicability): encoder-only archs have no
+decode step; ``long_500k`` requires O(1)/O(window) decode state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import get_config
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+__all__ = ["SHAPES", "ShapeCell", "applicable", "input_specs", "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> Optional[str]:
+    cell = SHAPES[shape]
+    if cell.kind == "decode" and cfg.encoder_only:
+        return "encoder-only architecture has no decode step"
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return "full-attention KV state is quadratic-cost at 500k; skipped per assignment"
+    return None
+
+
+def applicable(cfg: ModelConfig, shape: str) -> bool:
+    return skip_reason(cfg, shape) is None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str, *, batch_override: int = None):
+    """ShapeDtypeStruct inputs for (arch, shape) — no device allocation.
+
+    Returns a dict:
+      train:   {"inputs": {tokens/frames/patches, labels}}
+      prefill: {"inputs": {...}}
+      decode:  {"cache": <pytree>, "token": (B,), "pos": (B,)}
+    """
+    cell = SHAPES[shape]
+    B = batch_override or cell.global_batch
+    S = cell.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+
+    if cell.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            inputs = {"frames": _sds((B, S, cfg.frontend_dim), f32)}
+            if cell.kind == "train":
+                inputs["labels"] = _sds((B, S), i32)
+        elif cfg.frontend == "vision":
+            P = cfg.num_prefix_tokens
+            inputs = {
+                "patches": _sds((B, P, cfg.frontend_dim), f32),
+                "tokens": _sds((B, S - P), i32),
+            }
+            if cell.kind == "train":
+                inputs["labels"] = _sds((B, S - P), i32)
+        else:
+            inputs = {"tokens": _sds((B, S), i32)}
+            if cell.kind == "train":
+                inputs["labels"] = _sds((B, S), i32)
+        return {"inputs": inputs}
+
+    # decode: cache shapes from init_cache under eval_shape (no allocation).
+    cache = jax.eval_shape(lambda: transformer.init_cache(cfg, B, S))
+    return {
+        "cache": cache,
+        "token": _sds((B,), i32),
+        "pos": _sds((B,), i32),
+    }

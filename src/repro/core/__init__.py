@@ -1,0 +1,71 @@
+"""MDInference core: the paper's contribution as a composable library.
+
+Public surface:
+  * :class:`~repro.core.registry.ModelProfile` / ``ModelRegistry`` — the set
+    of functionally-equivalent models ``M`` with ``A(m)``, ``mu(m)``,
+    ``sigma(m)``.
+  * :mod:`~repro.core.selection` — the three-stage probabilistic selection
+    (reference + vectorized/jit-able).
+  * :mod:`~repro.core.duplication` — SLA-bounding request duplication.
+  * :mod:`~repro.core.network` — network models, traces, and estimators.
+  * :mod:`~repro.core.simulator` — the paper's evaluation methodology.
+  * :mod:`~repro.core.baselines` — every comparison algorithm from §VI.
+"""
+from repro.core.baselines import ALGORITHMS, get_algorithm
+from repro.core.duplication import (
+    DEFAULT_ON_DEVICE,
+    DuplicationOutcome,
+    HedgePolicy,
+    resolve_duplication,
+)
+from repro.core.network import (
+    EWMAEstimator,
+    ExactEstimator,
+    FixedCVNetwork,
+    LognormalNetwork,
+    NoisyEstimator,
+    TraceNetwork,
+    residential_trace,
+    university_trace,
+)
+from repro.core.registry import ModelProfile, ModelRegistry
+from repro.core.selection import (
+    BatchSelection,
+    SelectionResult,
+    compute_budget,
+    select_batch,
+    select_ref,
+    selection_probabilities,
+)
+from repro.core.simulator import SimConfig, SimResult, run_simulation
+from repro.core.sla import RequestMetrics, summarize
+
+__all__ = [
+    "ALGORITHMS",
+    "BatchSelection",
+    "DEFAULT_ON_DEVICE",
+    "DuplicationOutcome",
+    "EWMAEstimator",
+    "ExactEstimator",
+    "FixedCVNetwork",
+    "HedgePolicy",
+    "LognormalNetwork",
+    "ModelProfile",
+    "ModelRegistry",
+    "NoisyEstimator",
+    "RequestMetrics",
+    "SelectionResult",
+    "SimConfig",
+    "SimResult",
+    "TraceNetwork",
+    "compute_budget",
+    "get_algorithm",
+    "residential_trace",
+    "resolve_duplication",
+    "run_simulation",
+    "select_batch",
+    "select_ref",
+    "selection_probabilities",
+    "summarize",
+    "university_trace",
+]

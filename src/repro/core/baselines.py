@@ -1,0 +1,131 @@
+"""Baseline selection algorithms the paper compares against (§VI).
+
+All baselines share the vectorized signature used by the simulator:
+
+    fn(key, accuracy, mu, sigma, t_sla, t_budget) -> (index (R,), fallback (R,))
+
+``t_sla`` is the raw SLA (the *static greedy* baseline ignores the network
+and budgets against the full SLA); ``t_budget`` is the network-aware budget.
+``fallback`` marks requests for which stage 1 found no feasible model (only
+meaningful for budgeted algorithms; static algorithms never "fall back" —
+they simply miss their SLA).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.selection import select_batch, selection_probabilities
+
+__all__ = ["ALGORITHMS", "get_algorithm"]
+
+_EPS = 1e-9
+
+
+def _greedy_at(accuracy, mu, sigma, budget):
+    """argmax accuracy s.t. mu+sigma < budget; fastest if none fits."""
+    budget = jnp.atleast_1d(budget)[:, None]
+    fits = (mu + sigma)[None, :] < budget
+    any_fit = fits.any(axis=-1)
+    score = accuracy[None, :] - _EPS * mu[None, :]
+    idx = jnp.argmax(jnp.where(fits, score, -jnp.inf), axis=-1)
+    idx = jnp.where(any_fit, idx, jnp.argmin(mu)).astype(jnp.int32)
+    return idx, ~any_fit
+
+
+def mdinference(key, accuracy, mu, sigma, t_sla, t_budget, *, utility_power=1.0):
+    sel = select_batch(
+        key, accuracy, mu, sigma, t_budget, utility_power=utility_power
+    )
+    return sel.index, sel.fallback
+
+
+def static_greedy(key, accuracy, mu, sigma, t_sla, t_budget):
+    """Most accurate model fitting the *SLA* (network-oblivious)."""
+    return _greedy_at(accuracy, mu, sigma, jnp.broadcast_to(t_sla, t_budget.shape))
+
+
+def budget_greedy(key, accuracy, mu, sigma, t_sla, t_budget):
+    """Beyond-paper: network-aware greedy (stage 1 only, no exploration)."""
+    return _greedy_at(accuracy, mu, sigma, t_budget)
+
+
+def static_accuracy(key, accuracy, mu, sigma, t_sla, t_budget):
+    """Always the most accurate model (Table IV baseline)."""
+    idx = jnp.full(t_budget.shape, jnp.argmax(accuracy), dtype=jnp.int32)
+    return idx, jnp.zeros(t_budget.shape, bool)
+
+
+def static_latency(key, accuracy, mu, sigma, t_sla, t_budget):
+    """Always the fastest model (Table IV baseline)."""
+    idx = jnp.full(t_budget.shape, jnp.argmin(mu), dtype=jnp.int32)
+    return idx, jnp.zeros(t_budget.shape, bool)
+
+
+def pure_random(key, accuracy, mu, sigma, t_sla, t_budget):
+    """Uniform over the whole zoo (Fig 6 stage-1 ablation)."""
+    n = accuracy.shape[0]
+    idx = jax.random.randint(key, t_budget.shape, 0, n, dtype=jnp.int32)
+    return idx, jnp.zeros(t_budget.shape, bool)
+
+
+def _exploration_mask(accuracy, mu, sigma, t_budget):
+    """Stages 1+2 shared by the related-* ablations."""
+    probs, base_index, fallback = selection_probabilities(
+        accuracy, mu, sigma, t_budget
+    )
+    mu_b = mu[base_index][:, None]
+    sig_b = sigma[base_index][:, None]
+    in_me = (mu[None, :] >= mu_b - sig_b) & (mu[None, :] <= mu_b + sig_b)
+    return in_me, base_index, fallback
+
+
+def related_random(key, accuracy, mu, sigma, t_sla, t_budget):
+    """Uniform over M_E (Fig 6 stage-3 ablation: no utility weighting)."""
+    in_me, base_index, fallback = _exploration_mask(accuracy, mu, sigma, t_budget)
+    logits = jnp.where(in_me, 0.0, -jnp.inf)
+    idx = jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    idx = jnp.where(fallback, jnp.argmin(mu), idx).astype(jnp.int32)
+    return idx, fallback
+
+
+def related_accurate(key, accuracy, mu, sigma, t_sla, t_budget):
+    """Most accurate member of M_E (Fig 6 stage-3 ablation: no exploration)."""
+    in_me, base_index, fallback = _exploration_mask(accuracy, mu, sigma, t_budget)
+    score = accuracy[None, :] - _EPS * mu[None, :]
+    idx = jnp.argmax(jnp.where(in_me, score, -jnp.inf), axis=-1).astype(jnp.int32)
+    idx = jnp.where(fallback, jnp.argmin(mu), idx).astype(jnp.int32)
+    return idx, fallback
+
+
+def oracle(key, accuracy, mu, sigma, t_sla, t_budget):
+    """Beyond-paper upper bound: greedy against the *actual* remaining budget.
+
+    Identical to budget_greedy when estimation is exact; differs under noisy
+    estimators.  Useful as a ceiling in ablation plots.
+    """
+    return _greedy_at(accuracy, mu, sigma, t_budget)
+
+
+ALGORITHMS: Dict[str, Callable] = {
+    "mdinference": mdinference,
+    "static_greedy": static_greedy,
+    "budget_greedy": budget_greedy,
+    "static_accuracy": static_accuracy,
+    "static_latency": static_latency,
+    "pure_random": pure_random,
+    "related_random": related_random,
+    "related_accurate": related_accurate,
+    "oracle": oracle,
+}
+
+
+def get_algorithm(name: str) -> Callable:
+    try:
+        return ALGORITHMS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown algorithm {name!r}; available: {sorted(ALGORITHMS)}"
+        ) from None

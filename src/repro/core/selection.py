@@ -1,0 +1,219 @@
+"""MDInference's three-stage probabilistic model selection (paper §V-A).
+
+Two implementations are provided:
+
+* :func:`select_ref` — a direct, readable Python transliteration of the
+  paper's algorithm.  One request at a time.  This is the oracle used in
+  tests.
+* :func:`select_batch` — a fully vectorized ``jnp`` implementation that
+  selects for a whole batch of requests in one shot.  It is ``jax.jit``-able
+  and is what both the simulator and the serving scheduler use.
+
+Stage 1 (greedy base, Eq. 1–2):
+    maximize A(m) subject to mu(m) + sigma(m) < T_budget.
+    If no model satisfies the constraint the *fastest* model is chosen and
+    execution begins immediately (no exploration).
+
+Stage 2 (exploration set, Eq. 3):
+    M_E = { m : mu(m) in [mu(m_b) - sigma(m_b), mu(m_b) + sigma(m_b)] }.
+
+Stage 3 (utility sampling, Eq. 4):
+    U(m) = A(m) * (T_budget - (mu(m)+sigma(m))) / |T_budget - mu(m)|,
+    normalized over M_E, sampled.
+
+Notes on faithfulness:
+  * Eq. 4 can yield negative utilities for M_E members that violate the
+    latency constraint; a negative selection probability is meaningless, so
+    we clamp utilities at zero before normalizing (the paper's stage 3 is
+    described as "accounting for" such members — clamping removes them).
+    If *every* utility clamps to zero we fall back to the base model.
+  * ``utility_power`` (default 1.0) is a beyond-paper knob: probabilities are
+    proportional to ``U**utility_power``.  1.0 reproduces Eq. 4 exactly;
+    larger values sharpen selection toward the max-utility model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.registry import ModelRegistry
+
+__all__ = [
+    "SelectionResult",
+    "compute_budget",
+    "select_ref",
+    "select_batch",
+    "selection_probabilities",
+]
+
+_EPS = 1e-9
+
+
+def compute_budget(t_sla_ms, t_nw_ms):
+    """``T_budget = T_sla - T_nw`` (paper §V-A)."""
+    return t_sla_ms - t_nw_ms
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionResult:
+    """Outcome of one selection."""
+
+    index: int  # model chosen for execution
+    base_index: int  # stage-1 base model m_b
+    fallback: bool  # True when stage 1 found no feasible model
+    exploration_set: tuple[int, ...]  # indices of M_E (empty on fallback)
+    probabilities: tuple[float, ...]  # selection probs aligned with M_E
+
+
+# ---------------------------------------------------------------------------
+# Reference (per-request, plain Python) implementation.
+# ---------------------------------------------------------------------------
+def select_ref(
+    registry: ModelRegistry,
+    t_budget_ms: float,
+    rng: np.random.Generator,
+    *,
+    utility_power: float = 1.0,
+) -> SelectionResult:
+    """Paper-faithful single-request selection."""
+    profiles = registry.profiles
+
+    # Stage 1: greedy base model.
+    eligible = [i for i, p in enumerate(profiles) if p.mu_ms + p.sigma_ms < t_budget_ms]
+    if not eligible:
+        fastest = registry.fastest_index
+        return SelectionResult(
+            index=fastest,
+            base_index=fastest,
+            fallback=True,
+            exploration_set=(),
+            probabilities=(),
+        )
+    base = max(eligible, key=lambda i: (profiles[i].accuracy, -profiles[i].mu_ms))
+    mu_b, sig_b = profiles[base].mu_ms, profiles[base].sigma_ms
+
+    # Stage 2: exploration set around the base model.
+    explore = [
+        i
+        for i, p in enumerate(profiles)
+        if mu_b - sig_b <= p.mu_ms <= mu_b + sig_b
+    ]
+
+    # Stage 3: utility-weighted sampling.
+    utils = []
+    for i in explore:
+        p = profiles[i]
+        denom = abs(t_budget_ms - p.mu_ms) + _EPS
+        u = p.accuracy * (t_budget_ms - (p.mu_ms + p.sigma_ms)) / denom
+        utils.append(max(u, 0.0) ** utility_power if u > 0 else 0.0)
+    total = sum(utils)
+    if total <= 0.0:
+        return SelectionResult(
+            index=base,
+            base_index=base,
+            fallback=False,
+            exploration_set=tuple(explore),
+            probabilities=tuple(0.0 for _ in explore),
+        )
+    probs = [u / total for u in utils]
+    choice = explore[int(rng.choice(len(explore), p=probs))]
+    return SelectionResult(
+        index=choice,
+        base_index=base,
+        fallback=False,
+        exploration_set=tuple(explore),
+        probabilities=tuple(probs),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized (batched, jit-able) implementation.
+# ---------------------------------------------------------------------------
+class BatchSelection(NamedTuple):
+    """Vectorized selection outcome for a batch of requests."""
+
+    index: jax.Array  # (R,) int32 — model chosen per request
+    base_index: jax.Array  # (R,) int32 — stage-1 base model
+    fallback: jax.Array  # (R,) bool — stage-1 infeasible, fastest used
+    probabilities: jax.Array  # (R, N) float32 — stage-3 probs (0 outside M_E)
+
+
+def selection_probabilities(
+    accuracy: jax.Array,
+    mu: jax.Array,
+    sigma: jax.Array,
+    t_budget: jax.Array,
+    *,
+    utility_power: float = 1.0,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stages 1–3 without sampling.
+
+    Args:
+      accuracy, mu, sigma: (N,) model profile arrays.
+      t_budget: (R,) per-request budgets in ms.
+
+    Returns:
+      (probs (R, N), base_index (R,), fallback (R,)).
+      On fallback rows ``probs`` is a one-hot of the fastest model.
+    """
+    t_budget = jnp.asarray(t_budget)
+    squeeze = t_budget.ndim == 0
+    t_budget = jnp.atleast_1d(t_budget)[:, None]  # (R, 1)
+
+    fits = (mu + sigma)[None, :] < t_budget  # (R, N)
+    any_fit = fits.any(axis=-1)  # (R,)
+
+    # Stage 1: among feasible models maximize accuracy, tie-break on lower mu.
+    score = accuracy[None, :] - _EPS * mu[None, :]
+    base_index = jnp.argmax(jnp.where(fits, score, -jnp.inf), axis=-1)
+    fastest = jnp.argmin(mu)
+    base_index = jnp.where(any_fit, base_index, fastest).astype(jnp.int32)
+
+    # Stage 2: exploration set around the base model.
+    mu_b = mu[base_index][:, None]  # (R, 1)
+    sig_b = sigma[base_index][:, None]
+    in_me = (mu[None, :] >= mu_b - sig_b) & (mu[None, :] <= mu_b + sig_b)
+
+    # Stage 3: utilities (Eq. 4), clamped at zero, normalized over M_E.
+    denom = jnp.abs(t_budget - mu[None, :]) + _EPS
+    util = accuracy[None, :] * (t_budget - (mu + sigma)[None, :]) / denom
+    util = jnp.where(in_me, jnp.maximum(util, 0.0), 0.0)
+    util = jnp.where(util > 0, util**utility_power, 0.0)
+    total = util.sum(axis=-1, keepdims=True)
+
+    base_onehot = jax.nn.one_hot(base_index, mu.shape[0], dtype=util.dtype)
+    fastest_onehot = jax.nn.one_hot(
+        jnp.full_like(base_index, fastest), mu.shape[0], dtype=util.dtype
+    )
+    probs = jnp.where(total > 0, util / jnp.maximum(total, _EPS), base_onehot)
+    probs = jnp.where(any_fit[:, None], probs, fastest_onehot)
+    if squeeze:
+        return probs[0], base_index[0], ~any_fit[0]
+    return probs, base_index, ~any_fit
+
+
+def select_batch(
+    key: jax.Array,
+    accuracy: jax.Array,
+    mu: jax.Array,
+    sigma: jax.Array,
+    t_budget: jax.Array,
+    *,
+    utility_power: float = 1.0,
+) -> BatchSelection:
+    """Vectorized three-stage selection for a batch of requests."""
+    probs, base_index, fallback = selection_probabilities(
+        accuracy, mu, sigma, jnp.atleast_1d(t_budget), utility_power=utility_power
+    )
+    logits = jnp.log(jnp.maximum(probs, 1e-30))
+    index = jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    return BatchSelection(
+        index=index,
+        base_index=base_index,
+        fallback=jnp.atleast_1d(fallback),
+        probabilities=probs,
+    )

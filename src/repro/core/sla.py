@@ -1,0 +1,67 @@
+"""SLA / aggregate-accuracy metrics (paper §III "key metrics")."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+__all__ = ["RequestMetrics", "summarize"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestMetrics:
+    """Aggregated quality/latency metrics over a batch of requests."""
+
+    n_requests: int
+    aggregate_accuracy: float  # mean accuracy of the models that answered
+    sla_attainment: float  # fraction of requests answered within the SLA
+    ondevice_reliance: float  # fraction answered by the duplicate (0 w/o dup)
+    mean_latency_ms: float
+    std_latency_ms: float
+    p50_latency_ms: float
+    p99_latency_ms: float
+    model_usage: Dict[str, float]  # model name -> fraction of requests
+
+    def row(self) -> str:
+        return (
+            f"acc={self.aggregate_accuracy:6.2f}%  sla={self.sla_attainment*100:6.2f}%  "
+            f"ondev={self.ondevice_reliance*100:5.2f}%  "
+            f"lat={self.mean_latency_ms:7.1f}±{self.std_latency_ms:5.1f}ms  "
+            f"p99={self.p99_latency_ms:7.1f}ms"
+        )
+
+
+def summarize(
+    *,
+    accuracy_used: np.ndarray,
+    latency_ms: np.ndarray,
+    t_sla_ms: float,
+    model_names: list[str],
+    model_index: np.ndarray,
+    used_remote: np.ndarray | None = None,
+) -> RequestMetrics:
+    """Build :class:`RequestMetrics` from per-request outcomes."""
+    accuracy_used = np.asarray(accuracy_used, dtype=np.float64)
+    latency_ms = np.asarray(latency_ms, dtype=np.float64)
+    n = len(latency_ms)
+    attained = float(np.mean(latency_ms <= t_sla_ms + 1e-9))
+    reliance = 0.0 if used_remote is None else float(1.0 - np.mean(used_remote))
+
+    usage: Dict[str, float] = {}
+    counts = np.bincount(np.asarray(model_index), minlength=len(model_names))
+    for name, c in zip(model_names, counts):
+        if c:
+            usage[name] = float(c) / n
+
+    return RequestMetrics(
+        n_requests=n,
+        aggregate_accuracy=float(accuracy_used.mean()),
+        sla_attainment=attained,
+        ondevice_reliance=reliance,
+        mean_latency_ms=float(latency_ms.mean()),
+        std_latency_ms=float(latency_ms.std()),
+        p50_latency_ms=float(np.percentile(latency_ms, 50)),
+        p99_latency_ms=float(np.percentile(latency_ms, 99)),
+        model_usage=usage,
+    )

@@ -1,0 +1,11 @@
+"""Distribution: logical-axis sharding rules, compression, collectives."""
+from repro.distributed.api import (
+    RULES_1D, RULES_2D, RULES_3D, AxisRules, axis_rules, constrain,
+    logical_to_spec, named_sharding,
+)
+from repro.distributed import compression
+
+__all__ = [
+    "RULES_1D", "RULES_2D", "RULES_3D", "AxisRules", "axis_rules",
+    "compression", "constrain", "logical_to_spec", "named_sharding",
+]

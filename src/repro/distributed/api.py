@@ -1,0 +1,193 @@
+"""Logical-axis sharding API (MaxText-style rules).
+
+Model code never names mesh axes.  It annotates arrays with *logical* axes
+("batch", "embed", "heads", ...) via :func:`constrain`, and declares parameter
+logical axes in its spec tables.  The launcher activates a rule set mapping
+logical axes -> mesh axes; outside an active rule set every annotation is a
+no-op (so CPU unit tests run unsharded with zero ceremony).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "AxisRules",
+    "axis_rules",
+    "active_rules",
+    "constrain",
+    "logical_to_spec",
+    "named_sharding",
+    "RULES_1D",
+    "RULES_2D",
+    "RULES_2D_SP",
+    "RULES_2D_DEC",
+    "RULES_3D",
+    "RULES_3D_SP",
+    "RULES_3D_DEC",
+]
+
+MeshAxes = Union[None, str, tuple]
+
+
+class AxisRules:
+    """Mapping from logical axis names to mesh axes (or None = replicate)."""
+
+    def __init__(self, mesh: Optional[Mesh], table: dict):
+        self.mesh = mesh
+        self.table = dict(table)
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        out = []
+        for ax in logical_axes:
+            if ax is None:
+                out.append(None)
+            else:
+                if ax not in self.table:
+                    raise KeyError(f"no rule for logical axis {ax!r}")
+                out.append(self.table[ax])
+        return P(*out)
+
+
+_state = threading.local()
+
+
+def active_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    prev = active_rules()
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, *logical_axes):
+    """Apply ``with_sharding_constraint`` under the active rules (else no-op)."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(logical_axes)
+    if rules.mesh is not None:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]]) -> P:
+    rules = active_rules()
+    if rules is None:
+        return P()
+    return rules.spec(logical_axes)
+
+
+def named_sharding(mesh: Mesh, rules: AxisRules, logical_axes) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(logical_axes))
+
+
+# ---------------------------------------------------------------------------
+# Standard rule tables.
+#
+# Logical axes:
+#   batch       global batch                   -> all data-parallel axes
+#   seq         sequence (activations)         -> unsharded by default
+#   embed       d_model                        -> FSDP axis on weights
+#   heads       attention query heads          -> tensor axis
+#   kv_heads    attention kv heads             -> tensor axis (padded/replicated
+#                                                 by GSPMD if count < axis size)
+#   ffn         MLP hidden                     -> tensor axis
+#   vocab       vocabulary                     -> tensor axis
+#   experts     MoE experts                    -> unsharded (expert weights are
+#                                                 TP on expert_ffn + FSDP on embed)
+#   expert_ffn  per-expert hidden              -> tensor axis
+#   moe_groups  MoE token groups               -> all axes (fully sharded tokens)
+#   lru         recurrent (RG-LRU/xLSTM) width -> tensor axis
+#   stats       tiny per-request/profile arrays-> replicated
+# ---------------------------------------------------------------------------
+def _table(data_axes, tensor_axis):
+    return {
+        "batch": data_axes,
+        "seq": None,
+        "embed": data_axes if isinstance(data_axes, str) else "data",
+        "heads": tensor_axis,
+        "kv_heads": tensor_axis,
+        "ffn": tensor_axis,
+        "vocab": tensor_axis,
+        "experts": None,
+        "expert_ffn": tensor_axis,
+        "moe_groups": data_axes,  # groups follow the batch sharding; the
+        # tensor axis parallelizes *inside* experts (expert_ffn)
+        "lru": tensor_axis,
+        "seq_kv": tensor_axis,  # decode KV-cache sequence dim
+        "seq_act": None,  # residual-stream seq dim; "model" = Megatron-style
+        # sequence parallelism (the RULES_*_SP variants)
+        "embed_act": None,  # decode residual d_model dim; "data" = 2D
+        # weight-stationary decode (no per-step FSDP weight gathers)
+        "stats": None,
+    }
+
+
+def _flatten_axes(*axes):
+    out = []
+    for ax in axes:
+        if ax is None:
+            continue
+        if isinstance(ax, tuple):
+            out.extend(ax)
+        else:
+            out.append(ax)
+    return tuple(out)
+
+
+RULES_1D = {  # single-device / tests
+    "batch": None,
+    "seq_kv": None,
+    "seq_act": None,
+    "embed_act": None,
+    "seq": None,
+    "embed": None,
+    "heads": None,
+    "kv_heads": None,
+    "ffn": None,
+    "vocab": None,
+    "experts": None,
+    "expert_ffn": None,
+    "moe_groups": None,
+    "lru": None,
+    "stats": None,
+}
+
+# Single pod: 16x16 ("data", "model").
+RULES_2D = _table("data", "model")
+RULES_2D["batch"] = ("data",)
+
+# Two pods: (2, 16, 16) ("pod", "data", "model").  Weights FSDP over "data"
+# (intra-pod), replicated across "pod" (gradient all-reduce crosses the
+# inter-pod links once per step); batch over ("pod", "data").
+RULES_3D = _table("data", "model")
+RULES_3D["batch"] = ("pod", "data")
+RULES_3D["moe_groups"] = ("pod", "data")
+
+# Sequence-parallel variants: the residual stream (and hence RMSNorm work,
+# scan carries, and the TP boundary collectives) is sharded over the tensor
+# axis between blocks; GSPMD turns TP all-reduces into reduce-scatter +
+# all-gather pairs and activation memory drops by the tensor-axis size.
+RULES_2D_SP = dict(RULES_2D, seq_act="model")
+RULES_3D_SP = dict(RULES_3D, seq_act="model")
+
+# Serving-replica decode: the data axis is 16 independent TP-16 replicas —
+# weights are NOT FSDP-sharded (embed -> None), so no per-token-step weight
+# all-gathers; each replica's full TP copy is params/16 per chip.  (A fully
+# sharded weight layout was tried and REGRESSED 10x: with the batch
+# replicated, intra-block activations snap back to full-width per device —
+# see EXPERIMENTS.md §Perf.)
+RULES_2D_DEC = dict(RULES_2D, embed=None, moe_groups=None)
+RULES_3D_DEC = dict(RULES_3D, embed=None, moe_groups=None)

@@ -1,0 +1,85 @@
+"""Gradient compression for slow (cross-pod / DCI) links.
+
+int8 uniform quantization with per-tensor scales and *error feedback*
+(Seide et al. / EF-SGD): the quantization residual is carried to the next
+step so compression bias does not accumulate.
+
+Two integration points:
+  * :func:`quantize_dequantize` — a gradient transform applied inside the
+    jitted train step (models the wire format; GSPMD still owns the actual
+    collective).  This is what ``TrainConfig.grad_compression`` enables.
+  * :func:`compressed_psum` — an explicit shard_map collective: quantize,
+    sum int32 partials over the named axis, dequantize.  Used where the
+    gradient exchange is hand-scheduled (cross-pod axis in RULES_3D) and in
+    tests to verify end-to-end semantics.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "quantize_dequantize",
+           "compressed_psum", "init_error_feedback"]
+
+
+def quantize_int8(x) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_dequantize(grads, error_fb=None):
+    """Quantization-aware gradient transform with error feedback.
+
+    Returns (grads_hat, new_error_fb).  With ``error_fb=None`` feedback is
+    disabled (plain quantization).
+    """
+
+    def one(g, e):
+        gf = g.astype(jnp.float32)
+        if e is not None:
+            gf = gf + e
+        q, s = quantize_int8(gf)
+        ghat = dequantize_int8(q, s)
+        new_e = gf - ghat if e is not None else None
+        return ghat.astype(g.dtype), new_e
+
+    if error_fb is None:
+        out = jax.tree.map(lambda g: one(g, None)[0], grads)
+        return out, None
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_fb)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree.unflatten(tdef, [p[0] for p in pairs]),
+        jax.tree.unflatten(tdef, [p[1] for p in pairs]),
+    )
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-on-the-wire psum over a named axis (use inside shard_map).
+
+    Each participant sends int8 + one fp32 scale; partial sums are exchanged
+    as int32 (no overflow for <= 2^23 participants) and dequantized with the
+    max scale.  ~4x traffic reduction vs fp32 all-reduce.
+    """
+    q, scale = quantize_int8(x)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # Requantize against the shared scale so the sum is coherent.
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale_max), -127, 127
+    ).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    return (total.astype(jnp.float32) * scale_max).astype(x.dtype)

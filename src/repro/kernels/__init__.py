@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the serving hot paths + pure-jnp oracles.
+
+Kernels: flash attention (prefill), decode attention (memory-bound cache
+streaming), RG-LRU scan (linear recurrence at HBM bandwidth), fused RMSNorm.
+``ops.py`` dispatches kernel-vs-reference by backend.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention_bwd import flash_attention_bwd
+from repro.kernels.rglru_scan import rglru_scan_fwd
+from repro.kernels.rmsnorm import rms_norm_fwd
+
+__all__ = [
+    "ops", "ref",
+    "flash_attention_fwd", "flash_attention_bwd", "decode_attention_fwd",
+    "rglru_scan_fwd", "rms_norm_fwd",
+]

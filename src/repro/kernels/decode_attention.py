@@ -1,0 +1,123 @@
+"""Pallas TPU decode-attention kernel (one new token vs. a ring-buffer cache).
+
+Decode attention is purely memory-bound: each step streams the whole KV
+cache from HBM once and does O(S * D) FLOPs.  The kernel tiles the cache
+sequence dimension; the grid is (batch, kv_heads, n_k_blocks) with the
+k-block dimension sequential, and the (G, D) query group plus the online
+softmax state live in VMEM — so each cache byte is read exactly once
+(HBM-roofline optimal).
+
+Mask semantics match ``repro.models.attention.decode_attention``: slots carry
+absolute positions (ring buffers), masked by validity / causality / window.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["decode_attention_fwd"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, window: int, n_k_blocks: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (block_k, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    sp = sp_ref[0]  # (block_k,) absolute positions (-1 = empty)
+    pos = pos_ref[0]  # scalar query position
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, block_k)
+    ok = (sp >= 0) & (sp <= pos)
+    if window:
+        ok &= sp > (pos - window)
+    s = jnp.where(ok[None, :], s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(
+    q, k_cache, v_cache, slot_pos, pos, *,
+    window: int = 0,
+    scale=None,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """q: (B, NKV, G, D); caches: (B, NKV, S, D); slot_pos: (B, S); pos: (B,).
+
+    Returns (B, NKV, G, D).
+    """
+    B, NKV, G, D = q.shape
+    S = k_cache.shape[2]
+    if scale is None:
+        scale = D**-0.5
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    n_k = S // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, n_k_blocks=n_k
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, NKV, n_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (b,)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, block_k), lambda b, h, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, NKV, G, D), q.dtype),
+        scratch_shapes=[
+            _vmem((G, D), jnp.float32),
+            _vmem((G,), jnp.float32),
+            _vmem((G,), jnp.float32),
+        ],
+        compiler_params=_mosaic_params(("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos, q, k_cache, v_cache, slot_pos)
+    return out
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _mosaic_params(semantics):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.CompilerParams(dimension_semantics=semantics)
+    except Exception:  # pragma: no cover
+        return None

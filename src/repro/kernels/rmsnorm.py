@@ -1,0 +1,56 @@
+"""Pallas TPU fused RMSNorm kernel.
+
+Fuses the variance reduction, rsqrt, and scale into one VMEM pass (XLA often
+emits separate reduce + broadcast-multiply HLOs with an HBM round-trip).
+Rows are tiled (block_rows, d); d stays whole so the reduction is in-lane.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rms_norm_fwd"]
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float, offset: bool):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = w_ref[...].astype(jnp.float32)
+    scale = (1.0 + w) if offset else w
+    o_ref[...] = (y * scale).astype(o_ref.dtype)
+
+
+def rms_norm_fwd(x, w, *, eps: float = 1e-6, offset: bool = False,
+                 block_rows: int = 256, interpret: bool = False):
+    """x: (..., D); w: (D,).  Returns RMSNorm(x) * scale in x.dtype."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    xr = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    pad = (-rows) % block_rows
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    n_r = xr.shape[0] // block_rows
+
+    kernel = functools.partial(_kernel, eps=eps, offset=offset)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_r,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+            pl.BlockSpec((d,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=interpret,
+    )(xr, w)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

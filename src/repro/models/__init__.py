@@ -1,0 +1,5 @@
+"""Pure-JAX composable LM zoo (the serving substrate under MDInference)."""
+from repro.models.config import ModelConfig
+from repro.models import transformer, attention, layers, moe, rglru, xlstm
+
+__all__ = ["ModelConfig", "transformer", "attention", "layers", "moe", "rglru", "xlstm"]

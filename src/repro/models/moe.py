@@ -1,0 +1,147 @@
+"""Mixture-of-experts FFN with sort-based (gather/scatter) dispatch.
+
+Design notes (TPU adaptation):
+  * The classic GShard dispatch einsum builds a (T, E, C) one-hot and costs
+    ``2*T*D*E*C`` FLOPs — with E*C ~= k*cf*T that is *quadratic in tokens*
+    and can exceed the expert FFN FLOPs themselves.  We instead sort token
+    assignments by expert and move tokens with gathers/scatters (O(T*k*D)
+    bytes, ~0 FLOPs), the same idea behind MegaBlocks/ragged dispatch, but
+    expressed with XLA sort+scatter so it runs everywhere.
+  * Sharding: tokens are regrouped into ``cfg.moe_groups`` groups, each group
+    local to a device slice (logical axis "moe_groups" -> all mesh axes).
+    Expert weights are sharded FSDP on d_model ("embed") and tensor-parallel
+    on the per-expert hidden ("expert_ffn") — so expert compute needs no
+    token all-to-all; GSPMD inserts the weight all-gather (FSDP) and the
+    output reduce (TP).  An EP/all-to-all layout is evaluated against this
+    in EXPERIMENTS.md §Perf.
+  * Capacity: per-group, ``C = ceil(T_group * top_k * capacity_factor / E)``;
+    overflow tokens are dropped (their combine weight is zero) — standard
+    dropped-token semantics, exercised by tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.api import constrain
+from repro.models import layers
+
+__all__ = ["moe_init_spec", "moe_apply", "capacity"]
+
+
+def capacity(tokens_per_group: int, n_experts: int, top_k: int, cf: float) -> int:
+    c = int(np.ceil(tokens_per_group * top_k * cf / n_experts))
+    return max(c, top_k)
+
+
+def moe_init_spec(cfg):
+    """{name: (shape, logical_axes)} for one MoE block's FFN."""
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.n_experts
+    spec = {
+        "router": ((d, e), ("embed", "experts")),
+        "wi": ((e, d, f), ("experts", "embed", "expert_ffn")),
+        "wg": ((e, d, f), ("experts", "embed", "expert_ffn")),
+        "wo": ((e, f, d), ("experts", "expert_ffn", "embed")),
+    }
+    if cfg.mlp_type == "gelu":
+        del spec["wg"]
+    if cfg.n_shared_experts:
+        sf = cfg.expert_d_ff * cfg.n_shared_experts
+        spec.update(
+            {
+                "shared_wi": ((d, sf), ("embed", "ffn")),
+                "shared_wg": ((d, sf), ("embed", "ffn")),
+                "shared_wo": ((sf, d), ("ffn", "embed")),
+            }
+        )
+    return spec
+
+
+def _route(cfg, router_w, x):
+    """Router: top-k expert ids + gate values per token.  x: (T, D)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (T, E)
+    if cfg.router_type == "sigmoid":
+        # Llama-4 style: pick top-k by logit, gate with sigmoid.
+        gates_all = jax.nn.sigmoid(logits)
+        top_logits, top_idx = jax.lax.top_k(logits, cfg.top_k)
+        top_gate = jnp.take_along_axis(gates_all, top_idx, axis=-1)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_gate, top_idx = jax.lax.top_k(probs, cfg.top_k)
+        top_gate = top_gate / jnp.maximum(top_gate.sum(-1, keepdims=True), 1e-9)
+    # Aux load-balancing loss (Switch): E * sum_e f_e * p_e.
+    e = cfg.n_experts
+    me = jax.nn.one_hot(top_idx[..., 0], e).mean(0)
+    pe = jax.nn.softmax(logits, axis=-1).mean(0)
+    aux = e * jnp.sum(me * pe)
+    return top_idx, top_gate, aux
+
+
+def _dispatch_group(cfg, params, x, cap):
+    """One group: x (T, D) -> (T, D).  Sort-based dispatch."""
+    T, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    top_idx, top_gate, aux = _route(cfg, params["router"], x)
+
+    tk = T * k
+    flat_e = top_idx.reshape(tk)  # expert id per (token, slot)
+    flat_g = top_gate.reshape(tk)
+    flat_t = jnp.arange(tk, dtype=jnp.int32) // k  # source token per slot
+
+    order = jnp.argsort(flat_e, stable=True)  # group identical experts
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # Position within each expert's run of the sorted array.
+    run_start = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(tk, dtype=jnp.int32) - run_start
+    keep = pos < cap
+    pos_c = jnp.minimum(pos, cap - 1)
+
+    # Gather tokens into the (E, C, D) expert buffer (dropped -> zeros).
+    xt = jnp.where(keep[:, None], x[st], 0.0)
+    buf = jnp.zeros((E, cap, D), x.dtype).at[se, pos_c].add(
+        xt, mode="drop"
+    )
+
+    # Expert FFN (dense over the buffer).
+    h = jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", buf, params["wg"])
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True)
+        )
+        h = act(h) * g
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+
+    # Combine: gather expert outputs back to token order, weighted.
+    back = out_buf[se, pos_c] * (sg * keep)[:, None].astype(out_buf.dtype)
+    out = jnp.zeros((T, D), out_buf.dtype).at[st].add(back, mode="drop")
+    return out, aux
+
+
+def moe_apply(cfg, params, x):
+    """x: (B, S, D) -> (B, S, D) plus aux loss scalar."""
+    B, S, D = x.shape
+    g = cfg.moe_groups
+    total = B * S
+    if total % g:
+        raise ValueError(f"tokens {total} not divisible by moe_groups {g}")
+    tpg = total // g
+    cap = capacity(tpg, cfg.n_experts, cfg.top_k, cfg.capacity_factor)
+
+    xg = x.reshape(g, tpg, D)
+    xg = constrain(xg, "moe_groups", None, None)
+    out, aux = jax.vmap(lambda xi: _dispatch_group(cfg, params, xi, cap))(xg)
+    out = constrain(out, "moe_groups", None, None)
+    out = out.reshape(B, S, D).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        shared = layers.mlp_apply(
+            {"wi": params["shared_wi"], "wg": params["shared_wg"], "wo": params["shared_wo"]},
+            x,
+            "swiglu" if cfg.mlp_type != "gelu" else "gelu",
+        )
+        out = out + shared
+    return out, aux.mean()

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence is
+    r_t = sigmoid(W_a x_t + b_a)                    (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                    (input gate)
+    log a_t = -c * softplus(Lambda) * r_t           (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence —
+O(log S) depth, fully parallel (the TPU-native replacement for the paper's
+sequential CUDA scan); decode carries h (O(1) state, which is what makes the
+``long_500k`` cell tractable for this family).
+
+Block layout (Griffin "recurrent block"): a gated-linear-unit style pair of
+input projections; the recurrent branch passes through a short depthwise
+conv1d (width 4) and the RG-LRU; branches merge multiplicatively and project
+back to d_model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rglru_init_spec",
+    "rglru_apply",
+    "rglru_decode_step",
+    "rglru_init_cache",
+    "C_CONST",
+]
+
+C_CONST = 8.0
+
+
+def rglru_init_spec(cfg):
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "wx": ((d, w), ("embed", "lru")),  # recurrent-branch input proj
+        "wy": ((d, w), ("embed", "lru")),  # gate branch
+        "wo": ((w, d), ("lru", "embed")),
+        "conv_w": ((cfg.conv_width, w), (None, "lru")),
+        "conv_b": ((w,), ("lru",)),
+        "gate_a": ((w, w), ("lru", None)),  # W_a (recurrence gate)
+        "gate_x": ((w, w), ("lru", None)),  # W_x (input gate)
+        "gate_a_b": ((w,), ("lru",)),
+        "gate_x_b": ((w,), ("lru",)),
+        "lamb": ((w,), ("lru",)),  # Lambda (learned decay)
+    }
+
+
+def _depthwise_conv(x, conv_w, conv_b, tail=None):
+    """Causal depthwise conv1d.  x: (B, S, W); conv_w: (K, W)."""
+    k = conv_w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail  # (B, K-1, W) from the previous step (decode)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * conv_w[i][None, None, :] for i in range(k)
+    )
+    new_tail = xp[:, -(k - 1) :] if k > 1 else jnp.zeros_like(pad)
+    return out + conv_b, new_tail
+
+
+def _gates(params, x):
+    """log_a (decay) and gated input for the RG-LRU.  x: (..., W)."""
+    r = jax.nn.sigmoid(x @ params["gate_a"] + params["gate_a_b"])
+    i = jax.nn.sigmoid(x @ params["gate_x"] + params["gate_x_b"])
+    log_a = -C_CONST * jax.nn.softplus(params["lamb"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) normalizer keeps the state norm bounded.
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta * (i * x)
+
+
+def _lru_scan(a, bx, h0=None):
+    """h_t = a_t h_{t-1} + bx_t via associative scan.  a, bx: (B, S, W)."""
+    if h0 is not None:
+        # Fold the carried state into the first element.
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_apply(cfg, params, x, h0=None, conv_tail=None):
+    """Full-sequence recurrent block.  x: (B, S, D) -> (B, S, D).
+
+    Returns (out, (h_last, conv_tail)) so prefill can seed decode.
+    """
+    dtype = x.dtype
+    y = jax.nn.gelu((x @ params["wy"]).astype(jnp.float32), approximate=True)
+    u = x @ params["wx"]
+    u, new_tail = _depthwise_conv(u, params["conv_w"], params["conv_b"], conv_tail)
+    a, bx = _gates(params, u.astype(jnp.float32))
+    h = _lru_scan(a, bx, h0)
+    out = (h * y).astype(dtype) @ params["wo"]
+    return out, (h[:, -1], new_tail)
+
+
+def rglru_init_cache(cfg, batch, dtype=jnp.float32):
+    w = cfg.lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv_tail": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode_step(cfg, params, x, cache):
+    """One token.  x: (B, 1, D) -> (B, 1, D); O(1) state update."""
+    dtype = x.dtype
+    y = jax.nn.gelu((x @ params["wy"]).astype(jnp.float32), approximate=True)
+    u = x @ params["wx"]
+    u, new_tail = _depthwise_conv(
+        u, params["conv_w"], params["conv_b"], cache["conv_tail"]
+    )
+    a, bx = _gates(params, u.astype(jnp.float32))
+    h = a[:, 0] * cache["h"] + bx[:, 0]  # (B, W)
+    out = (h[:, None] * y).astype(dtype) @ params["wo"]
+    return out, {"h": h, "conv_tail": new_tail}

@@ -1,0 +1,10 @@
+"""Serving: MDInference scheduler (policy) + execution engine + profiles."""
+from repro.serving.engine import ServingEngine, Variant
+from repro.serving.profiles import ONDEVICE_TIER, V5E, estimate_ms, lm_zoo_registry
+from repro.serving.scheduler import Decision, MDInferenceScheduler, SchedulerConfig
+
+__all__ = [
+    "Decision", "MDInferenceScheduler", "SchedulerConfig",
+    "ONDEVICE_TIER", "ServingEngine", "V5E", "Variant",
+    "estimate_ms", "lm_zoo_registry",
+]

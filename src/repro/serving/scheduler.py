@@ -1,0 +1,167 @@
+"""MDInference as a first-class serving scheduler.
+
+Online version of the paper's algorithm: per request it estimates the
+network time, budgets, runs the three-stage selection, and hedges with the
+fast tier (straggler mitigation).  Unlike the offline simulator it also
+*updates* the latency profiles from observed execution times (EWMA on mu and
+sigma) — the paper's stage-3 exploration exists precisely so that stale
+profiles (queueing transients, concept drift, §V-A) get re-discovered; the
+online update closes that loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.duplication import HedgePolicy, resolve_duplication
+from repro.core.registry import ModelProfile, ModelRegistry
+from repro.core.selection import select_ref
+from repro.core.sla import RequestMetrics, summarize
+
+__all__ = ["SchedulerConfig", "MDInferenceScheduler", "Decision"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    t_sla_ms: float = 250.0
+    utility_power: float = 1.0
+    hedge: HedgePolicy = dataclasses.field(default_factory=HedgePolicy)
+    profile_ewma: float = 0.05  # 0 disables online profile updates
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Decision:
+    model_index: int
+    model_name: str
+    hedged: bool
+    t_budget_ms: float
+    fallback: bool
+
+
+class MDInferenceScheduler:
+    def __init__(
+        self,
+        registry: ModelRegistry,
+        ondevice: ModelProfile,
+        cfg: SchedulerConfig = SchedulerConfig(),
+    ):
+        self.base_registry = registry
+        self.ondevice = ondevice
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        # Live profile estimates (start from the registry's priors).
+        self.mu = registry.mu.astype(np.float64).copy()
+        self.sigma = registry.sigma.astype(np.float64).copy()
+        self.accuracy = registry.accuracy.astype(np.float64).copy()
+        self.names = registry.names
+        self._log: list[dict] = []
+
+    # -- the paper's per-request path ---------------------------------------
+    def decide(self, t_nw_est_ms: float) -> Decision:
+        reg = ModelRegistry(
+            [
+                ModelProfile(n, a, m, s)
+                for n, a, m, s in zip(self.names, self.accuracy, self.mu, self.sigma)
+            ]
+        )
+        budget = self.cfg.t_sla_ms - t_nw_est_ms
+        sel = select_ref(
+            reg, budget, self.rng, utility_power=self.cfg.utility_power
+        )
+        base_mu = self.mu[sel.base_index]
+        base_sigma = self.sigma[sel.base_index]
+        hedged = bool(
+            self.cfg.hedge.should_hedge(
+                np.asarray([budget]), np.asarray([base_mu]), np.asarray([base_sigma])
+            )[0]
+        )
+        return Decision(
+            model_index=sel.index,
+            model_name=self.names[sel.index],
+            hedged=hedged,
+            t_budget_ms=budget,
+            fallback=sel.fallback,
+        )
+
+    def observe(self, model_index: int, exec_ms: float):
+        """EWMA profile update from an observed execution (drift handling)."""
+        a = self.cfg.profile_ewma
+        if a <= 0:
+            return
+        delta = exec_ms - self.mu[model_index]
+        self.mu[model_index] += a * delta
+        var = self.sigma[model_index] ** 2
+        var = (1 - a) * (var + a * delta * delta)
+        self.sigma[model_index] = np.sqrt(max(var, 1e-6))
+
+    # -- trace-driven loop ----------------------------------------------------
+    def run_trace(
+        self,
+        t_nw_actual: np.ndarray,
+        t_nw_est: Optional[np.ndarray] = None,
+        exec_sampler: Optional[Callable[[int, np.random.Generator], float]] = None,
+    ) -> RequestMetrics:
+        """Serve a trace of requests (one per network sample)."""
+        t_nw_actual = np.asarray(t_nw_actual, dtype=np.float64)
+        if t_nw_est is None:
+            t_nw_est = t_nw_actual
+        n = len(t_nw_actual)
+        acc_used = np.empty(n)
+        lat = np.empty(n)
+        used_remote = np.empty(n, bool)
+        idxs = np.empty(n, np.int64)
+
+        for i in range(n):
+            d = self.decide(float(t_nw_est[i]))
+            idxs[i] = d.model_index
+            if exec_sampler is None:
+                exec_ms = max(
+                    self.rng.normal(self.mu[d.model_index], self.sigma[d.model_index]),
+                    0.1,
+                )
+            else:
+                exec_ms = exec_sampler(d.model_index, self.rng)
+            self.observe(d.model_index, exec_ms)
+            remote = t_nw_actual[i] + exec_ms
+            if d.hedged:
+                ondev_ms = max(
+                    self.rng.normal(self.ondevice.mu_ms, self.ondevice.sigma_ms), 0.1
+                )
+                out = resolve_duplication(
+                    np.asarray([remote]),
+                    np.asarray([self.accuracy[d.model_index]]),
+                    np.asarray([ondev_ms]),
+                    self.ondevice.accuracy,
+                    self.cfg.t_sla_ms,
+                )
+                acc_used[i] = out.accuracy[0]
+                lat[i] = out.latency_ms[0]
+                used_remote[i] = out.used_remote[0]
+            else:
+                acc_used[i] = self.accuracy[d.model_index]
+                lat[i] = remote
+                used_remote[i] = True
+            self._log.append(
+                {
+                    "model": d.model_name,
+                    "hedged": d.hedged,
+                    "remote_ms": remote,
+                    "latency_ms": lat[i],
+                }
+            )
+
+        return summarize(
+            accuracy_used=acc_used,
+            latency_ms=lat,
+            t_sla_ms=self.cfg.t_sla_ms,
+            model_names=self.names,
+            model_index=idxs,
+            used_remote=used_remote,
+        )
+
+    @property
+    def log(self):
+        return list(self._log)

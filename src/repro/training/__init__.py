@@ -1,0 +1,12 @@
+"""Training substrate: optimizer, data pipeline, train-step factory."""
+from repro.training.data import DataConfig, make_pipeline
+from repro.training.optimizer import OptimizerConfig, adamw_update, init_opt_state, lr_at
+from repro.training.train_loop import (
+    TrainConfig, init_train_state, make_train_step, state_shardings,
+)
+
+__all__ = [
+    "DataConfig", "OptimizerConfig", "TrainConfig",
+    "adamw_update", "init_opt_state", "init_train_state", "lr_at",
+    "make_pipeline", "make_train_step", "state_shardings",
+]

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced config, one train + serve step.
+
+The FULL configs are only exercised via the dry-run (ShapeDtypeStruct, no
+allocation); these reduced configs share the family's block structure.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import transformer as T
+
+
+def make_batch(cfg, B=2, S=64, seed=0, labels=True):
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "audio":
+        b = {
+            "frames": jnp.asarray(
+                rng.normal(size=(B, S, cfg.frontend_dim)), jnp.float32
+            )
+        }
+        lab_s = S
+    elif cfg.frontend == "vision":
+        P = cfg.num_prefix_tokens
+        b = {
+            "patches": jnp.asarray(
+                rng.normal(size=(B, P, cfg.frontend_dim)), jnp.float32
+            ),
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32
+            ),
+        }
+        lab_s = S
+    else:
+        b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+        lab_s = S
+    if labels:
+        b["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, lab_s)), jnp.int32
+        )
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = reduced(arch)
+    params = T.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg)
+    loss, metrics = T.loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    grads = jax.grad(lambda p: T.loss_fn(cfg, p, batch)[0])(params)
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(leaf).all())
+    # Output (hidden) shapes.
+    x, _, _ = T.forward_hidden(cfg, params, batch)
+    exp_s = 64 + (cfg.num_prefix_tokens if cfg.frontend == "vision" else 0)
+    assert x.shape == (2, exp_s, cfg.d_model)
+    assert not bool(jnp.isnan(x).any())
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if "hubert" not in a])
+def test_smoke_serve_step(arch):
+    cfg = reduced(arch)
+    params = T.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg, labels=False)
+    B, S = 2, 64
+    cache, logits = T.prefill(cfg, params, batch, max_len=128)
+    assert logits.shape == (B, cfg.vocab_size)
+    pos0 = S + (cfg.num_prefix_tokens if cfg.frontend == "vision" else 0)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for step in range(3):
+        pos = jnp.full((B,), pos0 + step, jnp.int32)
+        logits, cache = T.decode_step(cfg, params, cache, tok, pos)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_dims(arch):
+    """The full configs carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+    }[arch]
+    got = (
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.d_ff,
+        cfg.vocab_size,
+    )
+    assert got == expected
+
+
+def test_param_counts_plausible():
+    # Dense params ~ headline sizes (embedding included); MoE totals exceed
+    # active.  Loose sanity bounds, not exact matches.
+    import repro.configs.archs as A
+
+    c = A.get_config("llama3-8b")
+    assert 7.5e9 < c.param_count() < 9e9
+    c = A.get_config("qwen3-14b")
+    assert 12e9 < c.param_count() < 16.5e9
+    moe = A.get_config("llama4-scout-17b-a16e")
+    assert moe.param_count() > 5 * moe.param_count(active_only=True) > 0
+    x = A.get_config("xlstm-350m")
+    assert 2.0e8 < x.param_count() < 6e8
+
+
+def test_param_axes_match_params():
+    for arch in ARCH_IDS:
+        cfg = reduced(arch)
+        params = T.init_params(cfg, jax.random.key(0))
+        axes = T.param_axes(cfg)
+        pt = jax.tree.structure(params)
+        is_axes = lambda x: (isinstance(x, tuple) and len(x) > 0 and all(
+            isinstance(e, (str, type(None))) for e in x))
+        at = jax.tree.structure(axes, is_leaf=is_axes)
+        assert pt == at, arch
+        # Every axes tuple matches its array rank.
+        flat_p = jax.tree.leaves(params)
+        flat_a = jax.tree.leaves(axes, is_leaf=is_axes)
+        for p, a in zip(flat_p, flat_a):
+            assert len(a) == p.ndim, (arch, p.shape, a)

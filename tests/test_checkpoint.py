@@ -1,0 +1,107 @@
+"""Checkpointing: atomicity, pruning, async, resharding, fault tolerance."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import reduced
+from repro.training import OptimizerConfig, init_train_state
+
+
+def tiny_state(seed=0):
+    cfg = reduced("gemma-2b")
+    return init_train_state(cfg, jax.random.key(seed))
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_roundtrip(tmp_path):
+    state = tiny_state()
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(10, state, extra={"loss": 1.5})
+    restored, step = mgr.restore(state)
+    assert step == 10
+    assert_trees_equal(state, restored)
+    assert mgr.manifest(10)["extra"]["loss"] == 1.5
+
+
+def test_latest_and_pruning(tmp_path):
+    state = tiny_state()
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_keep_steps_survive_pruning(tmp_path):
+    state = tiny_state()
+    mgr = CheckpointManager(tmp_path, keep=1, keep_steps=(1,))
+    for s in (1, 2, 3):
+        mgr.save(s, state)
+    assert 1 in mgr.all_steps()
+
+
+def test_tmp_dirs_are_invisible(tmp_path):
+    """A crash mid-save (leftover .tmp dir) must not corrupt restore."""
+    state = tiny_state()
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, state)
+    # Simulate a crashed save at a later step.
+    crashed = Path(tmp_path) / "step_00000009.tmp"
+    crashed.mkdir()
+    (crashed / "arrays.npz").write_bytes(b"garbage")
+    assert mgr.latest_step() == 5
+    restored, step = mgr.restore(state)
+    assert step == 5
+
+
+def test_async_save(tmp_path):
+    state = tiny_state()
+    mgr = CheckpointManager(tmp_path)
+    mgr.save_async(7, state)
+    mgr.wait()
+    restored, step = mgr.restore(state)
+    assert step == 7
+    assert_trees_equal(state, restored)
+
+
+def test_restore_specific_step(tmp_path):
+    s0, s1 = tiny_state(0), tiny_state(1)
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(1, s0)
+    mgr.save(2, s1)
+    restored, step = mgr.restore(s0, step=1)
+    assert step == 1
+    assert_trees_equal(s0, restored)
+
+
+def test_reshard_on_restore(tmp_path):
+    """Restore with explicit shardings (elastic restart path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    state = tiny_state()
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(3, state)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = NamedSharding(mesh, P())
+    shardings = jax.tree.map(lambda _: sh, state)
+    restored, step = mgr.restore(state, shardings=shardings)
+    assert_trees_equal(state, restored)
+    for leaf in jax.tree.leaves(restored):
+        assert leaf.sharding == sh
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(tiny_state())

@@ -1,0 +1,92 @@
+"""Unit + property tests for request duplication (§V-B)."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from repro.core.duplication import (
+    DEFAULT_ON_DEVICE,
+    HedgePolicy,
+    resolve_duplication,
+)
+
+
+def test_remote_within_sla_uses_remote():
+    out = resolve_duplication(
+        remote_latency_ms=np.array([200.0]),
+        remote_accuracy=np.array([82.6]),
+        ondevice_latency_ms=np.array([30.0]),
+        ondevice_accuracy=41.4,
+        t_sla_ms=250.0,
+    )
+    assert out.used_remote[0]
+    assert out.accuracy[0] == 82.6
+    assert out.latency_ms[0] == 200.0
+    assert not out.violation[0]
+
+
+def test_remote_misses_uses_ondevice_at_deadline():
+    out = resolve_duplication(
+        remote_latency_ms=np.array([400.0]),
+        remote_accuracy=np.array([82.6]),
+        ondevice_latency_ms=np.array([30.0]),
+        ondevice_accuracy=41.4,
+        t_sla_ms=250.0,
+    )
+    assert not out.used_remote[0]
+    assert out.accuracy[0] == 41.4
+    assert out.latency_ms[0] == 250.0  # bounded at the SLA
+    assert not out.violation[0]
+
+
+def test_violation_only_when_ondevice_slower_than_sla():
+    out = resolve_duplication(
+        remote_latency_ms=np.array([400.0]),
+        remote_accuracy=np.array([82.6]),
+        ondevice_latency_ms=np.array([60.0]),
+        ondevice_accuracy=41.4,
+        t_sla_ms=50.0,
+    )
+    assert out.violation[0]
+    assert out.latency_ms[0] == 60.0
+
+
+@hypothesis.given(
+    st.lists(st.floats(1.0, 2000.0), min_size=1, max_size=64),
+    st.floats(10.0, 500.0),
+    st.floats(1.0, 200.0),
+)
+@hypothesis.settings(max_examples=200, deadline=None)
+def test_duplication_bounds_latency(remote, sla, ondev):
+    r = np.asarray(remote)
+    out = resolve_duplication(
+        remote_latency_ms=r,
+        remote_accuracy=np.full_like(r, 80.0),
+        ondevice_latency_ms=np.full_like(r, ondev),
+        ondevice_accuracy=41.4,
+        t_sla_ms=sla,
+    )
+    # Latency is bounded by max(SLA, on-device latency) for every request.
+    assert np.all(out.latency_ms <= max(sla, ondev) + 1e-9)
+    # With a fast duplicate there are no violations, ever.
+    if ondev <= sla:
+        assert not out.violation.any()
+    # Accuracy is one of the two sources.
+    assert np.all(np.isin(out.accuracy, [80.0, 41.4]))
+
+
+def test_hedge_policy_always():
+    p = HedgePolicy(always=True)
+    assert p.should_hedge(np.array([1000.0]), np.array([5.0]), np.array([1.0]))[0]
+
+
+def test_hedge_policy_headroom_skips_safe_requests():
+    p = HedgePolicy(always=False, deadline_headroom_ms=50.0)
+    # Budget 500, base model 5 +- 1ms -> slack 492 >= 50 -> skip the hedge.
+    assert not p.should_hedge(np.array([500.0]), np.array([5.0]), np.array([1.0]))[0]
+    # Budget 20 -> slack 12 < 50 -> hedge.
+    assert p.should_hedge(np.array([20.0]), np.array([5.0]), np.array([1.0]))[0]
+
+
+def test_default_on_device_profile():
+    assert DEFAULT_ON_DEVICE.accuracy == 41.4
+    assert DEFAULT_ON_DEVICE.mu_ms < 50.0

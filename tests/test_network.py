@@ -1,0 +1,92 @@
+"""Network models/estimators: calibration quantiles + property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core.network import (
+    EWMAEstimator,
+    ExactEstimator,
+    FixedCVNetwork,
+    LognormalNetwork,
+    NoisyEstimator,
+    TraceNetwork,
+    residential_trace,
+    university_trace,
+)
+
+
+def test_fixed_cv_moments():
+    rng = np.random.default_rng(0)
+    s = FixedCVNetwork(100.0, 0.5).sample(rng, 200_000)
+    assert abs(s.mean() - 100.0) < 1.5
+    assert abs(s.std() - 50.0) < 2.0
+
+
+def test_fixed_cv_zero_is_constant():
+    rng = np.random.default_rng(0)
+    s = FixedCVNetwork(100.0, 0.0).sample(rng, 100)
+    np.testing.assert_allclose(s, 100.0)
+
+
+def test_lognormal_moments():
+    rng = np.random.default_rng(0)
+    s = LognormalNetwork(100.0, 0.74).sample(rng, 400_000)
+    assert abs(s.mean() - 100.0) < 2.0
+    assert abs(s.std() / s.mean() - 0.74) < 0.05
+
+
+@pytest.mark.parametrize(
+    "trace,q137,q247",
+    [
+        (university_trace(), 0.0367, 0.0026),
+        (residential_trace(), 0.2303, 0.0316),
+    ],
+    ids=["university", "residential"],
+)
+def test_trace_calibration(trace, q137, q247):
+    """Traces hit the Table IV reliance quantiles (see network.py docstring)."""
+    t = np.asarray(trace.trace_ms)
+    assert abs(np.mean(t > 137.4) - q137) < 0.02
+    assert abs(np.mean(t > 246.8) - q247) < 0.012
+
+
+def test_trace_bootstrap_sampling():
+    rng = np.random.default_rng(0)
+    t = TraceNetwork((10.0, 20.0, 30.0))
+    s = t.sample(rng, 1000)
+    assert set(np.unique(s)) <= {10.0, 20.0, 30.0}
+
+
+def test_exact_estimator_identity():
+    rng = np.random.default_rng(0)
+    x = np.array([1.0, 2.0, 3.0])
+    np.testing.assert_array_equal(ExactEstimator().estimate(rng, x), x)
+
+
+def test_noisy_estimator_unbiased_median():
+    rng = np.random.default_rng(0)
+    x = np.full(100_000, 100.0)
+    est = NoisyEstimator(0.2).estimate(rng, x)
+    assert abs(np.median(est) - 100.0) < 1.5
+
+
+def test_ewma_estimator_lags():
+    rng = np.random.default_rng(0)
+    actual = np.concatenate([np.full(50, 100.0), np.full(50, 200.0)])
+    est = EWMAEstimator(0.5).estimate(rng, actual)
+    assert est[0] == 100.0
+    assert est[51] < 200.0  # lags the jump
+    assert est[-1] > 190.0  # converges
+
+
+@hypothesis.given(
+    st.floats(10.0, 500.0), st.floats(0.0, 1.5), st.integers(0, 2**31 - 1)
+)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_networks_always_positive(mean, cv, seed):
+    rng = np.random.default_rng(seed)
+    for net in (FixedCVNetwork(mean, cv), LognormalNetwork(mean, max(cv, 0.01))):
+        s = net.sample(rng, 256)
+        assert (s > 0).all()
+        assert np.isfinite(s).all()

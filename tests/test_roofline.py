@@ -1,0 +1,67 @@
+"""Roofline derivation units: HLO collective parsing, term combination."""
+import numpy as np
+import pytest
+
+from repro.launch import roofline as rf
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[16,4096,2048]{2,1,0} all-gather(%x), dimensions={0}
+  %ar = f32[256,1024]{1,0} all-reduce(%y), to_apply=%sum
+  %rs = f32[16,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = bf16[8,128]{1,0} all-to-all(%w), dimensions={0}
+  %cp = f32[4,4]{1,0} collective-permute(%v), source_target_pairs={{0,1}}
+  %ar2 = f32[256,1024]{1,0} all-reduce(%y2), to_apply=%sum
+  %tup = (f32[8,8]{1,0}, bf16[4,4]{1,0}) all-gather(%p, %q), dimensions={0}
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    out = rf.collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 16 * 4096 * 2048 * 2 + (8 * 8 * 4 + 4 * 4 * 2)
+    assert out["all-reduce"] == 2 * 256 * 1024 * 4
+    assert out["reduce-scatter"] == 16 * 64 * 4
+    assert out["all-to-all"] == 8 * 128 * 2
+    assert out["collective-permute"] == 4 * 4 * 4
+
+
+def test_collective_bytes_empty():
+    assert rf.collective_bytes("ENTRY %main { %r = f32[2] add(%a, %b) }") == {}
+
+
+def test_combine_components_scales_by_multiplier():
+    comps = [
+        rf.Component("layer", flops=10.0, bytes_accessed=100.0,
+                     coll_bytes={"all-reduce": 5}, multiplier=32),
+        rf.Component("ends", flops=7.0, bytes_accessed=3.0,
+                     coll_bytes={"all-gather": 2}, multiplier=1),
+    ]
+    tot = rf.combine_components(comps)
+    assert tot["flops"] == 10 * 32 + 7
+    assert tot["bytes"] == 100 * 32 + 3
+    assert tot["coll_bytes"] == 5 * 32 + 2
+    assert tot["coll_by_kind"] == {"all-reduce": 160.0, "all-gather": 2.0}
+
+
+def test_cost_terms_units():
+    terms = rf.cost_terms({"flops": rf.HW["peak_flops"], "bytes": rf.HW["hbm_bw"],
+                           "coll_bytes": rf.HW["ici_bw"]}, chips=256)
+    assert terms["compute_s"] == pytest.approx(1.0)
+    assert terms["memory_s"] == pytest.approx(1.0)
+    assert terms["collective_s"] == pytest.approx(1.0)
+
+
+def test_cell_report_dominant_and_ratio():
+    rep = rf.CellReport(
+        arch="a", shape="s", mesh="m", chips=4,
+        terms_s={"compute_s": 0.5, "memory_s": 2.0, "collective_s": 0.1},
+        totals={"flops": 100.0, "bytes": 1.0, "coll_bytes": 0.0},
+        model_flops=300.0,
+        bytes_per_device=None,
+        coll_census={},
+    )
+    assert rep.dominant == "memory_s"
+    assert rep.useful_ratio == pytest.approx(300.0 / 400.0)
+    j = rep.to_json()
+    assert j["dominant"] == "memory_s"

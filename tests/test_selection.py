@@ -1,0 +1,238 @@
+"""Unit + property tests for the three-stage selection algorithm (§V-A)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.mdinference_zoo import ablation_zoo, paper_zoo
+from repro.core.registry import ModelProfile, ModelRegistry
+from repro.core.selection import (
+    compute_budget,
+    select_batch,
+    select_ref,
+    selection_probabilities,
+)
+
+ZOO = paper_zoo()
+
+
+def test_budget():
+    assert compute_budget(250.0, 100.0) == 150.0
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: greedy base model.
+# ---------------------------------------------------------------------------
+def test_stage1_picks_most_accurate_fitting():
+    rng = np.random.default_rng(0)
+    # Budget 60ms: InceptionV4 (mu+sig=59.43) fits, NasNet Large does not.
+    r = select_ref(ZOO, 60.0, rng)
+    assert ZOO[r.base_index].name == "InceptionV4"
+    assert not r.fallback
+
+
+def test_stage1_fallback_to_fastest():
+    rng = np.random.default_rng(0)
+    r = select_ref(ZOO, 1.0, rng)  # nothing fits in 1ms
+    assert r.fallback
+    assert ZOO[r.index].name == "MobileNetV1 0.25"
+    assert r.exploration_set == ()
+
+
+def test_stage1_negative_budget():
+    rng = np.random.default_rng(0)
+    r = select_ref(ZOO, -50.0, rng)
+    assert r.fallback and ZOO[r.index].name == "MobileNetV1 0.25"
+
+
+def test_stage1_boundary_is_strict():
+    # mu + sigma < budget is strict: budget exactly mu+sigma excludes.
+    reg = ModelRegistry([ModelProfile("a", 50.0, 10.0, 1.0)])
+    rng = np.random.default_rng(0)
+    assert select_ref(reg, 11.0, rng).fallback
+    assert not select_ref(reg, 11.0001, rng).fallback
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: exploration set.
+# ---------------------------------------------------------------------------
+def test_stage2_exploration_contains_base():
+    rng = np.random.default_rng(0)
+    for budget in [10.0, 30.0, 60.0, 120.0, 200.0]:
+        r = select_ref(ZOO, budget, rng)
+        if not r.fallback:
+            assert r.base_index in r.exploration_set
+
+
+def test_stage2_nasnet_pair_in_exploration_set():
+    # Ablation zoo: NasNet Large & Fictional share mu -> both in M_E.
+    reg = ablation_zoo()
+    rng = np.random.default_rng(0)
+    r = select_ref(reg, 150.0, rng)
+    names = {reg[i].name for i in r.exploration_set}
+    assert names == {"NasNet Large", "NasNet Fictional"}
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: utility weighting.
+# ---------------------------------------------------------------------------
+def test_stage3_prefers_accuracy_within_pair():
+    reg = ablation_zoo()
+    rng = np.random.default_rng(0)
+    r = select_ref(reg, 150.0, rng)
+    probs = dict(zip(r.exploration_set, r.probabilities))
+    i_large = reg.index_of("NasNet Large")
+    i_fict = reg.index_of("NasNet Fictional")
+    # Same mu/sigma => probability ratio == accuracy ratio (82.6 : 50).
+    assert probs[i_large] > probs[i_fict]
+    np.testing.assert_allclose(
+        probs[i_large] / probs[i_fict], 82.6 / 50.0, rtol=1e-5
+    )
+
+
+def test_stage3_negative_utilities_clamped():
+    # A model in M_E that violates the budget must get zero probability.
+    reg = ModelRegistry(
+        [
+            ModelProfile("base", 70.0, 10.0, 5.0),  # fits at budget 16
+            ModelProfile("slowtwin", 90.0, 14.9, 2.0),  # in M_E, violates
+        ]
+    )
+    rng = np.random.default_rng(0)
+    r = select_ref(reg, 16.0, rng)
+    probs = dict(zip(r.exploration_set, r.probabilities))
+    assert probs[reg.index_of("slowtwin")] == 0.0
+    assert r.index == reg.index_of("base")
+
+
+def test_utility_power_sharpens():
+    reg = ablation_zoo()
+    acc, mu, sig = (
+        jnp.asarray(reg.accuracy),
+        jnp.asarray(reg.mu),
+        jnp.asarray(reg.sigma),
+    )
+    p1, _, _ = selection_probabilities(acc, mu, sig, jnp.asarray([150.0]))
+    p4, _, _ = selection_probabilities(
+        acc, mu, sig, jnp.asarray([150.0]), utility_power=4.0
+    )
+    i = reg.index_of("NasNet Large")
+    assert float(p4[0, i]) > float(p1[0, i])
+
+
+# ---------------------------------------------------------------------------
+# Vectorized == reference.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("zoo", [paper_zoo(), ablation_zoo()])
+def test_batch_matches_ref(zoo):
+    rng = np.random.default_rng(1)
+    budgets = np.linspace(-30.0, 320.0, 351)
+    probs, base, fb = selection_probabilities(
+        jnp.asarray(zoo.accuracy),
+        jnp.asarray(zoo.mu),
+        jnp.asarray(zoo.sigma),
+        jnp.asarray(budgets, dtype=jnp.float32),
+    )
+    probs, base, fb = np.asarray(probs), np.asarray(base), np.asarray(fb)
+    for i, b in enumerate(budgets):
+        r = select_ref(zoo, float(b), rng)
+        assert bool(fb[i]) == r.fallback, f"fallback mismatch at budget {b}"
+        if r.fallback:
+            assert np.argmax(probs[i]) == zoo.fastest_index
+            continue
+        assert int(base[i]) == r.base_index, f"base mismatch at budget {b}"
+        dense = np.zeros(len(zoo))
+        for j, p in zip(r.exploration_set, r.probabilities):
+            dense[j] = p
+        if sum(r.probabilities) == 0.0:  # all-clamped => one-hot base
+            dense[r.base_index] = 1.0
+        np.testing.assert_allclose(probs[i], dense, atol=1e-5)
+
+
+def test_select_batch_samples_from_probs():
+    key = jax.random.key(0)
+    sel = select_batch(
+        key,
+        jnp.asarray(ZOO.accuracy),
+        jnp.asarray(ZOO.mu),
+        jnp.asarray(ZOO.sigma),
+        jnp.full((4000,), 150.0),
+    )
+    # Budget 150 -> base NasNet Large, singleton M_E -> always NasNet Large.
+    assert np.all(np.asarray(sel.index) == ZOO.index_of("NasNet Large"))
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants.
+# ---------------------------------------------------------------------------
+profile_lists = st.lists(
+    st.tuples(
+        st.floats(1.0, 100.0),  # accuracy
+        st.floats(0.5, 500.0),  # mu
+        st.floats(0.01, 50.0),  # sigma
+    ),
+    min_size=1,
+    max_size=16,
+)
+
+
+@hypothesis.given(profile_lists, st.floats(-100.0, 1000.0), st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=200, deadline=None)
+def test_selection_invariants(raw, budget, seed):
+    reg = ModelRegistry(
+        [ModelProfile(f"m{i}", a, m, s) for i, (a, m, s) in enumerate(raw)]
+    )
+    rng = np.random.default_rng(seed)
+    r = select_ref(reg, budget, rng)
+    # The selected model is always a real model.
+    assert 0 <= r.index < len(reg)
+    if r.fallback:
+        # Fallback == fastest model, and nothing fits the budget.
+        assert r.index == reg.fastest_index
+        assert all(not p.fits(budget) for p in reg)
+    else:
+        p_base = reg[r.base_index]
+        # Base model satisfies the stage-1 constraint.
+        assert p_base.fits(budget)
+        # Everything in M_E is within +-sigma_b of the base's mu.
+        for i in r.exploration_set:
+            assert (
+                p_base.mu_ms - p_base.sigma_ms
+                <= reg[i].mu_ms
+                <= p_base.mu_ms + p_base.sigma_ms
+            )
+        # Probabilities form a (sub)distribution and selection is supported.
+        total = sum(r.probabilities)
+        assert total <= 1.0 + 1e-6
+        if total > 0:
+            assert abs(total - 1.0) < 1e-6
+        # The chosen model never has zero probability (unless degenerate).
+        probs = dict(zip(r.exploration_set, r.probabilities))
+        if total > 0:
+            assert probs[r.index] > 0.0
+
+
+@hypothesis.given(
+    profile_lists,
+    st.lists(st.floats(-100.0, 1000.0), min_size=1, max_size=32),
+)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_batch_probs_match_ref_structure(raw, budgets):
+    reg = ModelRegistry(
+        [ModelProfile(f"m{i}", a, m, s) for i, (a, m, s) in enumerate(raw)]
+    )
+    probs, base, fb = selection_probabilities(
+        jnp.asarray(reg.accuracy),
+        jnp.asarray(reg.mu),
+        jnp.asarray(reg.sigma),
+        jnp.asarray(budgets, dtype=jnp.float32),
+    )
+    probs = np.asarray(probs, dtype=np.float64)
+    # Rows are distributions.
+    np.testing.assert_allclose(probs.sum(-1), 1.0, atol=1e-4)
+    rng = np.random.default_rng(0)
+    for i, b in enumerate(budgets):
+        r = select_ref(reg, float(b), rng)
+        assert bool(np.asarray(fb)[i]) == r.fallback

@@ -1,0 +1,104 @@
+"""Serving layer: scheduler policy, engine execution, fault-tolerance paths."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.configs.mdinference_zoo import paper_zoo
+from repro.core.duplication import HedgePolicy
+from repro.core.registry import ModelProfile, ModelRegistry
+from repro.models import transformer as T
+from repro.serving.engine import ServingEngine, Variant
+from repro.serving.profiles import ONDEVICE_TIER, estimate_ms, lm_zoo_registry
+from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
+
+
+def test_decide_budgets_against_network():
+    sched = MDInferenceScheduler(
+        paper_zoo(), ONDEVICE_TIER, SchedulerConfig(t_sla_ms=250.0)
+    )
+    fast_net = sched.decide(20.0)  # big budget -> accurate model
+    slow_net = sched.decide(240.0)  # 10ms budget -> a fast model
+    dead_net = sched.decide(249.5)  # sub-ms budget -> nothing fits: fallback
+    assert sched.accuracy[fast_net.model_index] > sched.accuracy[slow_net.model_index]
+    assert not slow_net.fallback
+    assert dead_net.fallback
+
+
+def test_observe_tracks_drift():
+    """Queueing transients (paper §V-A motivation): observed slowdowns shift
+    the live profile and selection adapts away from the degraded model."""
+    reg = ModelRegistry(
+        [
+            ModelProfile("fast", 50.0, 10.0, 0.5),
+            ModelProfile("big", 90.0, 100.0, 1.0),
+        ]
+    )
+    sched = MDInferenceScheduler(
+        reg, ONDEVICE_TIER, SchedulerConfig(t_sla_ms=250.0, profile_ewma=0.3)
+    )
+    i_big = 1
+    assert sched.decide(100.0).model_index == i_big  # budget 150 fits 'big'
+    for _ in range(30):
+        sched.observe(i_big, 400.0)  # sustained queueing delay
+    assert sched.mu[i_big] > 250.0
+    assert sched.decide(100.0).model_index == 0  # now picks 'fast'
+
+
+def test_run_trace_bounds_latency():
+    sched = MDInferenceScheduler(
+        paper_zoo(), ONDEVICE_TIER, SchedulerConfig(t_sla_ms=250.0, seed=1)
+    )
+    rng = np.random.default_rng(0)
+    t_nw = np.abs(rng.normal(100, 80, 300)) + 1
+    m = sched.run_trace(t_nw)
+    assert m.sla_attainment == 1.0  # hedged => bounded
+    assert m.aggregate_accuracy > 60.0
+
+
+def test_hedge_policy_off_allows_violations():
+    sched = MDInferenceScheduler(
+        paper_zoo(),
+        ONDEVICE_TIER,
+        SchedulerConfig(
+            t_sla_ms=250.0,
+            # Never hedge (headroom -inf): outage requests must violate.
+            hedge=HedgePolicy(always=False, deadline_headroom_ms=-1e12),
+            seed=1,
+        ),
+    )
+    rng = np.random.default_rng(0)
+    t_nw = np.concatenate([np.full(50, 100.0), np.full(10, 400.0)])  # outages
+    m = sched.run_trace(t_nw)
+    assert m.sla_attainment < 1.0  # un-hedged outage requests violate
+
+
+def test_estimate_ms_roofline_max():
+    # Compute-bound case.
+    assert estimate_ms(197e12, 1.0, 0.0, chips=1) == pytest.approx(1000.0)
+    # Memory-bound case.
+    assert estimate_ms(1.0, 819e9, 0.0, chips=1) == pytest.approx(1000.0)
+    # Collective-bound case.
+    assert estimate_ms(0.0, 0.0, 50e9, chips=1) == pytest.approx(1000.0)
+
+
+def test_lm_zoo_registry_ordering():
+    reg = lm_zoo_registry(chips=8)
+    assert len(reg) == 8
+    # Quality-sorted; xlstm is cheapest, llama4-scout highest quality.
+    assert reg[0].accuracy <= reg[-1].accuracy
+    mus = {p.name: p.mu_ms for p in reg}
+    assert mus["xlstm-350m"] < mus["qwen3-14b"]
+    assert all(p.mu_ms > 0 for p in reg)
+
+
+def test_engine_generates_and_profiles():
+    engine = ServingEngine(max_len=48)
+    cfg = reduced("gemma-2b", n_layers=2)
+    params = T.init_params(cfg, jax.random.key(0))
+    engine.register(Variant("tiny", cfg, params, 42.0))
+    out, ms = engine.generate("tiny", np.zeros((2, 16), np.int32), 4)
+    assert out.shape == (2, 4)
+    assert ms > 0
+    reg = engine.measure_profiles(prompt_len=16, gen_tokens=2, trials=2)
+    assert reg[0].mu_ms > 0

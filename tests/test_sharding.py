@@ -1,0 +1,128 @@
+"""Distribution plumbing: axis rules, specs, mesh builders, dry-run proxy."""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, reduced
+from repro.distributed.api import (
+    RULES_1D,
+    RULES_2D,
+    RULES_3D,
+    AxisRules,
+    axis_rules,
+    constrain,
+)
+from repro.launch.mesh import make_elastic_mesh
+from repro.models import transformer as T
+
+
+def test_rules_translate_specs():
+    r = AxisRules(None, RULES_2D)
+    assert r.spec(("batch", None, "heads")) == P(("data",), None, "model")
+    assert r.spec((None,)) == P(None)
+    r3 = AxisRules(None, RULES_3D)
+    assert r3.spec(("batch",)) == P(("pod", "data"))
+    assert r3.spec(("moe_groups",)) == P(("pod", "data"))
+
+
+def test_unknown_logical_axis_raises():
+    r = AxisRules(None, RULES_2D)
+    with pytest.raises(KeyError):
+        r.spec(("nonexistent",))
+
+
+def test_constrain_is_noop_without_rules():
+    x = jax.numpy.ones((4, 4))
+    y = constrain(x, "batch", None)
+    np.testing.assert_array_equal(x, y)
+
+
+def test_constrain_applies_under_rules():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    table = dict(RULES_1D)
+    table["batch"] = "data"
+    with axis_rules(AxisRules(mesh, table)):
+        y = jax.jit(lambda x: constrain(x, "batch", None))(jax.numpy.ones((4, 4)))
+    assert y.shape == (4, 4)
+
+
+def test_param_axes_cover_rules():
+    """Every logical axis used by any arch has a rule in every table."""
+    used = set()
+    for arch in ARCH_IDS:
+        axes = T.param_axes(reduced(arch))
+        for leaf in jax.tree.leaves(
+            axes,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        ):
+            used.update(a for a in leaf if a)
+        for leaf in jax.tree.leaves(
+            T.cache_axes(reduced(arch)),
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        ):
+            used.update(a for a in leaf if a)
+    for table in (RULES_1D, RULES_2D, RULES_3D):
+        missing = used - set(table)
+        assert not missing, missing
+
+
+def test_elastic_mesh_single_device():
+    mesh = make_elastic_mesh(model_parallel=16)
+    assert int(np.prod(mesh.devices.shape)) == len(jax.devices())
+    assert mesh.axis_names == ("data", "model")
+
+
+def test_cache_axes_structure_matches_cache():
+    for arch in ("llama3-8b", "recurrentgemma-2b", "xlstm-350m"):
+        cfg = reduced(arch)
+        cache = T.init_cache(cfg, 2, 16)
+        axes = T.cache_axes(cfg)
+        is_axes = lambda x: (isinstance(x, tuple) and len(x) > 0 and all(
+            isinstance(e, (str, type(None))) for e in x))
+        ct = jax.tree.structure(cache)
+        at = jax.tree.structure(axes, is_leaf=is_axes)
+        assert ct == at, arch
+        flat_c = jax.tree.leaves(cache)
+        flat_a = jax.tree.leaves(axes, is_leaf=is_axes)
+        for c, a in zip(flat_c, flat_a):
+            assert len(a) == c.ndim, (arch, c.shape, a)
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_subprocess():
+    """One real dry-run cell: 512 fake devices, production mesh, compile.
+
+    Subprocess because the 512-device XLA flag must be set before jax init
+    (the test process itself sees 1 device, as required).
+    """
+    repo = Path(__file__).resolve().parent.parent
+    out = repo / "results" / "test_cell.json"
+    if out.exists():
+        out.unlink()
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "xlstm-350m", "--shape", "decode_32k",
+            "--mesh", "single", "--no-components", "--out", str(out),
+        ],
+        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin"},
+        capture_output=True,
+        text=True,
+        timeout=560,
+        cwd=repo,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    import json
+
+    cells = json.loads(out.read_text())["cells"]
+    assert cells[0]["status"] == "ok"
+    assert cells[0]["chips"] == 256
+    out.unlink()

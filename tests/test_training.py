@@ -1,0 +1,166 @@
+"""Training substrate: optimizer, schedules, microbatching, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced
+from repro.distributed import compression
+from repro.training import (
+    DataConfig,
+    OptimizerConfig,
+    TrainConfig,
+    init_train_state,
+    lr_at,
+    make_pipeline,
+    make_train_step,
+)
+
+CFG = reduced("llama3-8b")
+OPT = OptimizerConfig(learning_rate=1e-3, warmup_steps=5, total_steps=100)
+
+
+def _batch(step=0, bs=4, seq=64):
+    pipe = make_pipeline(DataConfig(batch_size=bs, seq_len=seq), CFG)
+    return {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+
+
+def test_loss_decreases():
+    state = init_train_state(CFG, jax.random.key(0))
+    step_fn = make_train_step(CFG, OPT)
+    losses = []
+    for s in range(10):
+        state, m = step_fn(state, _batch(s))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+    assert np.isfinite(losses).all()
+
+
+def test_lr_schedule():
+    assert float(lr_at(OPT, 0)) == 0.0
+    assert float(lr_at(OPT, 5)) == pytest.approx(1e-3, rel=1e-5)
+    assert float(lr_at(OPT, 100)) == pytest.approx(1e-4, rel=1e-2)  # min ratio
+    # monotone decay after warmup
+    mid = float(lr_at(OPT, 50))
+    assert 1e-4 < mid < 1e-3
+
+
+def test_grad_clipping_bounds_update():
+    opt = OptimizerConfig(learning_rate=1e-3, clip_norm=1e-6, warmup_steps=0,
+                          total_steps=10, weight_decay=0.0)
+    state = init_train_state(CFG, jax.random.key(0))
+    step_fn = make_train_step(CFG, opt)
+    before = jax.tree.leaves(state["params"])[0].copy()
+    state, m = step_fn(state, _batch())
+    after = jax.tree.leaves(state["params"])[0]
+    # With a tiny clip norm the parameter change is tiny.
+    assert float(jnp.abs(after - before).max()) < 1e-3
+
+
+def test_microbatch_equivalence():
+    b = _batch()
+    s1, _ = make_train_step(CFG, OPT)(init_train_state(CFG, jax.random.key(0)), b)
+    s2, _ = make_train_step(CFG, OPT, TrainConfig(microbatches=2))(
+        init_train_state(CFG, jax.random.key(0)), b
+    )
+    for a, c in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(c, np.float32), atol=2e-5
+        )
+
+
+def test_compression_roundtrip_error_bound():
+    g = jax.random.normal(jax.random.key(0), (256, 64)) * 3.0
+    q, s = compression.quantize_int8(g)
+    back = compression.dequantize_int8(q, s)
+    assert float(jnp.abs(back - g).max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """With EF, repeated compression of a constant gradient converges: the
+    accumulated applied updates approach the true sum."""
+    g = {"w": jax.random.normal(jax.random.key(1), (128,)) * 0.01}
+    e = compression.init_error_feedback(g)
+    applied = jnp.zeros_like(g["w"])
+    for t in range(50):
+        ghat, e = compression.quantize_dequantize(g, e)
+        applied = applied + ghat["w"]
+    true = g["w"] * 50
+    rel = float(jnp.abs(applied - true).max() / (jnp.abs(true).max() + 1e-9))
+    assert rel < 0.05
+
+
+def test_compressed_psum_single_axis():
+    mesh = jax.make_mesh((1,), ("d",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jax.random.normal(jax.random.key(2), (64,))
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    f = shard_map(
+        lambda v: compression.compressed_psum(v, "d"),
+        mesh=mesh, in_specs=P(), out_specs=P(),
+    )
+    out = f(x)
+    np.testing.assert_allclose(out, x, atol=float(jnp.abs(x).max()) / 100)
+
+
+def test_grad_compression_training_still_converges():
+    state = init_train_state(CFG, jax.random.key(0), TrainConfig(grad_compression=True))
+    step_fn = make_train_step(CFG, OPT, TrainConfig(grad_compression=True))
+    losses = []
+    for s in range(10):
+        state, m = step_fn(state, _batch(s))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline.
+# ---------------------------------------------------------------------------
+def test_data_deterministic_random_access():
+    pipe = make_pipeline(DataConfig(batch_size=4, seq_len=32, seed=7), CFG)
+    a = pipe.batch_at(123)
+    b = pipe.batch_at(123)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = pipe.batch_at(124)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    pipe = make_pipeline(DataConfig(batch_size=2, seq_len=16), CFG)
+    b = pipe.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_vocab_bounds():
+    pipe = make_pipeline(DataConfig(batch_size=8, seq_len=64), CFG)
+    b = pipe.batch_at(5)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < CFG.vocab_size
+
+
+def test_data_file_backed(tmp_path):
+    import numpy as np
+
+    toks = np.arange(10_000, dtype=np.int32) % 100
+    path = tmp_path / "tokens.bin"
+    toks.tofile(path)
+    pipe = make_pipeline(
+        DataConfig(batch_size=2, seq_len=32, path=str(path)), CFG
+    )
+    b = pipe.batch_at(0)
+    assert b["tokens"].shape == (2, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_frontends():
+    acfg = reduced("hubert-xlarge")
+    pipe = make_pipeline(DataConfig(batch_size=2, seq_len=16), acfg)
+    b = pipe.batch_at(0)
+    assert b["frames"].shape == (2, 16, acfg.frontend_dim)
+    vcfg = reduced("paligemma-3b")
+    pipe = make_pipeline(DataConfig(batch_size=2, seq_len=16), vcfg)
+    b = pipe.batch_at(0)
+    assert b["patches"].shape == (2, vcfg.num_prefix_tokens, vcfg.frontend_dim)
