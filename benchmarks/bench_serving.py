@@ -3,9 +3,18 @@
 The paper's experiment translated to the TPU serving stack: requests with a
 latency SLO arrive over variable networks; the scheduler picks an LM tier
 per request and hedges with the cheap tier.  Compares the same four
-algorithms as Table IV on the roofline-profiled zoo.
+algorithms as Table IV on the roofline-profiled zoo, and measures the
+scalar (``chunk_size=1``) vs batched scheduler throughput on a 10k-request
+trace (the tentpole claim: chunked selection through the jitted policy
+path is >=10x faster than per-request dispatch).
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only serving
+      PYTHONPATH=src:. python benchmarks/bench_serving.py --smoke
 """
 from __future__ import annotations
+
+import argparse
+import time
 
 import numpy as np
 
@@ -16,10 +25,38 @@ from repro.serving.profiles import ONDEVICE_TIER, lm_zoo_registry
 from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
 
 
-def run(n_requests: int = 2_000):
+def _throughput_comparison(reg, t_nw, *, batched_chunk: int = 512):
+    """Time run_trace at chunk_size=1 (scalar path) vs a real chunk size."""
+
+    def one(chunk):
+        cfg = SchedulerConfig(t_sla_ms=250.0, seed=12, chunk_size=chunk)
+        # Warm the jitted policy for this chunk shape, then time a fresh
+        # scheduler (run_trace mutates profiles/rng state).
+        MDInferenceScheduler(reg, ONDEVICE_TIER, cfg).run_trace(t_nw[:chunk])
+        sched = MDInferenceScheduler(reg, ONDEVICE_TIER, cfg)
+        t0 = time.perf_counter()
+        m = sched.run_trace(t_nw)
+        return m, (time.perf_counter() - t0) * 1e6
+
+    n = len(t_nw)
+    m_s, us_scalar = one(1)
+    m_b, us_batched = one(batched_chunk)
+    speedup = us_scalar / us_batched
+    emit("serving/trace10k/scalar", us_scalar / n,
+         f"quality={m_s.aggregate_accuracy:.2f} attain={m_s.sla_attainment*100:.2f}%")
+    emit("serving/trace10k/batched", us_batched / n,
+         f"quality={m_b.aggregate_accuracy:.2f} attain={m_b.sla_attainment*100:.2f}% "
+         f"chunk={batched_chunk} speedup={speedup:.1f}x")
+    return speedup
+
+
+def run(n_requests: int = 2_000, smoke: bool = False):
     reg = lm_zoo_registry(chips=8)
     for p in reg:
         emit(f"serving/zoo/{p.name}", p.mu_ms * 1e3, f"quality={p.accuracy}")
+
+    if smoke:
+        n_requests = min(n_requests, 200)
 
     for net_name, trace in (
         ("university", university_trace()),
@@ -57,6 +94,15 @@ def run(n_requests: int = 2_000):
             f"hedge_rate={hedged*100:.1f}% (duplication cost saved)",
         )
 
+    # Tentpole: scalar-vs-batched scheduler throughput on a 10k trace.
+    rng = np.random.default_rng(11)
+    t_nw = university_trace().sample(rng, 1_000 if smoke else 10_000)
+    _throughput_comparison(reg, t_nw)
+
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace sizes for CI")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -2,12 +2,17 @@
 
 Three functionally-equivalent LM tiers (tiny configs of the gemma / llama3 /
 qwen3 families) are built and profiled with real wall-clock measurements;
-a request stream is then served with network-aware tier selection plus
-hedged duplication.  This is the paper's Figure 1(d) running for real.
+an open-loop Poisson request stream is then served with continuous
+batching: each scheduling window is decided in one batched scheduler call,
+requests that picked the same tier run as one real ``generate`` batch, and
+hedged duplication bounds every response at the SLA.  This is the paper's
+Figure 1(d) running for real.
 
 Run:  PYTHONPATH=src python examples/serve_mdinference.py
 """
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    raise SystemExit(main(["--requests", "30", "--sla", "2500", "--gen", "8"]))
+    raise SystemExit(
+        main(["--requests", "30", "--sla", "2500", "--gen", "8", "--rate", "20"])
+    )

@@ -11,7 +11,12 @@ Public surface:
   * :mod:`~repro.core.simulator` — the paper's evaluation methodology.
   * :mod:`~repro.core.baselines` — every comparison algorithm from §VI.
 """
-from repro.core.baselines import ALGORITHMS, get_algorithm
+from repro.core.baselines import (
+    ALGORITHMS,
+    POLICY_PROBABILITIES,
+    get_algorithm,
+    get_policy_probabilities,
+)
 from repro.core.duplication import (
     DEFAULT_ON_DEVICE,
     DuplicationOutcome,
@@ -23,8 +28,10 @@ from repro.core.network import (
     ExactEstimator,
     FixedCVNetwork,
     LognormalNetwork,
+    NAMED_TRACES,
     NoisyEstimator,
     TraceNetwork,
+    lte_trace,
     residential_trace,
     university_trace,
 )
@@ -52,7 +59,9 @@ __all__ = [
     "LognormalNetwork",
     "ModelProfile",
     "ModelRegistry",
+    "NAMED_TRACES",
     "NoisyEstimator",
+    "POLICY_PROBABILITIES",
     "RequestMetrics",
     "SelectionResult",
     "SimConfig",
@@ -60,6 +69,8 @@ __all__ = [
     "TraceNetwork",
     "compute_budget",
     "get_algorithm",
+    "get_policy_probabilities",
+    "lte_trace",
     "residential_trace",
     "resolve_duplication",
     "run_simulation",

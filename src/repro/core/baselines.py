@@ -9,6 +9,18 @@ and budgets against the full SLA); ``t_budget`` is the network-aware budget.
 ``fallback`` marks requests for which stage 1 found no feasible model (only
 meaningful for budgeted algorithms; static algorithms never "fall back" —
 they simply miss their SLA).
+
+Every algorithm is also exposed in *probability form* via
+:data:`POLICY_PROBABILITIES`:
+
+    fn(accuracy, mu, sigma, t_sla, t_budget, utility_power=...)
+        -> (probs (R, N), base_index (R,), fallback (R,))
+
+Each row of ``probs`` is the per-request selection distribution over the
+zoo (deterministic policies yield one-hot rows).  The batched online
+scheduler samples from these rows host-side with a pre-drawn uniform per
+request, which keeps its random stream independent of chunking — the
+property the batched-vs-scalar equivalence tests rely on.
 """
 from __future__ import annotations
 
@@ -19,7 +31,12 @@ import jax.numpy as jnp
 
 from repro.core.selection import select_batch, selection_probabilities
 
-__all__ = ["ALGORITHMS", "get_algorithm"]
+__all__ = [
+    "ALGORITHMS",
+    "POLICY_PROBABILITIES",
+    "get_algorithm",
+    "get_policy_probabilities",
+]
 
 _EPS = 1e-9
 
@@ -128,4 +145,86 @@ def get_algorithm(name: str) -> Callable:
     except KeyError:
         raise KeyError(
             f"unknown algorithm {name!r}; available: {sorted(ALGORITHMS)}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Probability-form policies (for the batched online scheduler).
+# ---------------------------------------------------------------------------
+def _one_hot_rows(index, n, dtype=jnp.float32):
+    return jax.nn.one_hot(index, n, dtype=dtype)
+
+
+def mdinference_probs(accuracy, mu, sigma, t_sla, t_budget, *, utility_power=1.0):
+    return selection_probabilities(
+        accuracy, mu, sigma, jnp.atleast_1d(t_budget), utility_power=utility_power
+    )
+
+
+def static_greedy_probs(accuracy, mu, sigma, t_sla, t_budget, *, utility_power=1.0):
+    idx, fb = _greedy_at(accuracy, mu, sigma, jnp.broadcast_to(t_sla, t_budget.shape))
+    return _one_hot_rows(idx, accuracy.shape[0]), idx, fb
+
+
+def budget_greedy_probs(accuracy, mu, sigma, t_sla, t_budget, *, utility_power=1.0):
+    idx, fb = _greedy_at(accuracy, mu, sigma, t_budget)
+    return _one_hot_rows(idx, accuracy.shape[0]), idx, fb
+
+
+def static_accuracy_probs(accuracy, mu, sigma, t_sla, t_budget, *, utility_power=1.0):
+    idx = jnp.full(t_budget.shape, jnp.argmax(accuracy), dtype=jnp.int32)
+    return _one_hot_rows(idx, accuracy.shape[0]), idx, jnp.zeros(t_budget.shape, bool)
+
+
+def static_latency_probs(accuracy, mu, sigma, t_sla, t_budget, *, utility_power=1.0):
+    idx = jnp.full(t_budget.shape, jnp.argmin(mu), dtype=jnp.int32)
+    return _one_hot_rows(idx, accuracy.shape[0]), idx, jnp.zeros(t_budget.shape, bool)
+
+
+def pure_random_probs(accuracy, mu, sigma, t_sla, t_budget, *, utility_power=1.0):
+    n = accuracy.shape[0]
+    probs = jnp.full(t_budget.shape + (n,), 1.0 / n, dtype=jnp.float32)
+    # No stage-1 base: hedging decisions fall back to the fastest profile.
+    base = jnp.full(t_budget.shape, jnp.argmin(mu), dtype=jnp.int32)
+    return probs, base, jnp.zeros(t_budget.shape, bool)
+
+
+def related_random_probs(accuracy, mu, sigma, t_sla, t_budget, *, utility_power=1.0):
+    in_me, base, fb = _exploration_mask(accuracy, mu, sigma, t_budget)
+    count = jnp.maximum(in_me.sum(axis=-1, keepdims=True), 1)
+    probs = jnp.where(in_me, 1.0 / count, 0.0).astype(jnp.float32)
+    fastest_onehot = _one_hot_rows(
+        jnp.full(t_budget.shape, jnp.argmin(mu), dtype=jnp.int32), accuracy.shape[0]
+    )
+    probs = jnp.where(fb[:, None], fastest_onehot, probs)
+    return probs, base, fb
+
+
+def related_accurate_probs(accuracy, mu, sigma, t_sla, t_budget, *, utility_power=1.0):
+    in_me, base, fb = _exploration_mask(accuracy, mu, sigma, t_budget)
+    score = accuracy[None, :] - _EPS * mu[None, :]
+    idx = jnp.argmax(jnp.where(in_me, score, -jnp.inf), axis=-1).astype(jnp.int32)
+    idx = jnp.where(fb, jnp.argmin(mu), idx).astype(jnp.int32)
+    return _one_hot_rows(idx, accuracy.shape[0]), base, fb
+
+
+POLICY_PROBABILITIES: Dict[str, Callable] = {
+    "mdinference": mdinference_probs,
+    "static_greedy": static_greedy_probs,
+    "budget_greedy": budget_greedy_probs,
+    "static_accuracy": static_accuracy_probs,
+    "static_latency": static_latency_probs,
+    "pure_random": pure_random_probs,
+    "related_random": related_random_probs,
+    "related_accurate": related_accurate_probs,
+    "oracle": budget_greedy_probs,
+}
+
+
+def get_policy_probabilities(name: str) -> Callable:
+    try:
+        return POLICY_PROBABILITIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; available: {sorted(POLICY_PROBABILITIES)}"
         ) from None

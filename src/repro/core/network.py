@@ -33,6 +33,8 @@ __all__ = [
     "TraceNetwork",
     "university_trace",
     "residential_trace",
+    "lte_trace",
+    "NAMED_TRACES",
     "Estimator",
     "ExactEstimator",
     "NoisyEstimator",
@@ -153,6 +155,36 @@ def residential_trace(seed: int = 1, n: int = 5000) -> TraceNetwork:
         cap=None,
     )
     return TraceNetwork(tuple(t.tolist()))
+
+
+def lte_trace(seed: int = 2, n: int = 5000) -> TraceNetwork:
+    """Synthetic LTE trace (cellular: slower, jittery body, handover tail).
+
+    Not calibrated to a Table IV column (the paper measured WiFi and
+    residential links); parameters follow the paper's §III observation that
+    cellular RTTs are both slower on average and far more variable, with
+    multi-second outages during handovers.
+    """
+    rng = np.random.default_rng(seed)
+    t = _mixture_trace(
+        rng,
+        n,
+        base_mean=120.0,
+        base_cv=0.80,
+        tail_frac=0.02,
+        tail_lo=300.0,
+        tail_hi=3000.0,
+        cap=None,
+    )
+    return TraceNetwork(tuple(t.tolist()))
+
+
+#: Named trace factories for load generation and examples/benchmarks.
+NAMED_TRACES = {
+    "university": university_trace,
+    "residential": residential_trace,
+    "lte": lte_trace,
+}
 
 
 # ---------------------------------------------------------------------------

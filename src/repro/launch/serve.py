@@ -2,10 +2,12 @@
 
 Builds N functionally-equivalent LM tiers (tiny reduced configs at
 different widths/depths on CPU), measures their real latency profiles
-(Table III methodology), then serves a Poisson request stream: per request
-the scheduler estimates the network time, budgets, selects a tier
-(3-stage algorithm), executes *real* generation on the selected tier, and
-hedges with the fastest tier to bound latency at the SLA.
+(Table III methodology), then serves an open-loop request stream with
+continuous batching: arrivals come from a Poisson (or bursty) load
+generator over a network model, each scheduling window is decided in one
+batched scheduler call, requests that picked the same tier execute as one
+real ``generate`` batch, and the fast tier hedges every response to bound
+latency at the SLA.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --requests 50 --sla 2000
@@ -19,10 +21,15 @@ import jax
 import numpy as np
 
 from repro.configs import reduced
-from repro.core.duplication import resolve_duplication
-from repro.core.network import LognormalNetwork
+from repro.core.network import NAMED_TRACES, LognormalNetwork
 from repro.models import transformer as T
-from repro.serving.engine import ServingEngine, Variant
+from repro.serving.engine import QueuedRequest, ServingEngine, Variant
+from repro.serving.loadgen import (
+    BurstyArrivals,
+    PoissonArrivals,
+    iter_windows,
+    make_trace,
+)
 from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
 
 TIERS = (
@@ -51,8 +58,17 @@ def main(argv=None):
     ap.add_argument("--sla", type=float, default=2000.0, help="ms")
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument(
+        "--network", default="lognormal",
+        choices=["lognormal", *NAMED_TRACES],
+        help="network-time model for the trace",
+    )
     ap.add_argument("--net-mean", type=float, default=300.0)
     ap.add_argument("--net-cv", type=float, default=0.6)
+    ap.add_argument("--rate", type=float, default=20.0, help="arrival rate rps")
+    ap.add_argument("--bursty", action="store_true", help="MMPP bursts")
+    ap.add_argument("--window", type=float, default=200.0,
+                    help="scheduling-tick window (ms)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -69,43 +85,53 @@ def main(argv=None):
     sched = MDInferenceScheduler(
         registry, fastest, SchedulerConfig(t_sla_ms=args.sla, seed=args.seed)
     )
-    net = LognormalNetwork(args.net_mean, args.net_cv)
+    if args.network == "lognormal":
+        network = LognormalNetwork(args.net_mean, args.net_cv)
+    else:
+        network = NAMED_TRACES[args.network]()
+    arrivals = (
+        BurstyArrivals(args.rate) if args.bursty else PoissonArrivals(args.rate)
+    )
+    trace = make_trace(args.requests, arrivals, network, seed=args.seed)
     rng = np.random.default_rng(args.seed)
-    t_nw = net.sample(rng, args.requests)
 
-    used_acc, lats, remote_used = [], [], 0
+    completions = []
     t_start = time.time()
-    for i in range(args.requests):
-        decision = sched.decide(float(t_nw[i]))
-        tokens = rng.integers(0, 256, (1, args.prompt))
-        _, exec_ms = engine.generate(decision.model_name, tokens, args.gen)
-        sched.observe(decision.model_index, exec_ms)
-        remote_ms = t_nw[i] + exec_ms
-        # Hedge: the fastest tier runs in parallel (its profile is its cost).
-        ondev_ms = max(rng.normal(fastest.mu_ms, fastest.sigma_ms), 0.1)
-        out = resolve_duplication(
-            np.asarray([remote_ms]),
-            np.asarray([sched.accuracy[decision.model_index]]),
-            np.asarray([ondev_ms]),
-            fastest.accuracy,
-            args.sla,
-        )
-        used_acc.append(out.accuracy[0])
-        lats.append(out.latency_ms[0])
-        remote_used += int(out.used_remote[0])
-        if i < 10 or i % 10 == 0:
-            print(
-                f"req {i:3d} nw={t_nw[i]:6.0f}ms -> {decision.model_name:8s} "
-                f"exec={exec_ms:7.1f}ms {'remote' if out.used_remote[0] else 'HEDGED'}"
+    for window in iter_windows(trace, args.window):
+        batch = [
+            QueuedRequest(
+                rid=int(i),
+                tokens=rng.integers(0, 256, args.prompt),
+                n_steps=args.gen,
+                t_nw_est_ms=float(trace.t_nw_est_ms[i]),
+                t_nw_actual_ms=float(trace.t_nw_ms[i]),
+                arrival_ms=float(trace.arrival_ms[i]),
             )
+            for i in window
+        ]
+        # The tick fires when its arrival window closes; the wait until
+        # then is charged against each request's budget and latency.
+        tick_ms = (trace.arrival_ms[window[0]] // args.window + 1) * args.window
+        done, _ = engine.serve_queue(sched, batch, dispatch_ms=tick_ms)
+        completions.extend(done)
+        c = done[0]
+        print(
+            f"tick t={tick_ms:7.0f}ms batch={len(done):3d} "
+            f"models={{{', '.join(sorted({d.model_name for d in done}))}}} "
+            f"first: wait+nw={c.remote_ms - c.exec_ms:5.0f}ms -> {c.model_name:8s} "
+            f"exec={c.exec_ms:7.1f}ms {'remote' if c.used_remote else 'HEDGED'}"
+        )
 
-    lats = np.asarray(lats)
+    lats = np.asarray([c.latency_ms for c in completions])
+    used_acc = np.asarray([c.accuracy for c in completions])
+    remote_used = sum(c.used_remote for c in completions)
     print(
-        f"\nserved {args.requests} requests in {time.time()-t_start:.1f}s wall\n"
+        f"\nserved {len(completions)} requests in {time.time()-t_start:.1f}s wall "
+        f"(offered {trace.offered_rps:.1f} rps)\n"
         f"aggregate quality : {np.mean(used_acc):.2f}\n"
         f"SLA attainment    : {np.mean(lats <= args.sla)*100:.1f}%  "
         f"(duplication bounds every response at the SLA)\n"
-        f"hedge reliance    : {(1 - remote_used/args.requests)*100:.1f}%\n"
+        f"hedge reliance    : {(1 - remote_used/len(completions))*100:.1f}%\n"
         f"p50/p99 latency   : {np.percentile(lats,50):.0f}/{np.percentile(lats,99):.0f} ms"
     )
     return 0

@@ -1,10 +1,28 @@
-"""Serving: MDInference scheduler (policy) + execution engine + profiles."""
-from repro.serving.engine import ServingEngine, Variant
+"""Serving: MDInference scheduler (policy) + execution engine + load gen."""
+from repro.serving.engine import (
+    CompletedRequest,
+    QueuedRequest,
+    ServingEngine,
+    Variant,
+)
+from repro.serving.loadgen import (
+    BurstyArrivals,
+    LoadTrace,
+    PoissonArrivals,
+    iter_windows,
+    make_trace,
+)
 from repro.serving.profiles import ONDEVICE_TIER, V5E, estimate_ms, lm_zoo_registry
-from repro.serving.scheduler import Decision, MDInferenceScheduler, SchedulerConfig
+from repro.serving.scheduler import (
+    BatchDecision,
+    Decision,
+    MDInferenceScheduler,
+    SchedulerConfig,
+)
 
 __all__ = [
-    "Decision", "MDInferenceScheduler", "SchedulerConfig",
-    "ONDEVICE_TIER", "ServingEngine", "V5E", "Variant",
-    "estimate_ms", "lm_zoo_registry",
+    "BatchDecision", "BurstyArrivals", "CompletedRequest", "Decision",
+    "LoadTrace", "MDInferenceScheduler", "ONDEVICE_TIER", "PoissonArrivals",
+    "QueuedRequest", "SchedulerConfig", "ServingEngine", "V5E", "Variant",
+    "estimate_ms", "iter_windows", "lm_zoo_registry", "make_trace",
 ]

@@ -5,23 +5,32 @@ policy half).  Each registered variant gets jitted prefill/decode functions
 and a measured latency profile; ``generate`` runs real batched decoding.
 On CPU this drives the end-to-end example with tiny variants; on a pod the
 same engine holds the per-arch compiled executables from the dry-run path.
+
+The request-queue front (:meth:`ServingEngine.serve_queue`) is the
+continuous-batching layer: a chunk of queued requests is scheduled in one
+``decide_batch`` call, grouped by selected variant, executed as one real
+``generate`` batch per variant, observed back into the scheduler's live
+profiles, and resolved through hedged duplication.  Feed it arrival
+windows from :mod:`repro.serving.loadgen` to serve an open-loop trace.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.registry import ModelProfile, ModelRegistry
+from repro.core.sla import RequestMetrics, summarize
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.scheduler import pad_to_pow2
 
-__all__ = ["Variant", "ServingEngine"]
+__all__ = ["Variant", "ServingEngine", "QueuedRequest", "CompletedRequest"]
 
 
 @dataclasses.dataclass
@@ -32,12 +41,41 @@ class Variant:
     quality: float  # A(m) for the selection algorithm
 
 
+@dataclasses.dataclass
+class QueuedRequest:
+    """One pending inference request in the serving queue."""
+
+    rid: int
+    tokens: np.ndarray  # (S,) prompt tokens
+    n_steps: int
+    t_nw_est_ms: float
+    t_nw_actual_ms: float
+    arrival_ms: float = 0.0
+
+
+@dataclasses.dataclass
+class CompletedRequest:
+    """Resolved outcome of one served request."""
+
+    rid: int
+    model_name: str
+    model_index: int
+    tokens: np.ndarray  # (n_steps,) generated tokens
+    exec_ms: float  # wall time of the variant batch this request rode in
+    remote_ms: float  # queue wait + network + execution
+    latency_ms: float  # user-observed (post-duplication)
+    accuracy: float  # quality of the result actually used
+    used_remote: bool
+    hedged: bool
+
+
 class ServingEngine:
     def __init__(self, max_len: int = 256):
         self.max_len = max_len
         self.variants: Dict[str, Variant] = {}
         self._prefill = {}
         self._decode = {}
+        self._warmed_shapes: set = set()
 
     def register(self, v: Variant):
         cfg = v.cfg
@@ -59,6 +97,8 @@ class ServingEngine:
         v = self.variants[name]
         tokens = jnp.asarray(tokens, jnp.int32)
         B, S = tokens.shape
+        if n_steps <= 0:
+            return np.zeros((B, 0), dtype=np.int32), 0.0
         t0 = time.perf_counter()
         cache, logits = self._prefill[name](v.params, tokens)
         out = []
@@ -71,6 +111,102 @@ class ServingEngine:
         jax.block_until_ready(logits)
         wall_ms = (time.perf_counter() - t0) * 1e3
         return np.stack([np.asarray(t) for t in out], axis=1), wall_ms
+
+    def serve_queue(
+        self,
+        scheduler,
+        requests: Sequence[QueuedRequest],
+        dispatch_ms: Optional[float] = None,
+    ) -> Tuple[List[CompletedRequest], Optional[RequestMetrics]]:
+        """Serve one chunk of queued requests with continuous batching.
+
+        One ``decide_batch`` call schedules the whole chunk; requests that
+        picked the same variant run as a single real ``generate`` batch
+        (prompts right-padded to the group's longest, rows padded to a
+        power of two to bound the set of compiled shapes).  Every request
+        in a variant batch shares the batch's wall time — the
+        continuous-batching cost model.  The first occurrence of each
+        (variant, shape) runs an untimed warm-up ``generate`` so XLA
+        compile time is never charged to requests or folded into the live
+        EWMA profiles.  Observed wall times feed
+        ``scheduler.observe_batch``, and outcomes resolve through the
+        scheduler's hedged duplication.
+
+        ``dispatch_ms`` is the scheduling-tick timestamp (e.g. the close
+        of the arrival window): each request's queueing wait
+        ``dispatch_ms - arrival_ms`` is charged against its budget at
+        selection time and included in its reported latency.  Defaults to
+        the chunk's latest arrival (zero wait when ``arrival_ms`` is
+        unset).  Ticks are assumed to execute independently — earlier
+        windows' wall time does not serialize into later ones.
+
+        Returns ``(completions, metrics)`` with completions in the input
+        order; ``metrics`` is None for an empty chunk.
+        """
+        if not requests:
+            return [], None
+        arrivals = np.asarray([r.arrival_ms for r in requests])
+        if dispatch_ms is None:
+            dispatch_ms = float(arrivals.max())
+        queue_wait = np.maximum(dispatch_ms - arrivals, 0.0)
+        decision = scheduler.decide_batch(
+            np.asarray([r.t_nw_est_ms for r in requests]) + queue_wait
+        )
+        n = len(requests)
+        exec_ms = np.empty(n)
+        gen_tokens: List[Optional[np.ndarray]] = [None] * n
+        for m in np.unique(decision.model_index):
+            name = scheduler.names[int(m)]
+            group = np.flatnonzero(decision.model_index == m)
+            width = max(len(requests[i].tokens) for i in group)
+            steps = max(requests[i].n_steps for i in group)
+            rows = pad_to_pow2(len(group))
+            batch = np.zeros((rows, width), dtype=np.int32)
+            for row, i in enumerate(group):
+                t = np.asarray(requests[i].tokens, dtype=np.int32)
+                batch[row, : len(t)] = t
+            shape_key = (name, rows, width, steps)
+            if shape_key not in self._warmed_shapes:
+                self.generate(name, batch, steps)  # compile, untimed
+                self._warmed_shapes.add(shape_key)
+            out, wall_ms = self.generate(name, batch, steps)
+            exec_ms[group] = wall_ms
+            for row, i in enumerate(group):
+                gen_tokens[i] = out[row, : requests[i].n_steps]
+        scheduler.observe_batch(decision.model_index, exec_ms)
+
+        remote_ms = (
+            queue_wait
+            + np.asarray([r.t_nw_actual_ms for r in requests])
+            + exec_ms
+        )
+        acc_used, latency, used_remote = scheduler.resolve_chunk(
+            decision, remote_ms
+        )
+        completions = [
+            CompletedRequest(
+                rid=requests[i].rid,
+                model_name=scheduler.names[int(decision.model_index[i])],
+                model_index=int(decision.model_index[i]),
+                tokens=gen_tokens[i],
+                exec_ms=float(exec_ms[i]),
+                remote_ms=float(remote_ms[i]),
+                latency_ms=float(latency[i]),
+                accuracy=float(acc_used[i]),
+                used_remote=bool(used_remote[i]),
+                hedged=bool(decision.hedged[i]),
+            )
+            for i in range(n)
+        ]
+        metrics = summarize(
+            accuracy_used=acc_used,
+            latency_ms=latency,
+            t_sla_ms=scheduler.cfg.t_sla_ms,
+            model_names=scheduler.names,
+            model_index=decision.model_index,
+            used_remote=used_remote,
+        )
+        return completions, metrics
 
     def measure_profiles(
         self, prompt_len: int, gen_tokens: int, batch: int = 1, trials: int = 5,

@@ -1,0 +1,142 @@
+"""Trace-driven load generation for the serving front.
+
+Produces :class:`LoadTrace` objects — per-request arrival timestamps plus
+network times (and the server's estimate of them) — that drive both the
+offline scheduler (``MDInferenceScheduler.run_trace`` consumes the network
+columns) and the live engine (``ServingEngine.serve_queue`` consumes
+arrival-windowed chunks, i.e. continuous batching ticks).
+
+Arrival processes:
+
+* :class:`PoissonArrivals` — memoryless open-loop traffic at a target rate.
+* :class:`BurstyArrivals` — a two-state Markov-modulated Poisson process:
+  most of the time the base rate, occasionally a burst at
+  ``burst_factor`` × the base rate (flash crowds / synchronized clients).
+
+Network times come from any :class:`repro.core.network.NetworkModel`; the
+named paper traces (university / residential / LTE) are exposed through
+:data:`repro.core.network.NAMED_TRACES`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core.network import Estimator, NetworkModel
+
+__all__ = [
+    "ArrivalProcess",
+    "PoissonArrivals",
+    "BurstyArrivals",
+    "LoadTrace",
+    "make_trace",
+    "iter_windows",
+]
+
+
+class ArrivalProcess:
+    """Samples per-request arrival timestamps (ms, non-decreasing)."""
+
+    def sample_arrivals_ms(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals(ArrivalProcess):
+    rate_rps: float = 100.0
+
+    def sample_arrivals_ms(self, rng, n):
+        gaps = rng.exponential(1e3 / self.rate_rps, size=n)
+        return np.cumsum(gaps)
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstyArrivals(ArrivalProcess):
+    """Two-state MMPP: base-rate Poisson with exponential-length bursts.
+
+    ``p_enter`` / ``p_exit`` are per-request transition probabilities, so
+    the expected burst length is ``1 / p_exit`` requests.
+    """
+
+    rate_rps: float = 100.0
+    burst_factor: float = 8.0
+    p_enter: float = 0.02
+    p_exit: float = 0.2
+
+    def sample_arrivals_ms(self, rng, n):
+        base_gap = 1e3 / self.rate_rps
+        burst_gap = base_gap / self.burst_factor
+        gaps = np.empty(n)
+        flips = rng.random(n)
+        raw = rng.exponential(1.0, size=n)
+        in_burst = False
+        for i in range(n):
+            if in_burst:
+                if flips[i] < self.p_exit:
+                    in_burst = False
+            elif flips[i] < self.p_enter:
+                in_burst = True
+            gaps[i] = raw[i] * (burst_gap if in_burst else base_gap)
+        return np.cumsum(gaps)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadTrace:
+    """One generated request stream (arrival-ordered)."""
+
+    arrival_ms: np.ndarray  # (R,) non-decreasing arrival timestamps
+    t_nw_ms: np.ndarray  # (R,) actual round-trip network times
+    t_nw_est_ms: np.ndarray  # (R,) server-side estimates of t_nw_ms
+
+    def __len__(self) -> int:
+        return len(self.arrival_ms)
+
+    @property
+    def duration_ms(self) -> float:
+        return float(self.arrival_ms[-1]) if len(self.arrival_ms) else 0.0
+
+    @property
+    def offered_rps(self) -> float:
+        d = self.duration_ms
+        return len(self) / (d / 1e3) if d > 0 else float("inf")
+
+
+def make_trace(
+    n: int,
+    arrivals: ArrivalProcess,
+    network: NetworkModel,
+    estimator: Optional[Estimator] = None,
+    seed: int = 0,
+) -> LoadTrace:
+    """Draw a request stream: arrivals x network times x estimates."""
+    rng = np.random.default_rng(seed)
+    arrival_ms = arrivals.sample_arrivals_ms(rng, n)
+    t_nw = network.sample(rng, n)
+    t_est = t_nw if estimator is None else estimator.estimate(rng, t_nw)
+    return LoadTrace(
+        arrival_ms=np.asarray(arrival_ms, dtype=np.float64),
+        t_nw_ms=np.asarray(t_nw, dtype=np.float64),
+        t_nw_est_ms=np.asarray(t_est, dtype=np.float64),
+    )
+
+
+def iter_windows(trace: LoadTrace, window_ms: float) -> Iterator[np.ndarray]:
+    """Group a trace into scheduling-tick windows (continuous batching).
+
+    Yields index arrays: all requests whose arrival falls in
+    ``[k*window_ms, (k+1)*window_ms)``, in arrival order, skipping empty
+    windows.  Every request appears in exactly one window.
+    """
+    if window_ms <= 0:
+        raise ValueError(f"window_ms must be > 0, got {window_ms}")
+    n = len(trace)
+    if n == 0:
+        return
+    buckets = np.floor_divide(trace.arrival_ms, window_ms).astype(np.int64)
+    start = 0
+    while start < n:
+        stop = int(np.searchsorted(buckets, buckets[start], side="right"))
+        yield np.arange(start, stop)
+        start = stop

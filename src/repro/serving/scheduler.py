@@ -1,4 +1,4 @@
-"""MDInference as a first-class serving scheduler.
+"""MDInference as a first-class serving scheduler — batched online core.
 
 Online version of the paper's algorithm: per request it estimates the
 network time, budgets, runs the three-stage selection, and hedges with the
@@ -7,20 +7,56 @@ fast tier (straggler mitigation).  Unlike the offline simulator it also
 sigma) — the paper's stage-3 exploration exists precisely so that stale
 profiles (queueing transients, concept drift, §V-A) get re-discovered; the
 online update closes that loop.
+
+Batched API
+-----------
+The scheduler operates on *chunks* of requests at once:
+
+* :meth:`MDInferenceScheduler.decide_batch` — vectorized selection for a
+  chunk of network-time estimates.  Selection probabilities come from the
+  jitted policy registry (:data:`repro.core.baselines.POLICY_PROBABILITIES`,
+  ``mdinference`` by default); the concrete model per request is sampled
+  host-side by inverse-CDF against a pre-drawn uniform, so the random
+  stream is *independent of chunking*.
+* :meth:`MDInferenceScheduler.observe_batch` — folds a chunk of observed
+  execution times into the live EWMA profiles, replaying each model's
+  observations in arrival order (bit-identical to scalar ``observe`` calls).
+* :meth:`MDInferenceScheduler.run_trace` — chunked trace-driven loop.  All
+  randomness (selection uniforms, execution z-scores, on-device z-scores)
+  is drawn up-front, so ``chunk_size=1`` and ``chunk_size=1024`` consume
+  identical draws.  With ``profile_ewma=0`` the two produce *identical*
+  model choices and metrics; with EWMA on, chunking freezes the profiles
+  within a chunk (selection sees chunk-start profiles) and the paths agree
+  within statistical tolerance.
+
+``chunk_size=1`` is the scalar reference path; the per-request
+:meth:`decide` / :meth:`observe` methods are thin wrappers over the chunk
+API and remain the convenient interface for interactive use.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.baselines import get_policy_probabilities
 from repro.core.duplication import HedgePolicy, resolve_duplication
 from repro.core.registry import ModelProfile, ModelRegistry
-from repro.core.selection import select_ref
 from repro.core.sla import RequestMetrics, summarize
 
-__all__ = ["SchedulerConfig", "MDInferenceScheduler", "Decision"]
+__all__ = [
+    "SchedulerConfig",
+    "MDInferenceScheduler",
+    "Decision",
+    "BatchDecision",
+    "pad_to_pow2",
+]
+
+_EXEC_FLOOR_MS = 0.1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +66,8 @@ class SchedulerConfig:
     hedge: HedgePolicy = dataclasses.field(default_factory=HedgePolicy)
     profile_ewma: float = 0.05  # 0 disables online profile updates
     seed: int = 0
+    algorithm: str = "mdinference"  # any repro.core.baselines policy
+    chunk_size: int = 256  # 1 == scalar reference path
 
 
 @dataclasses.dataclass
@@ -39,6 +77,52 @@ class Decision:
     hedged: bool
     t_budget_ms: float
     fallback: bool
+
+
+@dataclasses.dataclass
+class BatchDecision:
+    """Vectorized scheduling decision for a chunk of requests."""
+
+    model_index: np.ndarray  # (C,) int — model chosen per request
+    base_index: np.ndarray  # (C,) int — stage-1 base (hedging reference)
+    hedged: np.ndarray  # (C,) bool
+    t_budget_ms: np.ndarray  # (C,) float
+    fallback: np.ndarray  # (C,) bool
+
+    def __len__(self) -> int:
+        return len(self.model_index)
+
+    def scalar(self, i: int, names: list[str]) -> Decision:
+        return Decision(
+            model_index=int(self.model_index[i]),
+            model_name=names[int(self.model_index[i])],
+            hedged=bool(self.hedged[i]),
+            t_budget_ms=float(self.t_budget_ms[i]),
+            fallback=bool(self.fallback[i]),
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_policy(algorithm: str, utility_power: float):
+    """One compiled (probs, base, fallback) function per (policy, power)."""
+    fn = get_policy_probabilities(algorithm)
+
+    @jax.jit
+    def run(accuracy, mu, sigma, t_sla, t_budget):
+        return fn(
+            accuracy, mu, sigma, t_sla, t_budget, utility_power=utility_power
+        )
+
+    return run
+
+
+def pad_to_pow2(n: int) -> int:
+    """Round a chunk/batch length up to a power of two.
+
+    Shared by the scheduler (budget vectors) and the engine (generate
+    batches) to bound the set of jit-compiled shapes.
+    """
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
 
 
 class MDInferenceScheduler:
@@ -52,50 +136,137 @@ class MDInferenceScheduler:
         self.ondevice = ondevice
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
-        # Live profile estimates (start from the registry's priors).
+        # Live profile estimates (start from the registry's priors).  The
+        # EWMA tracks the variance; ``sigma`` is its derived view (kept in
+        # sync so the fold avoids lossy sqrt/square round trips).
         self.mu = registry.mu.astype(np.float64).copy()
         self.sigma = registry.sigma.astype(np.float64).copy()
+        self._var = self.sigma**2
         self.accuracy = registry.accuracy.astype(np.float64).copy()
         self.names = registry.names
+        self._policy = _jitted_policy(cfg.algorithm, cfg.utility_power)
         self._log: list[dict] = []
 
-    # -- the paper's per-request path ---------------------------------------
-    def decide(self, t_nw_est_ms: float) -> Decision:
-        reg = ModelRegistry(
-            [
-                ModelProfile(n, a, m, s)
-                for n, a, m, s in zip(self.names, self.accuracy, self.mu, self.sigma)
-            ]
+    # -- batched decision path ----------------------------------------------
+    def decide_batch(
+        self,
+        t_nw_est_ms: np.ndarray,
+        *,
+        uniforms: Optional[np.ndarray] = None,
+    ) -> BatchDecision:
+        """Vectorized selection for a chunk of network-time estimates.
+
+        ``uniforms`` (one U[0,1) draw per request) lets callers pre-draw the
+        sampling randomness; when omitted the scheduler's own rng is used.
+        """
+        t_nw_est_ms = np.atleast_1d(np.asarray(t_nw_est_ms, dtype=np.float64))
+        n = len(t_nw_est_ms)
+        budgets = self.cfg.t_sla_ms - t_nw_est_ms
+        if uniforms is None:
+            uniforms = self.rng.random(n)
+
+        # Jit-friendly: pad the budget vector to a power-of-two length so
+        # arbitrary chunk sizes reuse a handful of compiled shapes.
+        padded = pad_to_pow2(n)
+        budgets_in = np.full(padded, -1.0, dtype=np.float32)
+        budgets_in[:n] = budgets
+        probs, base, fallback = self._policy(
+            jnp.asarray(self.accuracy, jnp.float32),
+            jnp.asarray(self.mu, jnp.float32),
+            jnp.asarray(self.sigma, jnp.float32),
+            jnp.float32(self.cfg.t_sla_ms),
+            jnp.asarray(budgets_in),
         )
-        budget = self.cfg.t_sla_ms - t_nw_est_ms
-        sel = select_ref(
-            reg, budget, self.rng, utility_power=self.cfg.utility_power
+        probs = np.asarray(probs, dtype=np.float64)[:n]
+        base = np.asarray(base)[:n].astype(np.int64)
+        fallback = np.asarray(fallback)[:n]
+
+        # Inverse-CDF sampling against the pre-drawn uniforms: the result for
+        # request i depends only on (profiles, budget_i, u_i), never on chunk
+        # boundaries.  `<=` (not `<`) so u == 0.0 still lands on the first
+        # positive-mass index rather than unconditionally picking index 0.
+        cum = np.cumsum(probs, axis=1)
+        total = cum[:, -1:]
+        idx = np.minimum(
+            (cum <= uniforms[:, None] * total).sum(axis=1), probs.shape[1] - 1
+        ).astype(np.int64)
+
+        hedged = np.asarray(
+            self.cfg.hedge.should_hedge(budgets, self.mu[base], self.sigma[base]),
+            dtype=bool,
         )
-        base_mu = self.mu[sel.base_index]
-        base_sigma = self.sigma[sel.base_index]
-        hedged = bool(
-            self.cfg.hedge.should_hedge(
-                np.asarray([budget]), np.asarray([base_mu]), np.asarray([base_sigma])
-            )[0]
-        )
-        return Decision(
-            model_index=sel.index,
-            model_name=self.names[sel.index],
+        return BatchDecision(
+            model_index=idx,
+            base_index=base,
             hedged=hedged,
-            t_budget_ms=budget,
-            fallback=sel.fallback,
+            t_budget_ms=budgets,
+            fallback=fallback,
         )
 
-    def observe(self, model_index: int, exec_ms: float):
-        """EWMA profile update from an observed execution (drift handling)."""
+    # -- the paper's per-request path (scalar wrappers) ----------------------
+    def decide(self, t_nw_est_ms: float) -> Decision:
+        d = self.decide_batch(np.asarray([t_nw_est_ms]))
+        return d.scalar(0, self.names)
+
+    def observe_batch(self, model_index: np.ndarray, exec_ms: np.ndarray):
+        """Fold a chunk of observations into the EWMA profiles.
+
+        Observations are replayed per model in arrival order, so the result
+        is identical to issuing scalar :meth:`observe` calls one by one.
+        """
         a = self.cfg.profile_ewma
         if a <= 0:
             return
-        delta = exec_ms - self.mu[model_index]
-        self.mu[model_index] += a * delta
-        var = self.sigma[model_index] ** 2
-        var = (1 - a) * (var + a * delta * delta)
-        self.sigma[model_index] = np.sqrt(max(var, 1e-6))
+        model_index = np.atleast_1d(np.asarray(model_index))
+        exec_ms = np.atleast_1d(np.asarray(exec_ms, dtype=np.float64))
+        for m in np.unique(model_index):
+            mu = self.mu[m]
+            var = self._var[m]
+            for x in exec_ms[model_index == m]:
+                delta = x - mu
+                mu += a * delta
+                var = max((1 - a) * (var + a * delta * delta), 1e-6)
+            self.mu[m] = mu
+            self._var[m] = var
+            self.sigma[m] = np.sqrt(var)
+
+    def observe(self, model_index: int, exec_ms: float):
+        """EWMA profile update from an observed execution (drift handling)."""
+        self.observe_batch(np.asarray([model_index]), np.asarray([exec_ms]))
+
+    # -- outcome resolution ---------------------------------------------------
+    def resolve_chunk(
+        self,
+        decision: BatchDecision,
+        remote_latency_ms: np.ndarray,
+        ondevice_ms: Optional[np.ndarray] = None,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Resolve a chunk through hedged duplication.
+
+        Returns ``(accuracy_used, latency_ms, used_remote)``.  Non-hedged
+        requests keep their remote outcome; hedged requests race the
+        on-device duplicate via :func:`resolve_duplication`.
+        """
+        remote_latency_ms = np.asarray(remote_latency_ms, dtype=np.float64)
+        n = len(remote_latency_ms)
+        if ondevice_ms is None:
+            ondevice_ms = np.maximum(
+                self.ondevice.mu_ms
+                + self.ondevice.sigma_ms * self.rng.standard_normal(n),
+                _EXEC_FLOOR_MS,
+            )
+        sel_acc = self.accuracy[decision.model_index]
+        out = resolve_duplication(
+            remote_latency_ms,
+            sel_acc,
+            ondevice_ms,
+            self.ondevice.accuracy,
+            self.cfg.t_sla_ms,
+        )
+        acc_used = np.where(decision.hedged, out.accuracy, sel_acc)
+        latency = np.where(decision.hedged, out.latency_ms, remote_latency_ms)
+        used_remote = np.where(decision.hedged, out.used_remote, True)
+        return acc_used, latency, used_remote
 
     # -- trace-driven loop ----------------------------------------------------
     def run_trace(
@@ -103,55 +274,67 @@ class MDInferenceScheduler:
         t_nw_actual: np.ndarray,
         t_nw_est: Optional[np.ndarray] = None,
         exec_sampler: Optional[Callable[[int, np.random.Generator], float]] = None,
+        chunk_size: Optional[int] = None,
     ) -> RequestMetrics:
-        """Serve a trace of requests (one per network sample)."""
+        """Serve a trace of requests (one per network sample), in chunks.
+
+        All randomness is pre-drawn up-front, so the outcome with
+        ``profile_ewma=0`` is independent of ``chunk_size``; with EWMA
+        enabled, ``chunk_size=1`` is the scalar reference behavior.
+        """
         t_nw_actual = np.asarray(t_nw_actual, dtype=np.float64)
         if t_nw_est is None:
             t_nw_est = t_nw_actual
+        t_nw_est = np.asarray(t_nw_est, dtype=np.float64)
+        chunk = self.cfg.chunk_size if chunk_size is None else chunk_size
+        if chunk < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk}")
         n = len(t_nw_actual)
+
+        # Pre-drawn randomness: selection uniforms, execution z-scores,
+        # on-device z-scores.  One draw per request regardless of chunking.
+        u_sel = self.rng.random(n)
+        z_exec = self.rng.standard_normal(n)
+        z_ondev = self.rng.standard_normal(n)
+
         acc_used = np.empty(n)
         lat = np.empty(n)
         used_remote = np.empty(n, bool)
         idxs = np.empty(n, np.int64)
 
-        for i in range(n):
-            d = self.decide(float(t_nw_est[i]))
-            idxs[i] = d.model_index
+        for lo in range(0, n, chunk):
+            hi = min(lo + chunk, n)
+            sl = slice(lo, hi)
+            d = self.decide_batch(t_nw_est[sl], uniforms=u_sel[sl])
+            idxs[sl] = d.model_index
             if exec_sampler is None:
-                exec_ms = max(
-                    self.rng.normal(self.mu[d.model_index], self.sigma[d.model_index]),
-                    0.1,
+                exec_ms = np.maximum(
+                    self.mu[d.model_index]
+                    + self.sigma[d.model_index] * z_exec[sl],
+                    _EXEC_FLOOR_MS,
                 )
             else:
-                exec_ms = exec_sampler(d.model_index, self.rng)
-            self.observe(d.model_index, exec_ms)
-            remote = t_nw_actual[i] + exec_ms
-            if d.hedged:
-                ondev_ms = max(
-                    self.rng.normal(self.ondevice.mu_ms, self.ondevice.sigma_ms), 0.1
+                exec_ms = np.asarray(
+                    [exec_sampler(int(m), self.rng) for m in d.model_index]
                 )
-                out = resolve_duplication(
-                    np.asarray([remote]),
-                    np.asarray([self.accuracy[d.model_index]]),
-                    np.asarray([ondev_ms]),
-                    self.ondevice.accuracy,
-                    self.cfg.t_sla_ms,
-                )
-                acc_used[i] = out.accuracy[0]
-                lat[i] = out.latency_ms[0]
-                used_remote[i] = out.used_remote[0]
-            else:
-                acc_used[i] = self.accuracy[d.model_index]
-                lat[i] = remote
-                used_remote[i] = True
-            self._log.append(
-                {
-                    "model": d.model_name,
-                    "hedged": d.hedged,
-                    "remote_ms": remote,
-                    "latency_ms": lat[i],
-                }
+            self.observe_batch(d.model_index, exec_ms)
+            remote = t_nw_actual[sl] + exec_ms
+            ondev_ms = np.maximum(
+                self.ondevice.mu_ms + self.ondevice.sigma_ms * z_ondev[sl],
+                _EXEC_FLOOR_MS,
             )
+            acc_used[sl], lat[sl], used_remote[sl] = self.resolve_chunk(
+                d, remote, ondev_ms
+            )
+            for j in range(hi - lo):
+                self._log.append(
+                    {
+                        "model": self.names[int(d.model_index[j])],
+                        "hedged": bool(d.hedged[j]),
+                        "remote_ms": float(remote[j]),
+                        "latency_ms": float(lat[lo + j]),
+                    }
+                )
 
         return summarize(
             accuracy_used=acc_used,

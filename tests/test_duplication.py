@@ -1,7 +1,6 @@
 """Unit + property tests for request duplication (§V-B)."""
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
+from hypothesis_compat import given, settings, st
 
 from repro.core.duplication import (
     DEFAULT_ON_DEVICE,
@@ -50,12 +49,12 @@ def test_violation_only_when_ondevice_slower_than_sla():
     assert out.latency_ms[0] == 60.0
 
 
-@hypothesis.given(
+@given(
     st.lists(st.floats(1.0, 2000.0), min_size=1, max_size=64),
     st.floats(10.0, 500.0),
     st.floats(1.0, 200.0),
 )
-@hypothesis.settings(max_examples=200, deadline=None)
+@settings(max_examples=200, deadline=None)
 def test_duplication_bounds_latency(remote, sla, ondev):
     r = np.asarray(remote)
     out = resolve_duplication(

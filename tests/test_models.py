@@ -1,11 +1,10 @@
 """Model-level correctness: decode == teacher forcing, attention oracles,
 recurrent-block equivalences, MoE routing semantics."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis_compat import given, settings, st
 
 from repro.configs import reduced
 from repro.models import moe as moe_mod
@@ -74,7 +73,7 @@ def test_flash_prefix_lm():
     np.testing.assert_allclose(out, ref, atol=2e-5)
 
 
-@hypothesis.given(
+@given(
     st.integers(1, 3),  # batch
     st.sampled_from([16, 32, 48, 64]),  # seq
     st.sampled_from([(2, 1), (2, 2), (4, 2)]),  # heads
@@ -82,7 +81,7 @@ def test_flash_prefix_lm():
     st.sampled_from([16, 32]),  # chunk
     st.booleans(),  # causal
 )
-@hypothesis.settings(max_examples=25, deadline=None)
+@settings(max_examples=25, deadline=None)
 def test_flash_property(B, S, heads, HD, chunk, causal):
     NQ, NKV = heads
     keys = jax.random.split(jax.random.key(S * HD + NQ), 3)
@@ -258,8 +257,8 @@ def test_mlstm_chunkwise_equals_recurrent():
     np.testing.assert_allclose(jnp.concatenate(outs, 1), full, atol=1e-5)
 
 
-@hypothesis.given(st.integers(0, 10_000), st.sampled_from([8, 16, 32]))
-@hypothesis.settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([8, 16, 32]))
+@settings(max_examples=20, deadline=None)
 def test_rglru_state_bounded(seed, S):
     """RG-LRU normalizer keeps |h| bounded for arbitrary inputs."""
     cfg = reduced("recurrentgemma-2b")

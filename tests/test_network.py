@@ -1,8 +1,7 @@
 """Network models/estimators: calibration quantiles + property tests."""
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+from hypothesis_compat import given, settings, st
 
 from repro.core.network import (
     EWMAEstimator,
@@ -80,10 +79,10 @@ def test_ewma_estimator_lags():
     assert est[-1] > 190.0  # converges
 
 
-@hypothesis.given(
+@given(
     st.floats(10.0, 500.0), st.floats(0.0, 1.5), st.integers(0, 2**31 - 1)
 )
-@hypothesis.settings(max_examples=50, deadline=None)
+@settings(max_examples=50, deadline=None)
 def test_networks_always_positive(mean, cv, seed):
     rng = np.random.default_rng(seed)
     for net in (FixedCVNetwork(mean, cv), LognormalNetwork(mean, max(cv, 0.01))):

@@ -1,0 +1,208 @@
+"""Batched online scheduler: scalar-path equivalence + invariants.
+
+The batched ``run_trace`` pre-draws all randomness, so with
+``profile_ewma=0`` the outcome must be *identical* for any chunk size; with
+EWMA enabled, ``chunk_size=1`` is the scalar reference and larger chunks
+(which freeze profiles within a chunk) must agree within statistical
+tolerance.  Property-based invariants (hedging never hurts attainment,
+stage-1 accuracy is monotone in budget, sigma stays positive) are guarded
+by the optional-hypothesis shim.
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.configs.mdinference_zoo import paper_zoo
+from repro.core.duplication import HedgePolicy
+from repro.core.registry import ModelProfile, ModelRegistry
+from repro.serving.profiles import ONDEVICE_TIER
+from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
+
+ZOO = paper_zoo()
+
+
+def _trace(n=400, seed=0, mean=100.0, spread=80.0):
+    rng = np.random.default_rng(seed)
+    return np.abs(rng.normal(mean, spread, n)) + 1.0
+
+
+def _run(chunk, *, t_nw, t_sla=250.0, ewma=0.0, hedge=None, seed=3,
+         algorithm="mdinference", registry=None):
+    cfg = SchedulerConfig(
+        t_sla_ms=t_sla,
+        profile_ewma=ewma,
+        seed=seed,
+        chunk_size=chunk,
+        algorithm=algorithm,
+        hedge=hedge if hedge is not None else HedgePolicy(),
+    )
+    sched = MDInferenceScheduler(registry or ZOO, ONDEVICE_TIER, cfg)
+    metrics = sched.run_trace(t_nw)
+    choices = [r["model"] for r in sched.log]
+    return sched, metrics, choices
+
+
+# ---------------------------------------------------------------------------
+# Batched == scalar equivalence (the tentpole's correctness contract).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk", [2, 64, 1000])
+@pytest.mark.parametrize(
+    "hedge",
+    [HedgePolicy(), HedgePolicy(always=False, deadline_headroom_ms=-1e12)],
+    ids=["duplication_on", "duplication_off"],
+)
+def test_batched_matches_scalar_ewma_off(chunk, hedge):
+    t_nw = _trace()
+    _, m1, c1 = _run(1, t_nw=t_nw, hedge=hedge)
+    _, mc, cc = _run(chunk, t_nw=t_nw, hedge=hedge)
+    assert c1 == cc  # identical per-request model choices
+    assert m1.model_usage == mc.model_usage
+    np.testing.assert_allclose(m1.aggregate_accuracy, mc.aggregate_accuracy)
+    np.testing.assert_allclose(m1.mean_latency_ms, mc.mean_latency_ms)
+    np.testing.assert_allclose(m1.sla_attainment, mc.sla_attainment)
+    np.testing.assert_allclose(m1.p99_latency_ms, mc.p99_latency_ms)
+
+
+def test_batched_matches_scalar_fallback_heavy():
+    # SLA of 30ms: nearly every request has a sub-mu budget -> fallback path.
+    t_nw = _trace(mean=60.0, spread=30.0)
+    _, m1, c1 = _run(1, t_nw=t_nw, t_sla=30.0)
+    _, mc, cc = _run(128, t_nw=t_nw, t_sla=30.0)
+    assert c1 == cc
+    np.testing.assert_allclose(m1.mean_latency_ms, mc.mean_latency_ms)
+    assert m1.sla_attainment == mc.sla_attainment
+
+
+def test_batched_matches_scalar_with_ewma_within_tolerance():
+    # EWMA on: chunks freeze profiles mid-chunk, so choices may drift but
+    # the aggregate behavior must stay statistically equivalent.
+    t_nw = _trace(n=2000, seed=5)
+    _, m1, _ = _run(1, t_nw=t_nw, ewma=0.05)
+    _, mc, _ = _run(256, t_nw=t_nw, ewma=0.05)
+    assert abs(m1.aggregate_accuracy - mc.aggregate_accuracy) < 1.0
+    assert abs(m1.sla_attainment - mc.sla_attainment) < 0.02
+    assert abs(m1.mean_latency_ms - mc.mean_latency_ms) < 10.0
+
+
+def test_ewma_chunk1_profiles_match_scalar_observe():
+    # observe_batch replays observations in order: folding a chunk must be
+    # bit-identical to scalar observe calls.
+    a = MDInferenceScheduler(ZOO, ONDEVICE_TIER, SchedulerConfig(profile_ewma=0.2))
+    b = MDInferenceScheduler(ZOO, ONDEVICE_TIER, SchedulerConfig(profile_ewma=0.2))
+    rng = np.random.default_rng(7)
+    idx = rng.integers(0, len(ZOO), 200)
+    obs = rng.uniform(1.0, 400.0, 200)
+    for i, x in zip(idx, obs):
+        a.observe(int(i), float(x))
+    b.observe_batch(idx, obs)
+    np.testing.assert_array_equal(a.mu, b.mu)
+    np.testing.assert_array_equal(a.sigma, b.sigma)
+
+
+@pytest.mark.parametrize(
+    "algorithm", ["static_greedy", "budget_greedy", "static_latency"]
+)
+def test_baseline_policies_dispatch_batched(algorithm):
+    t_nw = _trace(n=200)
+    _, m1, c1 = _run(1, t_nw=t_nw, algorithm=algorithm)
+    _, mc, cc = _run(64, t_nw=t_nw, algorithm=algorithm)
+    assert c1 == cc
+    if algorithm == "static_latency":
+        assert set(c1) == {ZOO[ZOO.fastest_index].name}
+
+
+def test_policy_registries_stay_in_sync():
+    """ALGORITHMS and POLICY_PROBABILITIES implement each policy twice;
+    this pins them to each other so a tweak to one can't silently diverge.
+    Deterministic policies must agree exactly (argmax of the probability
+    row == the sampled index); stochastic ones must sample inside the
+    probability row's support."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.baselines import ALGORITHMS, POLICY_PROBABILITIES
+
+    assert set(ALGORITHMS) == set(POLICY_PROBABILITIES)
+    acc = jnp.asarray(ZOO.accuracy)
+    mu = jnp.asarray(ZOO.mu)
+    sigma = jnp.asarray(ZOO.sigma)
+    t_sla = jnp.float32(250.0)
+    budgets = jnp.asarray(np.linspace(-20.0, 260.0, 57), jnp.float32)
+    deterministic = {
+        "static_greedy", "budget_greedy", "oracle",
+        "static_accuracy", "static_latency", "related_accurate",
+    }
+    for name in ALGORITHMS:
+        idx, fb = ALGORITHMS[name](jax.random.key(0), acc, mu, sigma, t_sla, budgets)
+        probs, _, fb_p = POLICY_PROBABILITIES[name](acc, mu, sigma, t_sla, budgets)
+        probs = np.asarray(probs)
+        np.testing.assert_array_equal(np.asarray(fb), np.asarray(fb_p))
+        if name in deterministic:
+            np.testing.assert_array_equal(np.asarray(idx), probs.argmax(axis=-1))
+        else:
+            assert np.all(probs[np.arange(len(budgets)), np.asarray(idx)] > 0)
+
+
+def test_decide_batch_uses_live_profiles():
+    reg = ModelRegistry(
+        [
+            ModelProfile("fast", 50.0, 10.0, 0.5),
+            ModelProfile("big", 90.0, 100.0, 1.0),
+        ]
+    )
+    sched = MDInferenceScheduler(
+        reg, ONDEVICE_TIER, SchedulerConfig(t_sla_ms=250.0, profile_ewma=0.3)
+    )
+    d = sched.decide_batch(np.full(8, 100.0))
+    assert np.all(d.model_index == 1)
+    sched.observe_batch(np.full(30, 1), np.full(30, 400.0))
+    d = sched.decide_batch(np.full(8, 100.0))
+    assert np.all(d.model_index == 0)  # degraded 'big' abandoned
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants (skipped when hypothesis is unavailable).
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 2**31 - 1), st.floats(60.0, 400.0))
+@settings(max_examples=20, deadline=None)
+def test_hedging_never_increases_miss_rate(seed, t_sla):
+    """On the same draws, duplication can only improve SLA attainment."""
+    t_nw = _trace(n=300, seed=seed)
+    _, hedged, _ = _run(64, t_nw=t_nw, t_sla=t_sla, seed=seed)
+    _, unhedged, _ = _run(
+        64, t_nw=t_nw, t_sla=t_sla, seed=seed,
+        hedge=HedgePolicy(always=False, deadline_headroom_ms=-1e12),
+    )
+    assert hedged.sla_attainment >= unhedged.sla_attainment - 1e-12
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_base_accuracy_monotone_in_budget(seed):
+    """Shrinking t_budget never raises the stage-1 base model's accuracy."""
+    rng = np.random.default_rng(seed)
+    sched = MDInferenceScheduler(ZOO, ONDEVICE_TIER, SchedulerConfig())
+    t_nw = np.sort(rng.uniform(0.0, 260.0, 64))  # budgets shrink with index
+    d = sched.decide_batch(t_nw)
+    base_acc = sched.accuracy[d.base_index]
+    feasible = ~d.fallback
+    # Among non-fallback rows, accuracy is non-increasing as budget shrinks.
+    acc_seq = base_acc[feasible]
+    assert np.all(np.diff(acc_seq) <= 1e-12)
+
+
+@given(
+    st.lists(st.floats(0.0, 1e6), min_size=1, max_size=64),
+    st.floats(0.01, 0.99),
+)
+@settings(max_examples=50, deadline=None)
+def test_observe_keeps_sigma_positive(observations, alpha):
+    """sigma stays positive and finite for any finite observation stream."""
+    sched = MDInferenceScheduler(
+        ZOO, ONDEVICE_TIER, SchedulerConfig(profile_ewma=alpha)
+    )
+    for x in observations:
+        sched.observe(0, x)
+    assert sched.sigma[0] > 0.0
+    assert np.isfinite(sched.sigma[0])
+    assert np.isfinite(sched.mu[0])

@@ -1,10 +1,9 @@
 """Unit + property tests for the three-stage selection algorithm (§V-A)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis_compat import given, settings, st
 
 from repro.configs.mdinference_zoo import ablation_zoo, paper_zoo
 from repro.core.registry import ModelProfile, ModelRegistry
@@ -178,8 +177,8 @@ profile_lists = st.lists(
 )
 
 
-@hypothesis.given(profile_lists, st.floats(-100.0, 1000.0), st.integers(0, 2**31 - 1))
-@hypothesis.settings(max_examples=200, deadline=None)
+@given(profile_lists, st.floats(-100.0, 1000.0), st.integers(0, 2**31 - 1))
+@settings(max_examples=200, deadline=None)
 def test_selection_invariants(raw, budget, seed):
     reg = ModelRegistry(
         [ModelProfile(f"m{i}", a, m, s) for i, (a, m, s) in enumerate(raw)]
@@ -214,11 +213,11 @@ def test_selection_invariants(raw, budget, seed):
             assert probs[r.index] > 0.0
 
 
-@hypothesis.given(
+@given(
     profile_lists,
     st.lists(st.floats(-100.0, 1000.0), min_size=1, max_size=32),
 )
-@hypothesis.settings(max_examples=100, deadline=None)
+@settings(max_examples=100, deadline=None)
 def test_batch_probs_match_ref_structure(raw, budgets):
     reg = ModelRegistry(
         [ModelProfile(f"m{i}", a, m, s) for i, (a, m, s) in enumerate(raw)]

@@ -6,9 +6,16 @@ import pytest
 from repro.configs import reduced
 from repro.configs.mdinference_zoo import paper_zoo
 from repro.core.duplication import HedgePolicy
+from repro.core.network import FixedCVNetwork, lte_trace
 from repro.core.registry import ModelProfile, ModelRegistry
 from repro.models import transformer as T
-from repro.serving.engine import ServingEngine, Variant
+from repro.serving.engine import QueuedRequest, ServingEngine, Variant
+from repro.serving.loadgen import (
+    BurstyArrivals,
+    PoissonArrivals,
+    iter_windows,
+    make_trace,
+)
 from repro.serving.profiles import ONDEVICE_TIER, estimate_ms, lm_zoo_registry
 from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
 
@@ -102,3 +109,114 @@ def test_engine_generates_and_profiles():
     assert ms > 0
     reg = engine.measure_profiles(prompt_len=16, gen_tokens=2, trials=2)
     assert reg[0].mu_ms > 0
+
+
+def test_engine_generate_zero_steps():
+    """Regression: n_steps=0 used to crash on np.stack([])."""
+    engine = ServingEngine(max_len=32)
+    cfg = reduced("gemma-2b", n_layers=2)
+    params = T.init_params(cfg, jax.random.key(0))
+    engine.register(Variant("tiny", cfg, params, 42.0))
+    out, ms = engine.generate("tiny", np.zeros((3, 8), np.int32), 0)
+    assert out.shape == (3, 0)
+    assert out.dtype == np.int32
+    assert ms == 0.0
+
+
+def _two_tier_engine(seed=0):
+    engine = ServingEngine(max_len=48)
+    for name, width, quality in (("small", 32, 40.0), ("large", 64, 80.0)):
+        cfg = reduced(
+            "gemma-2b", d_model=width, n_layers=2,
+            n_heads=2, n_kv_heads=1, head_dim=width // 2,
+        )
+        params = T.init_params(cfg, jax.random.key(seed))
+        engine.register(Variant(name, cfg, params, quality))
+    return engine
+
+
+def test_serve_queue_continuous_batching():
+    engine = _two_tier_engine()
+    registry = engine.measure_profiles(prompt_len=8, gen_tokens=2, trials=2)
+    sched = MDInferenceScheduler(
+        registry, registry[0], SchedulerConfig(t_sla_ms=5_000.0, seed=0)
+    )
+    rng = np.random.default_rng(1)
+    requests = [
+        QueuedRequest(
+            rid=i,
+            tokens=rng.integers(0, 64, 8),
+            n_steps=2,
+            t_nw_est_ms=float(50.0 + 10 * i),
+            t_nw_actual_ms=float(50.0 + 10 * i),
+        )
+        for i in range(6)
+    ]
+    done, metrics = engine.serve_queue(sched, requests)
+    assert [c.rid for c in done] == [0, 1, 2, 3, 4, 5]
+    assert metrics.n_requests == 6
+    for c in done:
+        assert c.tokens.shape == (2,)
+        assert c.exec_ms > 0
+        assert c.latency_ms <= 5_000.0 + 1e-9  # hedged => bounded
+        assert c.model_name in {"small", "large"}
+    # Requests scheduled onto the same variant share one batch wall time.
+    by_model = {}
+    for c in done:
+        by_model.setdefault(c.model_name, set()).add(c.exec_ms)
+    for times in by_model.values():
+        assert len(times) == 1
+
+
+def test_serve_queue_empty_chunk():
+    engine = _two_tier_engine()
+    registry = engine.measure_profiles(prompt_len=8, gen_tokens=2, trials=2)
+    sched = MDInferenceScheduler(registry, registry[0], SchedulerConfig())
+    done, metrics = engine.serve_queue(sched, [])
+    assert done == [] and metrics is None
+
+
+# ---------------------------------------------------------------------------
+# Load generation.
+# ---------------------------------------------------------------------------
+def test_poisson_arrivals_hit_target_rate():
+    rng = np.random.default_rng(0)
+    arr = PoissonArrivals(rate_rps=200.0).sample_arrivals_ms(rng, 20_000)
+    assert np.all(np.diff(arr) >= 0)
+    measured_rps = len(arr) / (arr[-1] / 1e3)
+    assert abs(measured_rps - 200.0) / 200.0 < 0.05
+
+
+def test_bursty_arrivals_are_burstier_than_poisson():
+    rng = np.random.default_rng(0)
+    poisson = np.diff(PoissonArrivals(100.0).sample_arrivals_ms(rng, 20_000))
+    rng = np.random.default_rng(0)
+    bursty = np.diff(
+        BurstyArrivals(100.0, burst_factor=10.0).sample_arrivals_ms(rng, 20_000)
+    )
+    # MMPP gap distribution has a higher CV than exponential (CV ~= 1).
+    assert bursty.std() / bursty.mean() > poisson.std() / poisson.mean()
+
+
+def test_make_trace_and_windows_partition_requests():
+    trace = make_trace(
+        500, PoissonArrivals(100.0), FixedCVNetwork(100.0, 0.3), seed=4
+    )
+    assert len(trace) == 500
+    assert np.all(trace.t_nw_ms > 0)
+    np.testing.assert_array_equal(trace.t_nw_est_ms, trace.t_nw_ms)
+    seen = np.concatenate(list(iter_windows(trace, 50.0)))
+    np.testing.assert_array_equal(seen, np.arange(500))  # exactly once, in order
+    for w in iter_windows(trace, 50.0):
+        assert len(w) > 0
+        buckets = trace.arrival_ms[w] // 50.0
+        assert len(set(buckets)) == 1  # one scheduling tick per window
+
+
+def test_lte_trace_is_heavier_tailed_than_university():
+    from repro.core.network import university_trace
+
+    lte = np.asarray(lte_trace().trace_ms)
+    uni = np.asarray(university_trace().trace_ms)
+    assert np.mean(lte > 246.8) > np.mean(uni > 246.8)
+    assert lte.mean() > uni.mean()
