@@ -3,10 +3,11 @@
 The paper's experiment translated to the TPU serving stack: requests with a
 latency SLO arrive over variable networks; the scheduler picks an LM tier
 per request and hedges with the cheap tier.  Compares the same four
-algorithms as Table IV on the roofline-profiled zoo, and measures the
-scalar (``chunk_size=1``) vs batched scheduler throughput on a 10k-request
-trace (the tentpole claim: chunked selection through the jitted policy
-path is >=10x faster than per-request dispatch).
+algorithms as Table IV on the roofline-profiled zoo, measures the scalar
+(``chunk_size=1``) vs batched scheduler throughput on a 10k-request trace,
+and races the two hedge-resolution modes side by side: *measured* (real
+``OnDeviceBackend`` execution of the duplicate) vs *sampled* (the
+profile-sampled simulation fallback) on an identical request stream.
 
 Run:  PYTHONPATH=src python -m benchmarks.run --only serving
       PYTHONPATH=src:. python benchmarks/bench_serving.py --smoke
@@ -48,6 +49,86 @@ def _throughput_comparison(reg, t_nw, *, batched_chunk: int = 512):
          f"quality={m_b.aggregate_accuracy:.2f} attain={m_b.sla_attainment*100:.2f}% "
          f"chunk={batched_chunk} speedup={speedup:.1f}x")
     return speedup
+
+
+def _hedge_mode_comparison(*, n_requests: int, sla_ms: float, seed: int = 0):
+    """Measured-hedge (real OnDeviceBackend) vs sampled-hedge on one stream.
+
+    Builds a tiny two-tier engine, serves an identical open-loop trace with
+    both hedge-resolution modes, and emits latency/accuracy side by side.
+    """
+    import jax
+
+    from repro.configs import reduced
+    from repro.models import transformer as T
+    from repro.serving.backend import OnDeviceBackend
+    from repro.serving.engine import QueuedRequest, ServingEngine, Variant
+    from repro.serving.loadgen import PoissonArrivals, iter_windows, make_trace
+    from repro.core.network import LognormalNetwork
+
+    prompt, gen, window_ms = 8, 2, 200.0
+    # One hedge tier, one measured on-device profile, and one measured
+    # remote registry for BOTH modes, so the rows differ only in how the
+    # duplicate resolves (real execution vs profile samples), not in
+    # profile priors.
+    hedge = OnDeviceBackend.from_zoo(max_len=prompt + gen + 4)
+    ondevice = hedge.measure_profile(prompt_len=prompt, gen_tokens=gen, trials=2)
+    registry = None
+
+    def build(measured: bool):
+        nonlocal registry
+        engine = ServingEngine(
+            max_len=prompt + gen + 4, hedge_backend=hedge if measured else None
+        )
+        for name, width, quality in (("small", 32, 40.0), ("large", 64, 80.0)):
+            cfg = reduced(
+                "gemma-2b", d_model=width, n_layers=2,
+                n_heads=2, n_kv_heads=1, head_dim=width // 2,
+            )
+            engine.register(
+                Variant(name, cfg, T.init_params(cfg, jax.random.key(seed)), quality)
+            )
+        if registry is None:
+            registry = engine.measure_profiles(
+                prompt_len=prompt, gen_tokens=gen, trials=2
+            )
+        sched = MDInferenceScheduler(
+            registry, ondevice, SchedulerConfig(t_sla_ms=sla_ms, seed=seed)
+        )
+        return engine, sched
+
+    trace = make_trace(
+        n_requests, PoissonArrivals(50.0), LognormalNetwork(40.0, 0.6), seed=seed
+    )
+    for mode in ("measured", "sampled"):
+        engine, sched = build(mode == "measured")
+        rng = np.random.default_rng(seed)
+        done = []
+        t0 = time.perf_counter()
+        for window in iter_windows(trace, window_ms):
+            batch = [
+                QueuedRequest(
+                    rid=int(i),
+                    tokens=rng.integers(0, 256, prompt),
+                    n_steps=gen,
+                    t_nw_est_ms=float(trace.t_nw_est_ms[i]),
+                    t_nw_actual_ms=float(trace.t_nw_ms[i]),
+                    arrival_ms=float(trace.arrival_ms[i]),
+                )
+                for i in window
+            ]
+            tick = (trace.arrival_ms[window[0]] // window_ms + 1) * window_ms
+            done.extend(engine.serve_queue(sched, batch, dispatch_ms=tick)[0])
+        us = (time.perf_counter() - t0) * 1e6
+        lats = np.asarray([c.latency_ms for c in done])
+        accs = np.asarray([c.accuracy for c in done])
+        hedge_used = 1.0 - np.mean([c.used_remote for c in done])
+        emit(
+            f"serving/hedge/{mode}",
+            us / len(done),
+            f"quality={accs.mean():.2f} attain={np.mean(lats <= sla_ms)*100:.2f}% "
+            f"p99={np.percentile(lats, 99):.1f}ms hedge_used={hedge_used*100:.2f}%",
+        )
 
 
 def run(n_requests: int = 2_000, smoke: bool = False):
@@ -94,10 +175,15 @@ def run(n_requests: int = 2_000, smoke: bool = False):
             f"hedge_rate={hedged*100:.1f}% (duplication cost saved)",
         )
 
-    # Tentpole: scalar-vs-batched scheduler throughput on a 10k trace.
+    # Scalar-vs-batched scheduler throughput on a 10k trace (PR 1 tentpole).
     rng = np.random.default_rng(11)
     t_nw = university_trace().sample(rng, 1_000 if smoke else 10_000)
     _throughput_comparison(reg, t_nw)
+
+    # Two-tier hedge: measured (real OnDeviceBackend) vs sampled resolution
+    # on an identical stream (PR 2 tentpole).  The 150ms SLA makes some
+    # queue-delayed requests miss remotely, so the duplicate actually wins.
+    _hedge_mode_comparison(n_requests=24 if smoke else 120, sla_ms=150.0)
 
 
 if __name__ == "__main__":

@@ -1,12 +1,14 @@
-"""End-to-end serving example: MDInference over REAL model execution.
+"""End-to-end serving example: MDInference over REAL two-tier execution.
 
 Three functionally-equivalent LM tiers (tiny configs of the gemma / llama3 /
 qwen3 families) are built and profiled with real wall-clock measurements;
 an open-loop Poisson request stream is then served with continuous
 batching: each scheduling window is decided in one batched scheduler call,
 requests that picked the same tier run as one real ``generate`` batch, and
-hedged duplication bounds every response at the SLA.  This is the paper's
-Figure 1(d) running for real.
+every hedged request *also* runs on a real on-device hedge variant
+(``OnDeviceBackend``) so duplication resolves on measured wall time and
+bounds every response at the SLA.  This is the paper's Figure 1(d) running
+for real on both tiers.
 
 Run:  PYTHONPATH=src python examples/serve_mdinference.py
 """
@@ -14,5 +16,6 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     raise SystemExit(
-        main(["--requests", "30", "--sla", "2500", "--gen", "8", "--rate", "20"])
+        main(["--requests", "30", "--sla", "2500", "--gen", "8", "--rate", "20",
+              "--hedge", "measured"])
     )

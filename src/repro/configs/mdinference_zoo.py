@@ -1,17 +1,27 @@
-"""The paper's model zoo (Table III).
+"""The paper's model zoo (Table III) + the on-device hedge-tier recipe.
 
 Top-1 accuracy on ILSVRC-2012 and execution-latency statistics measured on
 an AWS p2.xlarge GPU server over 1 000 runs (values transcribed from the
 paper).  ``NasNet Fictional`` is the paper's synthetic low-accuracy copy of
 NasNet Large, used *only* in the §VI-C stage ablation.
+
+:data:`ONDEVICE_HEDGE` is the zoo's *executable* entry: the recipe for the
+real tiny variant that plays the paper's on-device duplicate
+(MobileNetV1_128 0.25, §V-B) in the serving stack.
+``repro.serving.backend.OnDeviceBackend`` registers it so hedged requests
+run on a second tier for real instead of sampling a latency profile.
 """
 from __future__ import annotations
+
+import dataclasses
 
 from repro.core.registry import ModelProfile, ModelRegistry
 
 __all__ = [
     "TABLE_III",
     "NASNET_FICTIONAL",
+    "HedgeVariantSpec",
+    "ONDEVICE_HEDGE",
     "paper_zoo",
     "ablation_zoo",
 ]
@@ -41,3 +51,38 @@ def paper_zoo() -> ModelRegistry:
 def ablation_zoo() -> ModelRegistry:
     """Zoo for the §VI-C decomposition study (adds NasNet Fictional)."""
     return ModelRegistry(TABLE_III + (NASNET_FICTIONAL,))
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgeVariantSpec:
+    """Recipe for the real on-device hedge tier.
+
+    The serving analogue of the paper's duplicate model: "most likely to
+    complete within any SLA", so the smallest config we can build.  The
+    quality score matches the paper's MobileNetV1_128 0.25 top-1 (41.4 %).
+    """
+
+    name: str = "hedge-xs (on-device)"
+    arch: str = "gemma-2b"
+    d_model: int = 32
+    n_layers: int = 1
+    n_heads: int = 2
+    n_kv_heads: int = 1
+    head_dim: int = 16
+    quality: float = 41.4
+
+    def config(self):
+        """Materialize the tiny same-family :class:`ModelConfig`."""
+        from repro.configs.archs import reduced
+
+        return reduced(
+            self.arch,
+            d_model=self.d_model,
+            n_layers=self.n_layers,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim,
+        )
+
+
+ONDEVICE_HEDGE = HedgeVariantSpec()

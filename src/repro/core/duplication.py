@@ -36,12 +36,19 @@ OnDeviceModel = ModelProfile  # alias: any profile may serve as the duplicate
 
 
 class DuplicationOutcome(NamedTuple):
-    """Vectorized resolution of duplicated requests."""
+    """Vectorized resolution of duplicated requests.
+
+    Carries the per-tier latencies the race was resolved on — with a real
+    hedge tier these are *measured* wall times (one per execution tier),
+    with the simulator they are profile samples.
+    """
 
     used_remote: np.ndarray  # (R,) bool — remote result arrived within SLA
     accuracy: np.ndarray  # (R,) accuracy of the result actually used
     latency_ms: np.ndarray  # (R,) user-observed response latency
     violation: np.ndarray  # (R,) bool — SLA missed even with duplication
+    remote_ms: np.ndarray  # (R,) remote tier's end-to-end latency
+    ondevice_ms: np.ndarray  # (R,) on-device duplicate's latency
 
 
 def resolve_duplication(
@@ -56,11 +63,14 @@ def resolve_duplication(
     Args:
       remote_latency_ms: (R,) end-to-end remote latency (network + execution).
       remote_accuracy: (R,) accuracy of the remotely-selected models.
-      ondevice_latency_ms: (R,) local execution latency of the duplicate.
+      ondevice_latency_ms: (R,) local execution latency of the duplicate —
+        measured hedge-tier wall time on the serving path, a profile sample
+        in simulation.
       ondevice_accuracy: accuracy of the on-device model.
       t_sla_ms: the response-time SLA.
     """
     remote_latency_ms = np.asarray(remote_latency_ms)
+    ondevice_latency_ms = np.asarray(ondevice_latency_ms)
     used_remote = remote_latency_ms <= t_sla_ms
     accuracy = np.where(used_remote, remote_accuracy, ondevice_accuracy)
     # If the remote result misses, the framework returns the duplicate's
@@ -75,6 +85,8 @@ def resolve_duplication(
         accuracy=accuracy,
         latency_ms=latency,
         violation=violation,
+        remote_ms=remote_latency_ms,
+        ondevice_ms=ondevice_latency_ms,
     )
 
 

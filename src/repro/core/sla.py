@@ -22,6 +22,8 @@ class RequestMetrics:
     p50_latency_ms: float
     p99_latency_ms: float
     model_usage: Dict[str, float]  # model name -> fraction of requests
+    mean_queue_wait_ms: float = 0.0  # scheduling-tick wait (0 when untracked)
+    p99_queue_wait_ms: float = 0.0
 
     def row(self) -> str:
         return (
@@ -40,8 +42,13 @@ def summarize(
     model_names: list[str],
     model_index: np.ndarray,
     used_remote: np.ndarray | None = None,
+    queue_wait_ms: np.ndarray | None = None,
 ) -> RequestMetrics:
-    """Build :class:`RequestMetrics` from per-request outcomes."""
+    """Build :class:`RequestMetrics` from per-request outcomes.
+
+    ``queue_wait_ms`` (per-request scheduling-tick wait) is optional —
+    trace-driven simulation has no queue, so its aggregates default to 0.
+    """
     accuracy_used = np.asarray(accuracy_used, dtype=np.float64)
     latency_ms = np.asarray(latency_ms, dtype=np.float64)
     n = len(latency_ms)
@@ -64,4 +71,10 @@ def summarize(
         p50_latency_ms=float(np.percentile(latency_ms, 50)),
         p99_latency_ms=float(np.percentile(latency_ms, 99)),
         model_usage=usage,
+        mean_queue_wait_ms=(
+            0.0 if queue_wait_ms is None else float(np.mean(queue_wait_ms))
+        ),
+        p99_queue_wait_ms=(
+            0.0 if queue_wait_ms is None else float(np.percentile(queue_wait_ms, 99))
+        ),
     )

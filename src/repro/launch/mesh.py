@@ -14,15 +14,26 @@ from repro.distributed.api import (
     AxisRules,
 )
 
-__all__ = ["make_production_mesh", "make_rules", "make_elastic_mesh"]
+__all__ = ["make_mesh", "make_production_mesh", "make_rules", "make_elastic_mesh"]
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist on newer jax;
+    older versions build Auto-mode meshes unconditionally, so omitting the
+    argument there is equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_rules(mesh, *, seq_parallel: bool = False,
@@ -38,10 +49,7 @@ def make_rules(mesh, *, seq_parallel: bool = False,
 
 def make_custom_mesh(data: int, model: int):
     """Arbitrary (data, model) factorization of one pod (hillclimb lever)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((data, model), ("data", "model"))
 
 
 def make_elastic_mesh(model_parallel: int = 16):
@@ -55,7 +63,4 @@ def make_elastic_mesh(model_parallel: int = 16):
     mp = min(model_parallel, n)
     while n % mp:
         mp -= 1
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n // mp, mp), ("data", "model"))

@@ -1,4 +1,10 @@
-"""Serving: MDInference scheduler (policy) + execution engine + load gen."""
+"""Serving: MDInference scheduler (policy) + execution backends + load gen."""
+from repro.serving.backend import (
+    ExecutionBackend,
+    JitBackend,
+    OnDeviceBackend,
+    build_hedge_variant,
+)
 from repro.serving.engine import (
     CompletedRequest,
     QueuedRequest,
@@ -22,7 +28,9 @@ from repro.serving.scheduler import (
 
 __all__ = [
     "BatchDecision", "BurstyArrivals", "CompletedRequest", "Decision",
-    "LoadTrace", "MDInferenceScheduler", "ONDEVICE_TIER", "PoissonArrivals",
-    "QueuedRequest", "SchedulerConfig", "ServingEngine", "V5E", "Variant",
-    "estimate_ms", "iter_windows", "lm_zoo_registry", "make_trace",
+    "ExecutionBackend", "JitBackend", "LoadTrace", "MDInferenceScheduler",
+    "ONDEVICE_TIER", "OnDeviceBackend", "PoissonArrivals", "QueuedRequest",
+    "SchedulerConfig", "ServingEngine", "V5E", "Variant",
+    "build_hedge_variant", "estimate_ms", "iter_windows", "lm_zoo_registry",
+    "make_trace",
 ]

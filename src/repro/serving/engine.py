@@ -1,44 +1,39 @@
-"""Serving engine: compiled prefill/decode executables per zoo variant.
+"""Serving engine: the policy-facing front over pluggable execution backends.
 
-This is the execution half of the serving stack (the scheduler is the
-policy half).  Each registered variant gets jitted prefill/decode functions
-and a measured latency profile; ``generate`` runs real batched decoding.
-On CPU this drives the end-to-end example with tiny variants; on a pod the
-same engine holds the per-arch compiled executables from the dry-run path.
+The engine no longer owns compiled executables — that is the
+:class:`repro.serving.backend.ExecutionBackend` layer's job.  The engine
+wires the scheduler (policy half) to two execution tiers:
+
+* ``backend`` — the remote tier (:class:`repro.serving.backend.JitBackend`
+  by default): per-variant jitted prefill/decode, real batched decoding.
+* ``hedge_backend`` — the optional on-device tier
+  (:class:`repro.serving.backend.OnDeviceBackend`): a real tiny duplicate
+  variant.  When present, hedged requests execute on *both* tiers and
+  duplication resolves on measured wall time; when absent, the scheduler
+  falls back to sampling its on-device latency profile (the simulator
+  reference path).
 
 The request-queue front (:meth:`ServingEngine.serve_queue`) is the
 continuous-batching layer: a chunk of queued requests is scheduled in one
 ``decide_batch`` call, grouped by selected variant, executed as one real
 ``generate`` batch per variant, observed back into the scheduler's live
-profiles, and resolved through hedged duplication.  Feed it arrival
-windows from :mod:`repro.serving.loadgen` to serve an open-loop trace.
+profiles (both tiers), and resolved through hedged duplication.  Feed it
+arrival windows from :mod:`repro.serving.loadgen` to serve an open-loop
+trace.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.registry import ModelProfile, ModelRegistry
+from repro.core.registry import ModelRegistry
 from repro.core.sla import RequestMetrics, summarize
-from repro.models import transformer as T
-from repro.models.config import ModelConfig
+from repro.serving.backend import ExecutionBackend, JitBackend, OnDeviceBackend, Variant
 from repro.serving.scheduler import pad_to_pow2
 
 __all__ = ["Variant", "ServingEngine", "QueuedRequest", "CompletedRequest"]
-
-
-@dataclasses.dataclass
-class Variant:
-    name: str
-    cfg: ModelConfig
-    params: dict
-    quality: float  # A(m) for the selection algorithm
 
 
 @dataclasses.dataclass
@@ -60,58 +55,62 @@ class CompletedRequest:
     rid: int
     model_name: str
     model_index: int
-    tokens: np.ndarray  # (n_steps,) generated tokens
+    # (n_steps,) generated tokens.  With a real hedge tier (hedge_measured)
+    # these come from the tier that answered; in the sampled-hedge
+    # simulation there is no duplicate execution, so they are always the
+    # remote model's output even when the simulated duplicate "wins".
+    tokens: np.ndarray
     exec_ms: float  # wall time of the variant batch this request rode in
     remote_ms: float  # queue wait + network + execution
     latency_ms: float  # user-observed (post-duplication)
     accuracy: float  # quality of the result actually used
     used_remote: bool
     hedged: bool
+    queue_wait_ms: float = 0.0  # dispatch tick - arrival (charged to budget)
+    ondevice_ms: Optional[float] = None  # duplicate's latency (hedged only)
+    hedge_measured: bool = False  # True: ondevice_ms is real wall time
+
+
+def _pad_batch(requests, rows_idx) -> Tuple[np.ndarray, int]:
+    """Right-pad a group's prompts into one (pow2-rows, width) batch."""
+    width = max(len(requests[i].tokens) for i in rows_idx)
+    batch = np.zeros((pad_to_pow2(len(rows_idx)), width), dtype=np.int32)
+    for row, i in enumerate(rows_idx):
+        t = np.asarray(requests[i].tokens, dtype=np.int32)
+        batch[row, : len(t)] = t
+    steps = max(requests[i].n_steps for i in rows_idx)
+    return batch, steps
 
 
 class ServingEngine:
-    def __init__(self, max_len: int = 256):
-        self.max_len = max_len
-        self.variants: Dict[str, Variant] = {}
-        self._prefill = {}
-        self._decode = {}
-        self._warmed_shapes: set = set()
+    def __init__(
+        self,
+        max_len: int = 256,
+        backend: Optional[ExecutionBackend] = None,
+        hedge_backend: Optional[OnDeviceBackend] = None,
+    ):
+        self.backend = backend if backend is not None else JitBackend(max_len)
+        self.hedge_backend = hedge_backend
+
+    # -- thin delegation to the remote tier ----------------------------------
+    @property
+    def max_len(self):
+        """The remote tier's sequence cap (owned by the backend)."""
+        return getattr(self.backend, "max_len", None)
+
+    @property
+    def variants(self):
+        return self.backend.variants
 
     def register(self, v: Variant):
-        cfg = v.cfg
-        self.variants[v.name] = v
-
-        @jax.jit
-        def prefill_fn(params, tokens):
-            return T.prefill(cfg, params, {"tokens": tokens}, max_len=self.max_len)
-
-        @jax.jit
-        def decode_fn(params, cache, token, pos):
-            return T.decode_step(cfg, params, cache, token, pos)
-
-        self._prefill[v.name] = prefill_fn
-        self._decode[v.name] = decode_fn
+        self.backend.register(v)
 
     def generate(self, name: str, tokens: np.ndarray, n_steps: int, greedy=True):
-        """Real batched generation.  Returns (generated (B, n_steps), wall_ms)."""
-        v = self.variants[name]
-        tokens = jnp.asarray(tokens, jnp.int32)
-        B, S = tokens.shape
-        if n_steps <= 0:
-            return np.zeros((B, 0), dtype=np.int32), 0.0
-        t0 = time.perf_counter()
-        cache, logits = self._prefill[name](v.params, tokens)
-        out = []
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        for i in range(n_steps):
-            out.append(tok)
-            pos = jnp.full((B,), S + i, jnp.int32)
-            logits, cache = self._decode[name](v.params, cache, tok, pos)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        jax.block_until_ready(logits)
-        wall_ms = (time.perf_counter() - t0) * 1e3
-        return np.stack([np.asarray(t) for t in out], axis=1), wall_ms
+        """Real batched generation on the remote tier.  Returns
+        (generated (B, n_steps), wall_ms)."""
+        return self.backend.generate(name, tokens, n_steps)
 
+    # -- continuous-batching front -------------------------------------------
     def serve_queue(
         self,
         scheduler,
@@ -121,24 +120,31 @@ class ServingEngine:
         """Serve one chunk of queued requests with continuous batching.
 
         One ``decide_batch`` call schedules the whole chunk; requests that
-        picked the same variant run as a single real ``generate`` batch
-        (prompts right-padded to the group's longest, rows padded to a
-        power of two to bound the set of compiled shapes).  Every request
-        in a variant batch shares the batch's wall time — the
-        continuous-batching cost model.  The first occurrence of each
-        (variant, shape) runs an untimed warm-up ``generate`` so XLA
-        compile time is never charged to requests or folded into the live
-        EWMA profiles.  Observed wall times feed
-        ``scheduler.observe_batch``, and outcomes resolve through the
-        scheduler's hedged duplication.
+        picked the same variant run as a single real ``generate`` batch on
+        the remote tier (prompts right-padded to the group's longest, rows
+        padded to a power of two to bound the set of compiled shapes).
+        Every request in a variant batch shares the batch's wall time — the
+        continuous-batching cost model.  Backends absorb XLA compile time
+        with an untimed warm-up per shape, so it is never charged to
+        requests or folded into the live EWMA profiles.
+
+        Hedged rows additionally run as one real batch on the
+        ``hedge_backend`` (when configured): both tiers' *measured* wall
+        times feed ``scheduler.resolve_chunk``, the on-device observation
+        folds into the scheduler's live on-device EWMA profile, and
+        requests the duplicate wins return the hedge variant's tokens.
+        Without a hedge backend the duplicate's latency is sampled from the
+        scheduler's on-device profile (simulation fallback — the reference
+        behavior for equivalence tests).
 
         ``dispatch_ms`` is the scheduling-tick timestamp (e.g. the close
         of the arrival window): each request's queueing wait
         ``dispatch_ms - arrival_ms`` is charged against its budget at
-        selection time and included in its reported latency.  Defaults to
-        the chunk's latest arrival (zero wait when ``arrival_ms`` is
-        unset).  Ticks are assumed to execute independently — earlier
-        windows' wall time does not serialize into later ones.
+        selection time, included in its reported latency, and recorded on
+        the completion (``queue_wait_ms``).  Defaults to the chunk's
+        latest arrival (zero wait when ``arrival_ms`` is unset).  Ticks
+        are assumed to execute independently — earlier windows' wall time
+        does not serialize into later ones.
 
         Returns ``(completions, metrics)`` with completions in the input
         order; ``metrics`` is None for an empty chunk.
@@ -158,18 +164,8 @@ class ServingEngine:
         for m in np.unique(decision.model_index):
             name = scheduler.names[int(m)]
             group = np.flatnonzero(decision.model_index == m)
-            width = max(len(requests[i].tokens) for i in group)
-            steps = max(requests[i].n_steps for i in group)
-            rows = pad_to_pow2(len(group))
-            batch = np.zeros((rows, width), dtype=np.int32)
-            for row, i in enumerate(group):
-                t = np.asarray(requests[i].tokens, dtype=np.int32)
-                batch[row, : len(t)] = t
-            shape_key = (name, rows, width, steps)
-            if shape_key not in self._warmed_shapes:
-                self.generate(name, batch, steps)  # compile, untimed
-                self._warmed_shapes.add(shape_key)
-            out, wall_ms = self.generate(name, batch, steps)
+            batch, steps = _pad_batch(requests, group)
+            out, wall_ms = self.backend.run_batch(name, batch, steps)
             exec_ms[group] = wall_ms
             for row, i in enumerate(group):
                 gen_tokens[i] = out[row, : requests[i].n_steps]
@@ -180,21 +176,49 @@ class ServingEngine:
             + np.asarray([r.t_nw_actual_ms for r in requests])
             + exec_ms
         )
-        acc_used, latency, used_remote = scheduler.resolve_chunk(
-            decision, remote_ms
+
+        # The hedge tier: run every hedged row's duplicate as one real
+        # batch; its measured wall time is the duplicate's latency.
+        hedged_rows = np.flatnonzero(decision.hedged)
+        measured = self.hedge_backend is not None and hedged_rows.size > 0
+        ondevice_in: Optional[np.ndarray] = None
+        hedge_tokens: dict[int, np.ndarray] = {}
+        if measured:
+            batch, steps = _pad_batch(requests, hedged_rows)
+            out, wall_ms = self.hedge_backend.hedge(batch, steps)
+            for row, i in enumerate(hedged_rows):
+                hedge_tokens[int(i)] = out[row, : requests[i].n_steps]
+            ondevice_in = np.full(n, wall_ms)
+            scheduler.observe_ondevice(np.full(hedged_rows.size, wall_ms))
+
+        # Both tiers launch at the dispatch tick, so queue wait charges the
+        # duplicate's race clock too — SLA accounting stays honest when the
+        # wait alone approaches the SLA.
+        acc_used, latency, used_remote, ondevice_ms = scheduler.resolve_chunk(
+            decision, remote_ms, ondevice_ms=ondevice_in,
+            ondevice_wait_ms=queue_wait,
         )
         completions = [
             CompletedRequest(
                 rid=requests[i].rid,
                 model_name=scheduler.names[int(decision.model_index[i])],
                 model_index=int(decision.model_index[i]),
-                tokens=gen_tokens[i],
+                tokens=(
+                    hedge_tokens[i]
+                    if i in hedge_tokens and not used_remote[i]
+                    else gen_tokens[i]
+                ),
                 exec_ms=float(exec_ms[i]),
                 remote_ms=float(remote_ms[i]),
                 latency_ms=float(latency[i]),
                 accuracy=float(acc_used[i]),
                 used_remote=bool(used_remote[i]),
                 hedged=bool(decision.hedged[i]),
+                queue_wait_ms=float(queue_wait[i]),
+                ondevice_ms=(
+                    float(ondevice_ms[i]) if decision.hedged[i] else None
+                ),
+                hedge_measured=measured and bool(decision.hedged[i]),
             )
             for i in range(n)
         ]
@@ -205,6 +229,7 @@ class ServingEngine:
             model_names=scheduler.names,
             model_index=decision.model_index,
             used_remote=used_remote,
+            queue_wait_ms=queue_wait,
         )
         return completions, metrics
 
@@ -214,21 +239,11 @@ class ServingEngine:
     ) -> ModelRegistry:
         """Measure real wall-clock latency profiles (the paper's Table III
         methodology: repeated timed executions per model)."""
-        rng = np.random.default_rng(seed)
-        profiles = []
-        for name, v in self.variants.items():
-            tokens = rng.integers(0, v.cfg.vocab_size, (batch, prompt_len))
-            self.generate(name, tokens, 1)  # warmup/compile
-            times = []
-            for _ in range(trials):
-                _, ms = self.generate(name, tokens, gen_tokens)
-                times.append(ms)
-            profiles.append(
-                ModelProfile(
-                    name=name,
-                    accuracy=v.quality,
-                    mu_ms=float(np.mean(times)),
-                    sigma_ms=float(np.std(times) + 1e-3),
-                )
+        profiles = [
+            self.backend.measure_profile(
+                name, prompt_len, gen_tokens, batch=batch, trials=trials,
+                seed=seed,
             )
+            for name in self.variants
+        ]
         return ModelRegistry(sorted(profiles, key=lambda p: p.accuracy))

@@ -32,6 +32,18 @@ The scheduler operates on *chunks* of requests at once:
 ``chunk_size=1`` is the scalar reference path; the per-request
 :meth:`decide` / :meth:`observe` methods are thin wrappers over the chunk
 API and remain the convenient interface for interactive use.
+
+Two-tier hedge resolution
+-------------------------
+:meth:`MDInferenceScheduler.resolve_chunk` resolves hedged requests against
+the on-device duplicate.  The *primary* path receives measured on-device
+wall times (``ondevice_ms``) from a real hedge-tier execution
+(:class:`repro.serving.backend.OnDeviceBackend` via
+``ServingEngine.serve_queue``); sampling the on-device latency profile
+survives only as the simulator fallback (``ondevice_ms=None`` — what
+:meth:`run_trace` uses).  Measured hedge executions fold into a live
+on-device EWMA profile (:meth:`observe_ondevice`) exactly like remote
+observations fold into the per-model profiles.
 """
 from __future__ import annotations
 
@@ -142,6 +154,11 @@ class MDInferenceScheduler:
         self.mu = registry.mu.astype(np.float64).copy()
         self.sigma = registry.sigma.astype(np.float64).copy()
         self._var = self.sigma**2
+        # Live on-device (hedge-tier) profile: seeded from the prior, refined
+        # by measured hedge executions (observe_ondevice).
+        self.ondevice_mu = float(ondevice.mu_ms)
+        self.ondevice_sigma = float(ondevice.sigma_ms)
+        self._ondevice_var = self.ondevice_sigma**2
         self.accuracy = registry.accuracy.astype(np.float64).copy()
         self.names = registry.names
         self._policy = _jitted_policy(cfg.algorithm, cfg.utility_power)
@@ -208,31 +225,50 @@ class MDInferenceScheduler:
         d = self.decide_batch(np.asarray([t_nw_est_ms]))
         return d.scalar(0, self.names)
 
+    def _ewma_fold(self, mu: float, var: float, xs: np.ndarray) -> tuple[float, float]:
+        a = self.cfg.profile_ewma
+        for x in xs:
+            delta = x - mu
+            mu += a * delta
+            var = max((1 - a) * (var + a * delta * delta), 1e-6)
+        return mu, var
+
     def observe_batch(self, model_index: np.ndarray, exec_ms: np.ndarray):
         """Fold a chunk of observations into the EWMA profiles.
 
         Observations are replayed per model in arrival order, so the result
         is identical to issuing scalar :meth:`observe` calls one by one.
         """
-        a = self.cfg.profile_ewma
-        if a <= 0:
+        if self.cfg.profile_ewma <= 0:
             return
         model_index = np.atleast_1d(np.asarray(model_index))
         exec_ms = np.atleast_1d(np.asarray(exec_ms, dtype=np.float64))
         for m in np.unique(model_index):
-            mu = self.mu[m]
-            var = self._var[m]
-            for x in exec_ms[model_index == m]:
-                delta = x - mu
-                mu += a * delta
-                var = max((1 - a) * (var + a * delta * delta), 1e-6)
-            self.mu[m] = mu
-            self._var[m] = var
-            self.sigma[m] = np.sqrt(var)
+            self.mu[m], self._var[m] = self._ewma_fold(
+                self.mu[m], self._var[m], exec_ms[model_index == m]
+            )
+            self.sigma[m] = np.sqrt(self._var[m])
 
     def observe(self, model_index: int, exec_ms: float):
         """EWMA profile update from an observed execution (drift handling)."""
         self.observe_batch(np.asarray([model_index]), np.asarray([exec_ms]))
+
+    def observe_ondevice(self, exec_ms: np.ndarray):
+        """Fold measured hedge-tier executions into the live on-device profile.
+
+        Same EWMA as :meth:`observe_batch`, applied to the duplicate tier:
+        the sampled-hedge fallback (and hedging heuristics built on the
+        on-device profile) track the real hedge variant instead of a
+        static prior.
+        """
+        if self.cfg.profile_ewma <= 0:
+            return
+        self.ondevice_mu, self._ondevice_var = self._ewma_fold(
+            self.ondevice_mu,
+            self._ondevice_var,
+            np.atleast_1d(np.asarray(exec_ms, dtype=np.float64)),
+        )
+        self.ondevice_sigma = float(np.sqrt(self._ondevice_var))
 
     # -- outcome resolution ---------------------------------------------------
     def resolve_chunk(
@@ -240,21 +276,38 @@ class MDInferenceScheduler:
         decision: BatchDecision,
         remote_latency_ms: np.ndarray,
         ondevice_ms: Optional[np.ndarray] = None,
-    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        ondevice_wait_ms: float | np.ndarray = 0.0,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Resolve a chunk through hedged duplication.
 
-        Returns ``(accuracy_used, latency_ms, used_remote)``.  Non-hedged
-        requests keep their remote outcome; hedged requests race the
-        on-device duplicate via :func:`resolve_duplication`.
+        ``ondevice_ms`` is the duplicate's *execution* latency per request —
+        measured wall times from a real hedge-tier execution on the primary
+        path (``ServingEngine.serve_queue`` with an ``OnDeviceBackend``).
+        When omitted the duplicate is *simulated* by sampling the live
+        on-device profile — the fallback used by :meth:`run_trace` and the
+        reference behavior for equivalence tests.
+
+        ``ondevice_wait_ms`` is the delay before the duplicate *starts*
+        (the serving front passes each request's queue wait: the duplicate
+        is launched at the dispatch tick, not at arrival).  It is added to
+        the duplicate's race clock so SLA accounting stays honest under
+        queueing; pure simulation has no queue and leaves it 0.
+
+        Returns ``(accuracy_used, latency_ms, used_remote, ondevice_ms)``;
+        the last element echoes the duplicate's from-arrival latencies
+        actually raced (wait + execution).  Non-hedged requests keep their
+        remote outcome; hedged requests race the on-device duplicate via
+        :func:`resolve_duplication`.
         """
         remote_latency_ms = np.asarray(remote_latency_ms, dtype=np.float64)
         n = len(remote_latency_ms)
         if ondevice_ms is None:
             ondevice_ms = np.maximum(
-                self.ondevice.mu_ms
-                + self.ondevice.sigma_ms * self.rng.standard_normal(n),
+                self.ondevice_mu
+                + self.ondevice_sigma * self.rng.standard_normal(n),
                 _EXEC_FLOOR_MS,
             )
+        ondevice_ms = np.asarray(ondevice_ms, dtype=np.float64) + ondevice_wait_ms
         sel_acc = self.accuracy[decision.model_index]
         out = resolve_duplication(
             remote_latency_ms,
@@ -266,7 +319,7 @@ class MDInferenceScheduler:
         acc_used = np.where(decision.hedged, out.accuracy, sel_acc)
         latency = np.where(decision.hedged, out.latency_ms, remote_latency_ms)
         used_remote = np.where(decision.hedged, out.used_remote, True)
-        return acc_used, latency, used_remote
+        return acc_used, latency, used_remote, ondevice_ms
 
     # -- trace-driven loop ----------------------------------------------------
     def run_trace(
@@ -320,10 +373,10 @@ class MDInferenceScheduler:
             self.observe_batch(d.model_index, exec_ms)
             remote = t_nw_actual[sl] + exec_ms
             ondev_ms = np.maximum(
-                self.ondevice.mu_ms + self.ondevice.sigma_ms * z_ondev[sl],
+                self.ondevice_mu + self.ondevice_sigma * z_ondev[sl],
                 _EXEC_FLOOR_MS,
             )
-            acc_used[sl], lat[sl], used_remote[sl] = self.resolve_chunk(
+            acc_used[sl], lat[sl], used_remote[sl], _ = self.resolve_chunk(
                 d, remote, ondev_ms
             )
             for j in range(hi - lo):

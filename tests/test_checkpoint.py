@@ -91,8 +91,9 @@ def test_reshard_on_restore(tmp_path):
     state = tiny_state()
     mgr = CheckpointManager(tmp_path)
     mgr.save(3, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     sh = NamedSharding(mesh, P())
     shardings = jax.tree.map(lambda _: sh, state)
     restored, step = mgr.restore(state, shardings=shardings)

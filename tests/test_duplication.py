@@ -73,6 +73,20 @@ def test_duplication_bounds_latency(remote, sla, ondev):
     assert np.all(np.isin(out.accuracy, [80.0, 41.4]))
 
 
+def test_outcome_carries_per_tier_latencies():
+    remote = np.array([200.0, 400.0])
+    ondev = np.array([30.0, 35.0])
+    out = resolve_duplication(
+        remote_latency_ms=remote,
+        remote_accuracy=np.array([82.6, 82.6]),
+        ondevice_latency_ms=ondev,
+        ondevice_accuracy=41.4,
+        t_sla_ms=250.0,
+    )
+    np.testing.assert_array_equal(out.remote_ms, remote)
+    np.testing.assert_array_equal(out.ondevice_ms, ondev)
+
+
 def test_hedge_policy_always():
     p = HedgePolicy(always=True)
     assert p.should_hedge(np.array([1000.0]), np.array([5.0]), np.array([1.0]))[0]

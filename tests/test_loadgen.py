@@ -1,0 +1,100 @@
+"""Load generation: seeded determinism, window iteration, boundaries."""
+import numpy as np
+import pytest
+
+from repro.core.network import FixedCVNetwork
+from repro.serving.loadgen import (
+    BurstyArrivals,
+    LoadTrace,
+    PoissonArrivals,
+    iter_windows,
+    make_trace,
+)
+
+
+def _trace_from_arrivals(arrival_ms):
+    arrival_ms = np.asarray(arrival_ms, dtype=np.float64)
+    nw = np.full_like(arrival_ms, 10.0)
+    return LoadTrace(arrival_ms=arrival_ms, t_nw_ms=nw, t_nw_est_ms=nw)
+
+
+# ---------------------------------------------------------------------------
+# Seeded determinism.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "process",
+    [PoissonArrivals(150.0), BurstyArrivals(150.0, burst_factor=6.0)],
+    ids=["poisson", "bursty"],
+)
+def test_arrivals_deterministic_under_seed(process):
+    a = process.sample_arrivals_ms(np.random.default_rng(42), 2_000)
+    b = process.sample_arrivals_ms(np.random.default_rng(42), 2_000)
+    np.testing.assert_array_equal(a, b)
+    c = process.sample_arrivals_ms(np.random.default_rng(43), 2_000)
+    assert not np.array_equal(a, c)
+    assert np.all(np.diff(a) >= 0)  # non-decreasing timestamps
+
+
+def test_make_trace_deterministic_under_seed():
+    args = (300, PoissonArrivals(80.0), FixedCVNetwork(100.0, 0.4))
+    t1 = make_trace(*args, seed=9)
+    t2 = make_trace(*args, seed=9)
+    np.testing.assert_array_equal(t1.arrival_ms, t2.arrival_ms)
+    np.testing.assert_array_equal(t1.t_nw_ms, t2.t_nw_ms)
+    np.testing.assert_array_equal(t1.t_nw_est_ms, t2.t_nw_est_ms)
+    t3 = make_trace(*args, seed=10)
+    assert not np.array_equal(t1.arrival_ms, t3.arrival_ms)
+
+
+# ---------------------------------------------------------------------------
+# Window iteration.
+# ---------------------------------------------------------------------------
+def test_iter_windows_skips_empty_windows():
+    # Arrivals leave windows [50,100) .. [950,1000) empty; only occupied
+    # windows are yielded, each non-empty, covering every request once.
+    trace = _trace_from_arrivals([10.0, 20.0, 1_000.0, 1_010.0])
+    windows = list(iter_windows(trace, 50.0))
+    assert len(windows) == 2
+    np.testing.assert_array_equal(windows[0], [0, 1])
+    np.testing.assert_array_equal(windows[1], [2, 3])
+    for w in windows:
+        assert len(w) > 0
+
+
+def test_iter_windows_boundary_arrival_opens_next_window():
+    # An arrival exactly at k*window belongs to window k (half-open
+    # [k*w, (k+1)*w) buckets).
+    trace = _trace_from_arrivals([0.0, 49.999, 50.0, 99.999, 100.0])
+    windows = list(iter_windows(trace, 50.0))
+    assert len(windows) == 3
+    np.testing.assert_array_equal(windows[0], [0, 1])
+    np.testing.assert_array_equal(windows[1], [2, 3])
+    np.testing.assert_array_equal(windows[2], [4])
+
+
+def test_iter_windows_empty_trace_yields_nothing():
+    trace = _trace_from_arrivals([])
+    assert list(iter_windows(trace, 50.0)) == []
+    assert trace.duration_ms == 0.0
+    assert trace.offered_rps == float("inf")
+
+
+def test_iter_windows_single_window_holds_all():
+    trace = _trace_from_arrivals([1.0, 2.0, 3.0])
+    (only,) = iter_windows(trace, 1e6)
+    np.testing.assert_array_equal(only, [0, 1, 2])
+
+
+@pytest.mark.parametrize("bad", [0.0, -5.0])
+def test_iter_windows_rejects_nonpositive_window(bad):
+    trace = _trace_from_arrivals([1.0])
+    with pytest.raises(ValueError):
+        list(iter_windows(trace, bad))
+
+
+def test_windows_partition_in_arrival_order():
+    trace = make_trace(
+        400, BurstyArrivals(120.0), FixedCVNetwork(80.0, 0.5), seed=3
+    )
+    seen = np.concatenate(list(iter_windows(trace, 25.0)))
+    np.testing.assert_array_equal(seen, np.arange(400))

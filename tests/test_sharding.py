@@ -17,7 +17,7 @@ from repro.distributed.api import (
     axis_rules,
     constrain,
 )
-from repro.launch.mesh import make_elastic_mesh
+from repro.launch.mesh import make_elastic_mesh, make_mesh
 from repro.models import transformer as T
 
 
@@ -43,8 +43,7 @@ def test_constrain_is_noop_without_rules():
 
 
 def test_constrain_applies_under_rules():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     table = dict(RULES_1D)
     table["batch"] = "data"
     with axis_rules(AxisRules(mesh, table)):

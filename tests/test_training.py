@@ -91,8 +91,9 @@ def test_error_feedback_unbiased_over_time():
 
 
 def test_compressed_psum_single_axis():
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("d",))
     x = jax.random.normal(jax.random.key(2), (64,))
 
     from jax.experimental.shard_map import shard_map
