@@ -51,22 +51,26 @@ def _throughput_comparison(reg, t_nw, *, batched_chunk: int = 512):
     return speedup
 
 
-def _hedge_mode_comparison(*, n_requests: int, sla_ms: float, seed: int = 0):
+def _hedge_mode_comparison(
+    *, n_requests: int, sla_ms: float, seed: int = 0, sync: bool = False
+):
     """Measured-hedge (real OnDeviceBackend) vs sampled-hedge on one stream.
 
     Builds a tiny two-tier engine, serves an identical open-loop trace with
-    both hedge-resolution modes, and emits latency/accuracy side by side.
+    both hedge-resolution modes through the event-loop front
+    (``ServingLoop.drain_trace``), and emits latency/accuracy side by side.
     """
     import jax
 
     from repro.configs import reduced
     from repro.models import transformer as T
     from repro.serving.backend import OnDeviceBackend
-    from repro.serving.engine import QueuedRequest, ServingEngine, Variant
-    from repro.serving.loadgen import PoissonArrivals, iter_windows, make_trace
+    from repro.serving.engine import ServingEngine, Variant
+    from repro.serving.loadgen import PoissonArrivals, make_trace
     from repro.core.network import LognormalNetwork
 
     prompt, gen, window_ms = 8, 2, 200.0
+    dispatch = "sync" if sync else "async"
     # One hedge tier, one measured on-device profile, and one measured
     # remote registry for BOTH modes, so the rows differ only in how the
     # duplicate resolves (real execution vs profile samples), not in
@@ -78,7 +82,9 @@ def _hedge_mode_comparison(*, n_requests: int, sla_ms: float, seed: int = 0):
     def build(measured: bool):
         nonlocal registry
         engine = ServingEngine(
-            max_len=prompt + gen + 4, hedge_backend=hedge if measured else None
+            max_len=prompt + gen + 4,
+            hedge_backend=hedge if measured else None,
+            dispatch=dispatch,
         )
         for name, width, quality in (("small", 32, 40.0), ("large", 64, 80.0)):
             cfg = reduced(
@@ -100,38 +106,104 @@ def _hedge_mode_comparison(*, n_requests: int, sla_ms: float, seed: int = 0):
     trace = make_trace(
         n_requests, PoissonArrivals(50.0), LognormalNetwork(40.0, 0.6), seed=seed
     )
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, 256, (n_requests, prompt))
     for mode in ("measured", "sampled"):
         engine, sched = build(mode == "measured")
-        rng = np.random.default_rng(seed)
-        done = []
+        loop = engine.make_loop(sched)
         t0 = time.perf_counter()
-        for window in iter_windows(trace, window_ms):
-            batch = [
-                QueuedRequest(
-                    rid=int(i),
-                    tokens=rng.integers(0, 256, prompt),
-                    n_steps=gen,
-                    t_nw_est_ms=float(trace.t_nw_est_ms[i]),
-                    t_nw_actual_ms=float(trace.t_nw_ms[i]),
-                    arrival_ms=float(trace.arrival_ms[i]),
-                )
-                for i in window
-            ]
-            tick = (trace.arrival_ms[window[0]] // window_ms + 1) * window_ms
-            done.extend(engine.serve_queue(sched, batch, dispatch_ms=tick)[0])
+        done, metrics = loop.drain_trace(
+            trace, window_ms, tokens_for=lambda i: prompts[i], n_steps=gen
+        )
         us = (time.perf_counter() - t0) * 1e6
         lats = np.asarray([c.latency_ms for c in done])
-        accs = np.asarray([c.accuracy for c in done])
-        hedge_used = 1.0 - np.mean([c.used_remote for c in done])
         emit(
             f"serving/hedge/{mode}",
             us / len(done),
-            f"quality={accs.mean():.2f} attain={np.mean(lats <= sla_ms)*100:.2f}% "
-            f"p99={np.percentile(lats, 99):.1f}ms hedge_used={hedge_used*100:.2f}%",
+            f"quality={metrics.aggregate_accuracy:.2f} "
+            f"attain={np.mean(lats <= sla_ms)*100:.2f}% "
+            f"p99={np.percentile(lats, 99):.1f}ms "
+            f"hedge_used={metrics.ondevice_reliance*100:.2f}%",
         )
 
 
-def run(n_requests: int = 2_000, smoke: bool = False):
+def _async_vs_serialized_hedge(
+    *, n_requests: int, sla_ms: float, seed: int = 0, sync: bool = False
+):
+    """Concurrently-raced hedge dispatch vs the serialized fallback.
+
+    One remote variant + the real on-device duplicate, identical request
+    stream; compares the tick wall-clock span (first dispatch → last batch
+    completion) between ``dispatch="sync"`` (duplicate runs after the
+    remote batch — the pre-async accounting fiction) and
+    ``dispatch="async"`` (both tiers dispatched at the tick).  ``sync=True``
+    (the ``--sync`` CLI flag) keeps CI deterministic by running the
+    comparison row on serialized dispatch too.
+    """
+    import jax
+
+    from repro.configs import reduced
+    from repro.models import transformer as T
+    from repro.serving.backend import OnDeviceBackend
+    from repro.serving.engine import ServingEngine, Variant
+    from repro.serving.loadgen import PoissonArrivals, make_trace
+    from repro.core.network import LognormalNetwork
+
+    prompt, gen, window_ms = 8, 8, 400.0
+    hedge = OnDeviceBackend.from_zoo(max_len=prompt + gen + 4)
+    ondevice = hedge.measure_profile(prompt_len=prompt, gen_tokens=gen, trials=2)
+    # A single remote variant: every tick is one remote batch + one
+    # duplicate batch, so the span comparison isolates dispatch overlap.
+    engine = ServingEngine(max_len=prompt + gen + 4, hedge_backend=hedge)
+    cfg = reduced(
+        "gemma-2b", d_model=64, n_layers=2, n_heads=2, n_kv_heads=1, head_dim=32
+    )
+    engine.register(
+        Variant("remote", cfg, T.init_params(cfg, jax.random.key(seed)), 80.0)
+    )
+    registry = engine.measure_profiles(prompt_len=prompt, gen_tokens=gen, trials=2)
+
+    trace = make_trace(
+        n_requests, PoissonArrivals(50.0), LognormalNetwork(40.0, 0.6), seed=seed
+    )
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, 256, (n_requests, prompt))
+
+    def serve(dispatch: str):
+        sched = MDInferenceScheduler(
+            registry, ondevice, SchedulerConfig(t_sla_ms=sla_ms, seed=seed)
+        )
+        stats = []
+        loop = engine.make_loop(sched, dispatch=dispatch)
+        loop.drain_trace(
+            trace, window_ms, tokens_for=lambda i: prompts[i], n_steps=gen,
+            on_tick=lambda t, res: stats.append(res.stats),
+        )
+        hedged = [s for s in stats if s.hedge_wall_ms is not None]
+        span = sum(s.span_wall_ms for s in hedged)
+        serial = sum(s.serialized_wall_ms for s in hedged)
+        return span, serial, len(hedged)
+
+    # One warm pass covers every shape of the timed passes: with a single
+    # remote variant selection cannot resplit the windows, so both tiers'
+    # (rows, width, steps) batches repeat identically — spans in the timed
+    # passes therefore exclude XLA compiles (which run inside the span but
+    # outside the timed wall otherwise, skewing overlap_saved negative).
+    serve("sync")
+    for mode, dispatch in (("serialized", "sync"),
+                           ("async", "sync" if sync else "async")):
+        span, serial, ticks = serve(dispatch)
+        note = " (--sync fallback)" if sync and mode == "async" else ""
+        emit(
+            f"serving/hedge_dispatch/{mode}",
+            span * 1e3 / max(ticks, 1),
+            f"span={span:.1f}ms vs tier_sum={serial:.1f}ms "
+            f"overlap_saved={(1 - span / serial) * 100:.1f}% "
+            f"ticks={ticks}{note}",
+        )
+
+
+def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False):
     reg = lm_zoo_registry(chips=8)
     for p in reg:
         emit(f"serving/zoo/{p.name}", p.mu_ms * 1e3, f"quality={p.accuracy}")
@@ -183,12 +255,25 @@ def run(n_requests: int = 2_000, smoke: bool = False):
     # Two-tier hedge: measured (real OnDeviceBackend) vs sampled resolution
     # on an identical stream (PR 2 tentpole).  The 150ms SLA makes some
     # queue-delayed requests miss remotely, so the duplicate actually wins.
-    _hedge_mode_comparison(n_requests=24 if smoke else 120, sla_ms=150.0)
+    _hedge_mode_comparison(
+        n_requests=24 if smoke else 120, sla_ms=150.0, sync=sync
+    )
+
+    # Async vs serialized hedge dispatch on one stream (PR 3 tentpole):
+    # with concurrent dispatch the tick span beats the sum of the tiers'
+    # wall times.  --sync collapses the async row to the deterministic
+    # serialized fallback (CI).
+    _async_vs_serialized_hedge(
+        n_requests=16 if smoke else 96, sla_ms=150.0, sync=sync
+    )
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small trace sizes for CI")
+    ap.add_argument("--sync", action="store_true",
+                    help="serialized-dispatch fallback: no worker threads, "
+                    "deterministic rows (used by CI)")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, sync=args.sync)

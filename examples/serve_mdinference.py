@@ -1,21 +1,69 @@
-"""End-to-end serving example: MDInference over REAL two-tier execution.
+"""End-to-end serving example: the async request-lifecycle API, for real.
 
-Three functionally-equivalent LM tiers (tiny configs of the gemma / llama3 /
-qwen3 families) are built and profiled with real wall-clock measurements;
-an open-loop Poisson request stream is then served with continuous
-batching: each scheduling window is decided in one batched scheduler call,
-requests that picked the same tier run as one real ``generate`` batch, and
-every hedged request *also* runs on a real on-device hedge variant
-(``OnDeviceBackend``) so duplication resolves on measured wall time and
-bounds every response at the SLA.  This is the paper's Figure 1(d) running
-for real on both tiers.
+Part 1 drives the client surface by hand: an ``InferenceClient`` over a
+``ServingLoop`` wired to two real execution tiers (remote ``JitBackend``
+variants + the ``OnDeviceBackend`` duplicate).  ``submit`` returns an
+``InferenceFuture`` immediately (QUEUED); a scheduling tick moves it
+through SCHEDULED/EXECUTING — dispatching the remote batch and the hedged
+duplicate *concurrently* — and ``result()`` returns the resolved
+``CompletedRequest``, including which tier won the race.
+
+Part 2 serves an open-loop Poisson trace through the same tick path
+(``launch.serve`` / ``ServingLoop.drain_trace``): the paper's Figure 1(d)
+running for real on both tiers, with continuous batching and measured
+hedged duplication bounding every response at the SLA.
 
 Run:  PYTHONPATH=src python examples/serve_mdinference.py
 """
-from repro.launch.serve import main
+import numpy as np
+
+from repro.launch.serve import build_engine, main
+from repro.serving import InferenceClient, MDInferenceScheduler, SchedulerConfig
+
+PROMPT, GEN = 16, 4
+
+
+def client_demo():
+    print("=== part 1: InferenceClient futures over a two-tier ServingLoop ===")
+    engine = build_engine(max_len=PROMPT + GEN + 8, measured_hedge=True)
+    registry = engine.measure_profiles(prompt_len=PROMPT, gen_tokens=GEN, trials=2)
+    ondevice = engine.hedge_backend.measure_profile(
+        prompt_len=PROMPT, gen_tokens=GEN, trials=2
+    )
+    sched = MDInferenceScheduler(
+        registry, ondevice, SchedulerConfig(t_sla_ms=2_000.0)
+    )
+    loop = engine.make_loop(sched)  # dispatch="async": tiers overlap
+    client = InferenceClient(loop)
+
+    rng = np.random.default_rng(0)
+    # Three requests: generous network, a tight per-request SLA, a cancel.
+    f_ok = client.submit(rng.integers(0, 256, PROMPT), GEN, t_nw_est_ms=80.0)
+    f_tight = client.submit(
+        rng.integers(0, 256, PROMPT), GEN, sla=10.0, t_nw_est_ms=80.0
+    )
+    f_cancel = client.submit(rng.integers(0, 256, PROMPT), GEN, t_nw_est_ms=80.0)
+    print(f"submitted: {f_ok.state.value}, {f_tight.state.value}, "
+          f"{f_cancel.state.value}")
+    f_cancel.cancel()  # still QUEUED: freed before it occupies a batch slot
+
+    done = f_ok.result()  # drives the loop: one tick serves the chunk
+    print(f"f_ok     -> {done.model_name:10s} race={done.race_resolution:12s} "
+          f"latency={done.latency_ms:7.1f}ms tokens={done.tokens.tolist()}")
+    tight = f_tight.result()  # 10ms SLA < network: the duplicate answered
+    print(f"f_tight  -> {tight.model_name:10s} race={tight.race_resolution:12s} "
+          f"latency={tight.latency_ms:7.1f}ms (10ms SLA)")
+    print(f"f_cancel -> cancelled={f_cancel.cancelled()}")
+    print(f"lifecycle of f_ok: submitted@{f_ok.submitted_ms:.0f}ms "
+          f"scheduled@{f_ok.scheduled_ms:.0f}ms "
+          f"tiers dispatched {sorted(f_ok.tier_dispatch_wall_ms)} "
+          f"resolved@{f_ok.resolved_ms:.0f}ms\n")
+
 
 if __name__ == "__main__":
+    client_demo()
+    print("=== part 2: open-loop trace through the same tick path ===")
     raise SystemExit(
         main(["--requests", "30", "--sla", "2500", "--gen", "8", "--rate", "20",
-              "--hedge", "measured"])
+              "--hedge", "measured", "--dispatch", "async"])
     )

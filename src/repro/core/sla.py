@@ -24,6 +24,10 @@ class RequestMetrics:
     model_usage: Dict[str, float]  # model name -> fraction of requests
     mean_queue_wait_ms: float = 0.0  # scheduling-tick wait (0 when untracked)
     p99_queue_wait_ms: float = 0.0
+    # Fraction of requests per race outcome ("remote_won" / "ondevice_won" /
+    # "unhedged"); empty when the serving front doesn't track races.
+    race_resolution: Dict[str, float] = dataclasses.field(default_factory=dict)
+    mean_time_to_schedule_ms: float = 0.0  # admission -> scheduling tick
 
     def row(self) -> str:
         return (
@@ -38,16 +42,22 @@ def summarize(
     *,
     accuracy_used: np.ndarray,
     latency_ms: np.ndarray,
-    t_sla_ms: float,
+    t_sla_ms: float | np.ndarray,
     model_names: list[str],
     model_index: np.ndarray,
     used_remote: np.ndarray | None = None,
     queue_wait_ms: np.ndarray | None = None,
+    race_resolution: np.ndarray | None = None,
+    time_to_schedule_ms: np.ndarray | None = None,
 ) -> RequestMetrics:
     """Build :class:`RequestMetrics` from per-request outcomes.
 
-    ``queue_wait_ms`` (per-request scheduling-tick wait) is optional —
-    trace-driven simulation has no queue, so its aggregates default to 0.
+    ``queue_wait_ms`` (per-request scheduling-tick wait),
+    ``race_resolution`` (per-request "remote_won" / "ondevice_won" /
+    "unhedged" strings), and ``time_to_schedule_ms`` are optional —
+    trace-driven simulation has no queue or race bookkeeping, so their
+    aggregates default to empty/0.  ``t_sla_ms`` may be a per-request
+    vector when requests carry individual SLAs.
     """
     accuracy_used = np.asarray(accuracy_used, dtype=np.float64)
     latency_ms = np.asarray(latency_ms, dtype=np.float64)
@@ -76,5 +86,18 @@ def summarize(
         ),
         p99_queue_wait_ms=(
             0.0 if queue_wait_ms is None else float(np.percentile(queue_wait_ms, 99))
+        ),
+        race_resolution=(
+            {}
+            if race_resolution is None
+            else {
+                outcome: float(np.mean(np.asarray(race_resolution) == outcome))
+                for outcome in ("remote_won", "ondevice_won", "unhedged")
+            }
+        ),
+        mean_time_to_schedule_ms=(
+            0.0
+            if time_to_schedule_ms is None
+            else float(np.mean(time_to_schedule_ms))
         ),
     )

@@ -15,6 +15,12 @@ hedge-xs variant), so duplication resolves on measured wall time.
 ``--hedge sampled`` falls back to the profile-sampled simulation of the
 duplicate (the pre-backend reference behavior).
 
+The serving front is the event-loop API (``ServingLoop.drain_trace``):
+each arrival window becomes one tick, and with ``--dispatch async`` (the
+default) the remote batch and the on-device duplicate are dispatched
+concurrently — the race resolves on overlapping wall clocks.
+``--dispatch sync`` serializes the tiers (the deterministic fallback).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --requests 50 --sla 2000
 """
@@ -30,13 +36,8 @@ from repro.configs import reduced
 from repro.core.network import NAMED_TRACES, LognormalNetwork
 from repro.models import transformer as T
 from repro.serving.backend import OnDeviceBackend
-from repro.serving.engine import QueuedRequest, ServingEngine, Variant
-from repro.serving.loadgen import (
-    BurstyArrivals,
-    PoissonArrivals,
-    iter_windows,
-    make_trace,
-)
+from repro.serving.engine import ServingEngine, Variant
+from repro.serving.loadgen import BurstyArrivals, PoissonArrivals, make_trace
 from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
 
 TIERS = (
@@ -48,14 +49,15 @@ TIERS = (
 
 
 def build_engine(
-    max_len: int, seed: int = 0, measured_hedge: bool = True
+    max_len: int, seed: int = 0, measured_hedge: bool = True,
+    dispatch: str = "async",
 ) -> ServingEngine:
     hedge = (
         OnDeviceBackend.from_zoo(max_len=max_len, seed=seed)
         if measured_hedge
         else None
     )
-    engine = ServingEngine(max_len=max_len, hedge_backend=hedge)
+    engine = ServingEngine(max_len=max_len, hedge_backend=hedge, dispatch=dispatch)
     for name, arch, width, layers, quality in TIERS:
         cfg = reduced(
             arch, d_model=width, n_layers=layers,
@@ -88,6 +90,11 @@ def main(argv=None):
         help="resolve duplicates on real hedge-tier wall time (measured) "
         "or on-device profile samples (sampled)",
     )
+    ap.add_argument(
+        "--dispatch", default="async", choices=["async", "sync"],
+        help="dispatch the tiers' batches concurrently (async) or "
+        "serialized (sync, the deterministic fallback)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -95,7 +102,7 @@ def main(argv=None):
     print("building + profiling tiers (real execution)...")
     engine = build_engine(
         max_len=args.prompt + args.gen + 8, seed=args.seed,
-        measured_hedge=measured,
+        measured_hedge=measured, dispatch=args.dispatch,
     )
     registry = engine.measure_profiles(
         prompt_len=args.prompt, gen_tokens=args.gen, trials=3, seed=args.seed
@@ -126,53 +133,56 @@ def main(argv=None):
     )
     trace = make_trace(args.requests, arrivals, network, seed=args.seed)
     rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, 256, (args.requests, args.prompt))
 
-    completions = []
-    t_start = time.time()
-    for window in iter_windows(trace, args.window):
-        batch = [
-            QueuedRequest(
-                rid=int(i),
-                tokens=rng.integers(0, 256, args.prompt),
-                n_steps=args.gen,
-                t_nw_est_ms=float(trace.t_nw_est_ms[i]),
-                t_nw_actual_ms=float(trace.t_nw_ms[i]),
-                arrival_ms=float(trace.arrival_ms[i]),
-            )
-            for i in window
-        ]
-        # The tick fires when its arrival window closes; the wait until
-        # then is charged against each request's budget and latency.
-        tick_ms = (trace.arrival_ms[window[0]] // args.window + 1) * args.window
-        done, _ = engine.serve_queue(sched, batch, dispatch_ms=tick_ms)
-        completions.extend(done)
-        c = done[0]
+    # The event-loop serving front: each arrival window becomes one tick
+    # (fired at the window's close — the wait until then is charged against
+    # each request's budget and latency); within a tick every tier's batch
+    # is dispatched before any is awaited.
+    loop = engine.make_loop(sched)
+
+    def on_tick(tick_ms, res):
+        c = res.completions[0]
+        overlap = ""
+        if res.stats.hedge_wall_ms is not None:
+            saved = 1.0 - res.stats.span_wall_ms / res.stats.serialized_wall_ms
+            overlap = f" overlap={saved*100:4.0f}%"
         print(
-            f"tick t={tick_ms:7.0f}ms batch={len(done):3d} "
-            f"models={{{', '.join(sorted({d.model_name for d in done}))}}} "
+            f"tick t={tick_ms:7.0f}ms batch={len(res.completions):3d} "
+            f"models={{{', '.join(sorted({d.model_name for d in res.completions}))}}} "
             f"first: wait+nw={c.remote_ms - c.exec_ms:5.0f}ms -> {c.model_name:8s} "
-            f"exec={c.exec_ms:7.1f}ms {'remote' if c.used_remote else 'HEDGED'}"
+            f"exec={c.exec_ms:7.1f}ms "
+            f"{'remote' if c.used_remote else 'HEDGED'}{overlap}"
         )
 
+    t_start = time.time()
+    completions, metrics = loop.drain_trace(
+        trace, args.window,
+        tokens_for=lambda i: prompts[i], n_steps=args.gen, on_tick=on_tick,
+    )
+
     lats = np.asarray([c.latency_ms for c in completions])
-    used_acc = np.asarray([c.accuracy for c in completions])
     waits = np.asarray([c.queue_wait_ms for c in completions])
-    remote_used = sum(c.used_remote for c in completions)
     hedge_note = (
         f"measured on-device wall (live profile mu={sched.ondevice_mu:.1f}ms)"
         if measured
         else "profile-sampled simulation"
     )
+    races = " ".join(
+        f"{k}={v*100:.0f}%" for k, v in metrics.race_resolution.items()
+    )
     print(
         f"\nserved {len(completions)} requests in {time.time()-t_start:.1f}s wall "
-        f"(offered {trace.offered_rps:.1f} rps)\n"
-        f"aggregate quality : {np.mean(used_acc):.2f}\n"
+        f"(offered {trace.offered_rps:.1f} rps, dispatch={args.dispatch})\n"
+        f"aggregate quality : {metrics.aggregate_accuracy:.2f}\n"
         f"SLA attainment    : {np.mean(lats <= args.sla)*100:.1f}%  "
         f"(duplication bounds post-dispatch latency at the SLA; only queue "
         f"wait can breach it)\n"
-        f"hedge reliance    : {(1 - remote_used/len(completions))*100:.1f}%  "
+        f"hedge reliance    : {metrics.ondevice_reliance*100:.1f}%  "
         f"[{hedge_note}]\n"
-        f"queue wait        : mean {waits.mean():.0f}ms  max {waits.max():.0f}ms\n"
+        f"race resolution   : {races}\n"
+        f"queue wait        : mean {waits.mean():.0f}ms  max {waits.max():.0f}ms  "
+        f"(time-to-schedule mean {metrics.mean_time_to_schedule_ms:.0f}ms)\n"
         f"p50/p99 latency   : {np.percentile(lats,50):.0f}/{np.percentile(lats,99):.0f} ms"
     )
     return 0

@@ -1,15 +1,22 @@
-"""Serving: MDInference scheduler (policy) + execution backends + load gen."""
+"""Serving: client futures + event loop + scheduler policy + backends."""
 from repro.serving.backend import (
+    BatchHandle,
     ExecutionBackend,
     JitBackend,
     OnDeviceBackend,
     build_hedge_variant,
 )
+from repro.serving.client import InferenceClient
 from repro.serving.engine import (
     CompletedRequest,
     QueuedRequest,
     ServingEngine,
     Variant,
+)
+from repro.serving.lifecycle import (
+    InferenceFuture,
+    RequestCancelled,
+    RequestState,
 )
 from repro.serving.loadgen import (
     BurstyArrivals,
@@ -18,6 +25,7 @@ from repro.serving.loadgen import (
     iter_windows,
     make_trace,
 )
+from repro.serving.loop import ServingLoop, TickResult, TickStats
 from repro.serving.profiles import ONDEVICE_TIER, V5E, estimate_ms, lm_zoo_registry
 from repro.serving.scheduler import (
     BatchDecision,
@@ -27,10 +35,11 @@ from repro.serving.scheduler import (
 )
 
 __all__ = [
-    "BatchDecision", "BurstyArrivals", "CompletedRequest", "Decision",
-    "ExecutionBackend", "JitBackend", "LoadTrace", "MDInferenceScheduler",
-    "ONDEVICE_TIER", "OnDeviceBackend", "PoissonArrivals", "QueuedRequest",
-    "SchedulerConfig", "ServingEngine", "V5E", "Variant",
-    "build_hedge_variant", "estimate_ms", "iter_windows", "lm_zoo_registry",
-    "make_trace",
+    "BatchDecision", "BatchHandle", "BurstyArrivals", "CompletedRequest",
+    "Decision", "ExecutionBackend", "InferenceClient", "InferenceFuture",
+    "JitBackend", "LoadTrace", "MDInferenceScheduler", "ONDEVICE_TIER",
+    "OnDeviceBackend", "PoissonArrivals", "QueuedRequest", "RequestCancelled",
+    "RequestState", "SchedulerConfig", "ServingEngine", "ServingLoop",
+    "TickResult", "TickStats", "V5E", "Variant", "build_hedge_variant",
+    "estimate_ms", "iter_windows", "lm_zoo_registry", "make_trace",
 ]

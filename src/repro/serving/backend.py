@@ -20,8 +20,9 @@ charged to requests or folded into live latency profiles.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +35,7 @@ from repro.models.config import ModelConfig
 
 __all__ = [
     "Variant",
+    "BatchHandle",
     "ExecutionBackend",
     "JitBackend",
     "OnDeviceBackend",
@@ -47,6 +49,96 @@ class Variant:
     cfg: ModelConfig
     params: dict
     quality: float  # A(m) for the selection algorithm
+
+
+class BatchHandle:
+    """One in-flight batch on an execution tier (async dispatch protocol).
+
+    Returned by :meth:`ExecutionBackend.submit_batch`.  :meth:`poll` never
+    blocks; :meth:`wait` blocks (optionally up to ``timeout`` seconds) and
+    returns the same ``(generated, wall_ms)`` pair as
+    :meth:`ExecutionBackend.run_batch`.
+
+    Wall-clock bookkeeping for race accounting:
+
+    * ``dispatch_wall_ms`` — ``perf_counter`` stamp when the batch was
+      submitted.  Two tiers dispatched in the same scheduling tick differ
+      by thread-submit overhead only — this is the race clocks' shared
+      start, replacing the serialized remote-then-duplicate measurement.
+    * ``done_wall_ms`` — stamp when execution (warm-up included) finished.
+    """
+
+    def __init__(self, name: str, n_rows: int):
+        self.name = name
+        self.n_rows = n_rows
+        self.dispatch_wall_ms = time.perf_counter() * 1e3
+        self.done_wall_ms: Optional[float] = None
+
+    def poll(self) -> bool:
+        """Non-blocking: True once the batch result is ready."""
+        raise NotImplementedError
+
+    def wait(self, timeout: Optional[float] = None) -> Tuple[np.ndarray, float]:
+        """Block until ready; returns ``(generated (B, n_steps), wall_ms)``."""
+        raise NotImplementedError
+
+
+class _CompletedBatchHandle(BatchHandle):
+    """Sync-dispatch handle: the batch already ran inside ``submit_batch``."""
+
+    def __init__(self, name, n_rows, dispatch_wall_ms, out, wall_ms):
+        super().__init__(name, n_rows)
+        self.dispatch_wall_ms = dispatch_wall_ms
+        self.done_wall_ms = time.perf_counter() * 1e3
+        self._result = (out, wall_ms)
+
+    def poll(self) -> bool:
+        return True
+
+    def wait(self, timeout=None):
+        return self._result
+
+
+class _ThreadedBatchHandle(BatchHandle):
+    """Async-dispatch handle: the batch runs on a worker thread.
+
+    The worker executes the tier's warm-once-then-timed ``run_batch``, so
+    the returned wall time keeps the same XLA-compile-free semantics as
+    the synchronous path.
+    """
+
+    def __init__(self, name, n_rows, fn):
+        super().__init__(name, n_rows)
+        self._done = threading.Event()
+        self._result: Optional[Tuple[np.ndarray, float]] = None
+        self._error: Optional[BaseException] = None
+
+        def worker():
+            try:
+                self._result = fn()
+            except BaseException as e:  # surfaced from wait()
+                self._error = e
+            finally:
+                self.done_wall_ms = time.perf_counter() * 1e3
+                self._done.set()
+
+        self._thread = threading.Thread(
+            target=worker, name=f"batch-{name}", daemon=True
+        )
+        self._thread.start()
+
+    def poll(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout=None):
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"batch on {self.name!r} unfinished after {timeout}s"
+            )
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
 
 
 class ExecutionBackend:
@@ -84,6 +176,32 @@ class ExecutionBackend:
             self.generate(name, batch, n_steps)  # compile, untimed
             self._warmed_shapes.add(shape_key)
         return self.generate(name, batch, n_steps)
+
+    def submit_batch(
+        self, name: str, batch: np.ndarray, n_steps: int, *, sync: bool = False
+    ) -> BatchHandle:
+        """Dispatch a batch without waiting for it — the async protocol.
+
+        With ``sync=False`` (the default) the batch runs on a worker thread
+        and the returned :class:`BatchHandle` supports non-blocking
+        :meth:`BatchHandle.poll`; batches submitted to *different* tiers in
+        the same scheduling tick genuinely overlap.  ``sync=True`` executes
+        inline before returning (a pre-completed handle) — the serialized
+        fallback that keeps CI and the equivalence references deterministic.
+
+        Either way the execution path is :meth:`run_batch`, so warm-up
+        semantics and the measured wall time are identical across modes.
+        """
+        n_rows = int(batch.shape[0])
+        if sync:
+            dispatch_wall_ms = time.perf_counter() * 1e3
+            out, wall_ms = self.run_batch(name, batch, n_steps)
+            return _CompletedBatchHandle(
+                name, n_rows, dispatch_wall_ms, out, wall_ms
+            )
+        return _ThreadedBatchHandle(
+            name, n_rows, lambda: self.run_batch(name, batch, n_steps)
+        )
 
     def measure_profile(
         self, name: str, prompt_len: int, gen_tokens: int, batch: int = 1,
@@ -193,6 +311,12 @@ class OnDeviceBackend(JitBackend):
     def hedge(self, batch: np.ndarray, n_steps: int) -> Tuple[np.ndarray, float]:
         """Run the duplicate batch on the hedge variant (warm-once, timed)."""
         return self.run_batch(self.hedge_name, batch, n_steps)
+
+    def submit_hedge(
+        self, batch: np.ndarray, n_steps: int, *, sync: bool = False
+    ) -> BatchHandle:
+        """Dispatch the duplicate batch without waiting (async protocol)."""
+        return self.submit_batch(self.hedge_name, batch, n_steps, sync=sync)
 
     def measure_profile(self, name=None, *args, **kwargs) -> ModelProfile:
         """Measured latency profile of the hedge variant (Table III style).

@@ -1,0 +1,73 @@
+"""Client layer of the serving stack: submit prompts, get futures back.
+
+:class:`InferenceClient` is the application-facing surface over a
+:class:`repro.serving.loop.ServingLoop`.  ``submit`` admits one request
+(assigning it a request id and an arrival timestamp on the loop clock) and
+returns an :class:`repro.serving.lifecycle.InferenceFuture` immediately;
+the caller observes the request's state, cancels it, or blocks on
+``result()`` — which drives the loop when the caller is single-threaded,
+so the minimal usage is just::
+
+    client = InferenceClient(loop)
+    future = client.submit(prompt_tokens, n_steps=8)
+    completed = future.result()        # ticks the loop until resolved
+
+Batch-oriented callers keep submitting and fire ``loop.tick(now_ms)``
+themselves (one tick per arrival window — what
+:meth:`repro.serving.loop.ServingLoop.drain_trace` automates).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.lifecycle import InferenceFuture, QueuedRequest
+from repro.serving.loop import ServingLoop
+
+__all__ = ["InferenceClient"]
+
+
+class InferenceClient:
+    """Submit prompts to a serving loop; observe them as futures."""
+
+    def __init__(self, loop: ServingLoop):
+        self.loop = loop
+
+    def submit(
+        self,
+        prompt: np.ndarray,
+        n_steps: int,
+        sla: Optional[float] = None,
+        *,
+        t_nw_est_ms: float = 0.0,
+        t_nw_actual_ms: Optional[float] = None,
+        arrival_ms: Optional[float] = None,
+    ) -> InferenceFuture:
+        """Admit one inference request.
+
+        Args:
+          prompt: (S,) prompt tokens.
+          n_steps: tokens to generate.
+          sla: per-request SLA in ms (None: the scheduler's global SLA).
+            Budgeting *and* hedged resolution race against this value.
+          t_nw_est_ms: server-side estimate of the request's network time
+            (what selection budgets against).
+          t_nw_actual_ms: the realized network time (defaults to the
+            estimate — a perfect estimator).
+          arrival_ms: loop-clock arrival (defaults to the loop's ``now``).
+        """
+        request = QueuedRequest(
+            rid=self.loop.next_rid(),
+            tokens=np.asarray(prompt, dtype=np.int32),
+            n_steps=int(n_steps),
+            t_nw_est_ms=float(t_nw_est_ms),
+            t_nw_actual_ms=float(
+                t_nw_est_ms if t_nw_actual_ms is None else t_nw_actual_ms
+            ),
+            arrival_ms=float(
+                self.loop.now_ms if arrival_ms is None else arrival_ms
+            ),
+            sla_ms=None if sla is None else float(sla),
+        )
+        return self.loop.submit(request)

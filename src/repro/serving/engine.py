@@ -1,8 +1,6 @@
-"""Serving engine: the policy-facing front over pluggable execution backends.
+"""Serving engine: variant registry + compatibility front over the loop.
 
-The engine no longer owns compiled executables — that is the
-:class:`repro.serving.backend.ExecutionBackend` layer's job.  The engine
-wires the scheduler (policy half) to two execution tiers:
+The engine owns the two execution tiers:
 
 * ``backend`` — the remote tier (:class:`repro.serving.backend.JitBackend`
   by default): per-variant jitted prefill/decode, real batched decoding.
@@ -13,73 +11,28 @@ wires the scheduler (policy half) to two execution tiers:
   falls back to sampling its on-device latency profile (the simulator
   reference path).
 
-The request-queue front (:meth:`ServingEngine.serve_queue`) is the
-continuous-batching layer: a chunk of queued requests is scheduled in one
-``decide_batch`` call, grouped by selected variant, executed as one real
-``generate`` batch per variant, observed back into the scheduler's live
-profiles (both tiers), and resolved through hedged duplication.  Feed it
-arrival windows from :mod:`repro.serving.loadgen` to serve an open-loop
-trace.
+Request scheduling/dispatch now lives in the event-loop layer
+(:class:`repro.serving.loop.ServingLoop`): admission →
+``decide_batch`` → concurrent per-tier dispatch → hedged resolution.
+:meth:`ServingEngine.serve_queue` survives as a thin compatibility shim —
+one sync-collected tick of a ``ServingLoop`` over this engine's backends —
+so the pre-loop equivalence references (``chunk_size=1``, sampled-hedge
+simulation) keep holding verbatim.  New code should drive a
+``ServingLoop`` (plus :class:`repro.serving.client.InferenceClient`)
+directly.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.registry import ModelRegistry
-from repro.core.sla import RequestMetrics, summarize
+from repro.core.sla import RequestMetrics
 from repro.serving.backend import ExecutionBackend, JitBackend, OnDeviceBackend, Variant
-from repro.serving.scheduler import pad_to_pow2
+from repro.serving.lifecycle import CompletedRequest, QueuedRequest
 
 __all__ = ["Variant", "ServingEngine", "QueuedRequest", "CompletedRequest"]
-
-
-@dataclasses.dataclass
-class QueuedRequest:
-    """One pending inference request in the serving queue."""
-
-    rid: int
-    tokens: np.ndarray  # (S,) prompt tokens
-    n_steps: int
-    t_nw_est_ms: float
-    t_nw_actual_ms: float
-    arrival_ms: float = 0.0
-
-
-@dataclasses.dataclass
-class CompletedRequest:
-    """Resolved outcome of one served request."""
-
-    rid: int
-    model_name: str
-    model_index: int
-    # (n_steps,) generated tokens.  With a real hedge tier (hedge_measured)
-    # these come from the tier that answered; in the sampled-hedge
-    # simulation there is no duplicate execution, so they are always the
-    # remote model's output even when the simulated duplicate "wins".
-    tokens: np.ndarray
-    exec_ms: float  # wall time of the variant batch this request rode in
-    remote_ms: float  # queue wait + network + execution
-    latency_ms: float  # user-observed (post-duplication)
-    accuracy: float  # quality of the result actually used
-    used_remote: bool
-    hedged: bool
-    queue_wait_ms: float = 0.0  # dispatch tick - arrival (charged to budget)
-    ondevice_ms: Optional[float] = None  # duplicate's latency (hedged only)
-    hedge_measured: bool = False  # True: ondevice_ms is real wall time
-
-
-def _pad_batch(requests, rows_idx) -> Tuple[np.ndarray, int]:
-    """Right-pad a group's prompts into one (pow2-rows, width) batch."""
-    width = max(len(requests[i].tokens) for i in rows_idx)
-    batch = np.zeros((pad_to_pow2(len(rows_idx)), width), dtype=np.int32)
-    for row, i in enumerate(rows_idx):
-        t = np.asarray(requests[i].tokens, dtype=np.int32)
-        batch[row, : len(t)] = t
-    steps = max(requests[i].n_steps for i in rows_idx)
-    return batch, steps
 
 
 class ServingEngine:
@@ -88,9 +41,14 @@ class ServingEngine:
         max_len: int = 256,
         backend: Optional[ExecutionBackend] = None,
         hedge_backend: Optional[OnDeviceBackend] = None,
+        dispatch: str = "sync",
     ):
+        # The engine is the *compatibility* surface, so it defaults to the
+        # serialized reference behavior legacy callers measured against;
+        # the new API (ServingLoop) defaults to async dispatch.
         self.backend = backend if backend is not None else JitBackend(max_len)
         self.hedge_backend = hedge_backend
+        self.dispatch = dispatch
 
     # -- thin delegation to the remote tier ----------------------------------
     @property
@@ -110,7 +68,19 @@ class ServingEngine:
         (generated (B, n_steps), wall_ms)."""
         return self.backend.generate(name, tokens, n_steps)
 
-    # -- continuous-batching front -------------------------------------------
+    def make_loop(self, scheduler, dispatch: Optional[str] = None):
+        """Build a :class:`repro.serving.loop.ServingLoop` over this
+        engine's backends (the event-loop serving front)."""
+        from repro.serving.loop import ServingLoop
+
+        return ServingLoop(
+            scheduler,
+            self.backend,
+            self.hedge_backend,
+            dispatch=self.dispatch if dispatch is None else dispatch,
+        )
+
+    # -- compatibility shim over the event loop ------------------------------
     def serve_queue(
         self,
         scheduler,
@@ -119,119 +89,28 @@ class ServingEngine:
     ) -> Tuple[List[CompletedRequest], Optional[RequestMetrics]]:
         """Serve one chunk of queued requests with continuous batching.
 
-        One ``decide_batch`` call schedules the whole chunk; requests that
-        picked the same variant run as a single real ``generate`` batch on
-        the remote tier (prompts right-padded to the group's longest, rows
-        padded to a power of two to bound the set of compiled shapes).
-        Every request in a variant batch shares the batch's wall time — the
-        continuous-batching cost model.  Backends absorb XLA compile time
-        with an untimed warm-up per shape, so it is never charged to
-        requests or folded into the live EWMA profiles.
-
-        Hedged rows additionally run as one real batch on the
-        ``hedge_backend`` (when configured): both tiers' *measured* wall
-        times feed ``scheduler.resolve_chunk``, the on-device observation
-        folds into the scheduler's live on-device EWMA profile, and
-        requests the duplicate wins return the hedge variant's tokens.
-        Without a hedge backend the duplicate's latency is sampled from the
-        scheduler's on-device profile (simulation fallback — the reference
-        behavior for equivalence tests).
-
-        ``dispatch_ms`` is the scheduling-tick timestamp (e.g. the close
-        of the arrival window): each request's queueing wait
-        ``dispatch_ms - arrival_ms`` is charged against its budget at
-        selection time, included in its reported latency, and recorded on
-        the completion (``queue_wait_ms``).  Defaults to the chunk's
-        latest arrival (zero wait when ``arrival_ms`` is unset).  Ticks
-        are assumed to execute independently — earlier windows' wall time
-        does not serialize into later ones.
+        Thin shim: admits ``requests`` into a fresh
+        :class:`repro.serving.loop.ServingLoop` and collects exactly one
+        tick at ``dispatch_ms`` (default: the chunk's latest arrival).  All
+        semantics — one ``decide_batch`` call per chunk, per-variant
+        ``generate`` batches with shared wall times, queue wait charged to
+        both race clocks, measured-or-sampled hedge resolution — live in
+        the loop now; this wrapper only preserves the historical
+        batch-in/batch-out signature.  The engine's ``dispatch`` mode
+        decides whether the tiers' batches run serialized ("sync", the
+        default here — the deterministic reference legacy callers
+        measured against) or overlap ("async").
 
         Returns ``(completions, metrics)`` with completions in the input
         order; ``metrics`` is None for an empty chunk.
         """
         if not requests:
             return [], None
-        arrivals = np.asarray([r.arrival_ms for r in requests])
-        if dispatch_ms is None:
-            dispatch_ms = float(arrivals.max())
-        queue_wait = np.maximum(dispatch_ms - arrivals, 0.0)
-        decision = scheduler.decide_batch(
-            np.asarray([r.t_nw_est_ms for r in requests]) + queue_wait
-        )
-        n = len(requests)
-        exec_ms = np.empty(n)
-        gen_tokens: List[Optional[np.ndarray]] = [None] * n
-        for m in np.unique(decision.model_index):
-            name = scheduler.names[int(m)]
-            group = np.flatnonzero(decision.model_index == m)
-            batch, steps = _pad_batch(requests, group)
-            out, wall_ms = self.backend.run_batch(name, batch, steps)
-            exec_ms[group] = wall_ms
-            for row, i in enumerate(group):
-                gen_tokens[i] = out[row, : requests[i].n_steps]
-        scheduler.observe_batch(decision.model_index, exec_ms)
-
-        remote_ms = (
-            queue_wait
-            + np.asarray([r.t_nw_actual_ms for r in requests])
-            + exec_ms
-        )
-
-        # The hedge tier: run every hedged row's duplicate as one real
-        # batch; its measured wall time is the duplicate's latency.
-        hedged_rows = np.flatnonzero(decision.hedged)
-        measured = self.hedge_backend is not None and hedged_rows.size > 0
-        ondevice_in: Optional[np.ndarray] = None
-        hedge_tokens: dict[int, np.ndarray] = {}
-        if measured:
-            batch, steps = _pad_batch(requests, hedged_rows)
-            out, wall_ms = self.hedge_backend.hedge(batch, steps)
-            for row, i in enumerate(hedged_rows):
-                hedge_tokens[int(i)] = out[row, : requests[i].n_steps]
-            ondevice_in = np.full(n, wall_ms)
-            scheduler.observe_ondevice(np.full(hedged_rows.size, wall_ms))
-
-        # Both tiers launch at the dispatch tick, so queue wait charges the
-        # duplicate's race clock too — SLA accounting stays honest when the
-        # wait alone approaches the SLA.
-        acc_used, latency, used_remote, ondevice_ms = scheduler.resolve_chunk(
-            decision, remote_ms, ondevice_ms=ondevice_in,
-            ondevice_wait_ms=queue_wait,
-        )
-        completions = [
-            CompletedRequest(
-                rid=requests[i].rid,
-                model_name=scheduler.names[int(decision.model_index[i])],
-                model_index=int(decision.model_index[i]),
-                tokens=(
-                    hedge_tokens[i]
-                    if i in hedge_tokens and not used_remote[i]
-                    else gen_tokens[i]
-                ),
-                exec_ms=float(exec_ms[i]),
-                remote_ms=float(remote_ms[i]),
-                latency_ms=float(latency[i]),
-                accuracy=float(acc_used[i]),
-                used_remote=bool(used_remote[i]),
-                hedged=bool(decision.hedged[i]),
-                queue_wait_ms=float(queue_wait[i]),
-                ondevice_ms=(
-                    float(ondevice_ms[i]) if decision.hedged[i] else None
-                ),
-                hedge_measured=measured and bool(decision.hedged[i]),
-            )
-            for i in range(n)
-        ]
-        metrics = summarize(
-            accuracy_used=acc_used,
-            latency_ms=latency,
-            t_sla_ms=scheduler.cfg.t_sla_ms,
-            model_names=scheduler.names,
-            model_index=decision.model_index,
-            used_remote=used_remote,
-            queue_wait_ms=queue_wait,
-        )
-        return completions, metrics
+        loop = self.make_loop(scheduler)
+        for r in requests:
+            loop.submit(r)
+        result = loop.tick(now_ms=dispatch_ms)
+        return result.completions, result.metrics
 
     def measure_profiles(
         self, prompt_len: int, gen_tokens: int, batch: int = 1, trials: int = 5,

@@ -1,0 +1,219 @@
+"""Request lifecycle: the per-request objects of the async serving API.
+
+A request moves through explicit states::
+
+    QUEUED ──▶ SCHEDULED ──▶ EXECUTING ──▶ RESOLVED
+       │            │             │
+       └────────────┴─────────────┴──────▶ CANCELLED
+
+* **QUEUED** — admitted by :class:`repro.serving.loop.ServingLoop` (or an
+  :class:`repro.serving.client.InferenceClient`), waiting for a scheduling
+  tick.  :meth:`InferenceFuture.cancel` here frees the request entirely —
+  it never occupies a batch slot on either tier.
+* **SCHEDULED** — a tick picked it up; ``decide_batch`` chose its variant.
+* **EXECUTING** — dispatched to the execution tier(s); per-tier dispatch
+  wall timestamps are recorded on the future.  Cancellation from here on
+  cannot recall the batched execution, but the result is discarded at
+  resolution (the measurement still folds into the live EWMA profiles —
+  the work really happened).
+* **RESOLVED** — hedged duplication resolved; :meth:`InferenceFuture.result`
+  returns the :class:`CompletedRequest`.
+
+The dataclasses :class:`QueuedRequest` / :class:`CompletedRequest` are the
+wire format between the client, the loop, and the compatibility shim
+(:meth:`repro.serving.engine.ServingEngine.serve_queue`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = [
+    "RequestState",
+    "RequestCancelled",
+    "InferenceFuture",
+    "QueuedRequest",
+    "CompletedRequest",
+]
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    SCHEDULED = "scheduled"
+    EXECUTING = "executing"
+    RESOLVED = "resolved"
+    CANCELLED = "cancelled"
+
+
+class RequestCancelled(RuntimeError):
+    """Raised by :meth:`InferenceFuture.result` for a cancelled request."""
+
+
+@dataclasses.dataclass
+class QueuedRequest:
+    """One pending inference request in the serving queue."""
+
+    rid: int
+    tokens: np.ndarray  # (S,) prompt tokens
+    n_steps: int
+    t_nw_est_ms: float
+    t_nw_actual_ms: float
+    arrival_ms: float = 0.0
+    sla_ms: Optional[float] = None  # per-request SLA (None: the loop's)
+
+
+@dataclasses.dataclass
+class CompletedRequest:
+    """Resolved outcome of one served request."""
+
+    rid: int
+    model_name: str
+    model_index: int
+    # (n_steps,) generated tokens.  With a real hedge tier (hedge_measured)
+    # these come from the tier that answered; in the sampled-hedge
+    # simulation there is no duplicate execution, so they are always the
+    # remote model's output even when the simulated duplicate "wins".
+    tokens: np.ndarray
+    exec_ms: float  # wall time of the variant batch this request rode in
+    remote_ms: float  # queue wait + network + execution
+    latency_ms: float  # user-observed (post-duplication)
+    accuracy: float  # quality of the result actually used
+    used_remote: bool
+    hedged: bool
+    queue_wait_ms: float = 0.0  # dispatch tick - arrival (charged to budget)
+    ondevice_ms: Optional[float] = None  # duplicate's latency (hedged only)
+    hedge_measured: bool = False  # True: ondevice_ms is real wall time
+    time_to_schedule_ms: float = 0.0  # scheduling tick - arrival
+    race_resolution: str = "unhedged"  # remote_won | ondevice_won | unhedged
+
+
+class InferenceFuture:
+    """Handle to one in-flight request; resolved by the serving loop.
+
+    Carries the loop-clock lifecycle timestamps (``submitted_ms``,
+    ``scheduled_ms``, ``resolved_ms``) plus per-tier *wall-clock* dispatch
+    and completion timestamps (``tier_dispatch_wall_ms`` /
+    ``tier_done_wall_ms``, keys ``"remote"`` and ``"ondevice"``) — the raw
+    material for race-clock assertions: with async dispatch both tiers'
+    entries differ by thread-submit overhead, not by a serialized batch.
+    """
+
+    def __init__(self, request: QueuedRequest, loop=None):
+        self.request = request
+        self.state = RequestState.QUEUED
+        self.submitted_ms: float = request.arrival_ms
+        self.scheduled_ms: Optional[float] = None
+        self.resolved_ms: Optional[float] = None
+        self.tier_dispatch_wall_ms: Dict[str, float] = {}
+        self.tier_done_wall_ms: Dict[str, float] = {}
+        self._loop = loop
+        self._event = threading.Event()
+        # Guards the QUEUED -> SCHEDULED / QUEUED -> CANCELLED transition:
+        # cancel() may race the loop's tick from another thread, and a
+        # request whose cancel() returned True must never be dispatched.
+        self._state_lock = threading.Lock()
+        self._completion: Optional[CompletedRequest] = None
+        self._cancel_requested = False
+
+    # -- inspection -----------------------------------------------------------
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    def done(self) -> bool:
+        """True once the request is RESOLVED or CANCELLED (never blocks)."""
+        return self._event.is_set()
+
+    def cancelled(self) -> bool:
+        return self.state is RequestState.CANCELLED
+
+    @property
+    def time_to_schedule_ms(self) -> Optional[float]:
+        if self.scheduled_ms is None:
+            return None
+        return self.scheduled_ms - self.submitted_ms
+
+    # -- cancellation ---------------------------------------------------------
+    def cancel(self) -> bool:
+        """Request cancellation.
+
+        Returns True when the request was still QUEUED — it is dropped
+        immediately and will never occupy a batch slot on either tier.
+        Later states return False: the batched execution cannot be
+        recalled, but the result is discarded at resolution (the loser- and
+        winner-tier measurements still fold into the EWMA profiles) and
+        :meth:`result` raises :class:`RequestCancelled`.
+        """
+        with self._state_lock:
+            if self.done():
+                return False
+            if self.state is RequestState.QUEUED:
+                self._mark_cancelled()
+                return True
+            self._cancel_requested = True
+            return False
+
+    # -- result ---------------------------------------------------------------
+    def result(self, timeout: Optional[float] = None) -> CompletedRequest:
+        """Block until resolved.
+
+        With ``timeout=None`` (blocking mode) the call *drives* the
+        attached loop — a single-threaded caller never deadlocks.  With a
+        ``timeout`` (wall-clock seconds) it only waits on the resolution
+        event — ticks must be driven elsewhere — and raises
+        :class:`TimeoutError` when the timeout elapses; driving the loop
+        here could run unbounded batch work past the deadline.  Raises
+        :class:`RequestCancelled` for a cancelled request.
+        """
+        if timeout is None and not self._event.is_set() and self._loop is not None:
+            self._loop.flush()
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request.rid} unresolved after {timeout}s "
+                f"(state={self.state.value})"
+            )
+        if self.state is RequestState.CANCELLED:
+            raise RequestCancelled(f"request {self.request.rid} was cancelled")
+        assert self._completion is not None
+        return self._completion
+
+    # -- loop-side transitions ------------------------------------------------
+    def _try_schedule(self, now_ms: float) -> bool:
+        """Atomically claim a QUEUED future for a tick; False if a racing
+        cancel() (or a previous tick) got there first."""
+        with self._state_lock:
+            if self.state is not RequestState.QUEUED:
+                return False
+            self.state = RequestState.SCHEDULED
+            self.scheduled_ms = now_ms
+            return True
+
+    def _mark_executing(self, tier_dispatch_wall_ms: Dict[str, float]) -> None:
+        self.state = RequestState.EXECUTING
+        self.tier_dispatch_wall_ms.update(tier_dispatch_wall_ms)
+
+    def _mark_resolved(self, completion: CompletedRequest) -> None:
+        # Under the lock: a cancel() that returned False *after* observing
+        # EXECUTING must still win (result discarded), never be overtaken
+        # by a concurrent resolution.
+        with self._state_lock:
+            if self._cancel_requested:
+                self._mark_cancelled()
+                return
+            self.state = RequestState.RESOLVED
+            self._completion = completion
+            self.resolved_ms = self.request.arrival_ms + completion.latency_ms
+            self._event.set()
+
+    def _mark_cancelled(self) -> None:
+        self.state = RequestState.CANCELLED
+        self._event.set()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"InferenceFuture(rid={self.request.rid}, state={self.state.value})"
+        )

@@ -1,0 +1,473 @@
+"""Event-loop serving front: admission → decide → dispatch → resolve ticks.
+
+:class:`ServingLoop` is the middle layer of the three-layer serving stack
+(client / loop / backend).  Requests are *submitted* (admission — they
+become :class:`repro.serving.lifecycle.InferenceFuture` objects in QUEUED
+state) and served by *ticks*: one tick schedules the pending chunk with a
+single ``decide_batch`` call, dispatches every variant group — and the
+hedged rows' on-device duplicate — through the async
+:meth:`repro.serving.backend.ExecutionBackend.submit_batch` protocol, then
+collects, observes, and resolves.
+
+Because *all* batches of a tick are submitted before any is waited on, the
+remote batch and the on-device duplicate genuinely run concurrently
+(``dispatch="async"``, worker threads): ``resolve_chunk`` races
+first-completion wall times measured over the same interval, instead of
+two serialized measurements.  Both tiers' race clocks start at the
+dispatch tick — the queue wait is charged to each exactly once
+(previously the duplicate's wall clock silently started after the remote
+batch finished; see ``TickStats`` for the overlap evidence).
+
+``dispatch="sync"`` is the serialized fallback: ``submit_batch`` executes
+inline, keeping CI runs and the equivalence references deterministic.
+:meth:`ServingEngine.serve_queue <repro.serving.engine.ServingEngine.serve_queue>`
+is a thin shim over one sync-collected tick of this loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.sla import RequestMetrics, summarize
+from repro.serving.backend import BatchHandle, ExecutionBackend, OnDeviceBackend
+from repro.serving.lifecycle import (
+    CompletedRequest,
+    InferenceFuture,
+    QueuedRequest,
+    RequestState,
+)
+from repro.serving.loadgen import LoadTrace, iter_windows
+from repro.serving.scheduler import pad_to_pow2
+
+__all__ = ["ServingLoop", "TickResult", "TickStats"]
+
+
+def _pad_batch(requests, rows_idx) -> Tuple[np.ndarray, int]:
+    """Right-pad a group's prompts into one (pow2-rows, width) batch."""
+    width = max(len(requests[i].tokens) for i in rows_idx)
+    batch = np.zeros((pad_to_pow2(len(rows_idx)), width), dtype=np.int32)
+    for row, i in enumerate(rows_idx):
+        t = np.asarray(requests[i].tokens, dtype=np.int32)
+        batch[row, : len(t)] = t
+    steps = max(requests[i].n_steps for i in rows_idx)
+    return batch, steps
+
+
+@dataclasses.dataclass
+class TickStats:
+    """Wall-clock evidence of one tick's dispatch behavior.
+
+    ``span_wall_ms`` (first dispatch → last completion) versus
+    ``serialized_wall_ms`` (sum of the tiers' individual wall times) is the
+    overlap witness: async dispatch gives ``span < serialized`` on any
+    hedged tick, a serialized tick gives ``span ≈ serialized``.
+    """
+
+    n_requests: int
+    n_hedged: int
+    remote_wall_ms: float  # sum of the remote variant batches' wall times
+    hedge_wall_ms: Optional[float]  # duplicate batch wall time (measured)
+    span_wall_ms: float  # first dispatch -> last batch completion
+    dispatch_spread_wall_ms: float  # max - min dispatch stamp across tiers
+    hedge_dispatched_before_remote_done: Optional[bool]
+
+    @property
+    def serialized_wall_ms(self) -> float:
+        return self.remote_wall_ms + (self.hedge_wall_ms or 0.0)
+
+    @property
+    def hedge_rows(self) -> int:
+        """Live rows in the measured duplicate batch (0: no hedge tier)."""
+        return self.n_hedged if self.hedge_wall_ms is not None else 0
+
+
+@dataclasses.dataclass
+class TickResult:
+    """Outcome of one scheduling tick."""
+
+    completions: List[CompletedRequest]  # resolved, submission order
+    metrics: Optional[RequestMetrics]  # None for an empty / all-cancelled tick
+    stats: TickStats
+
+
+@dataclasses.dataclass
+class _InflightTick:
+    """A dispatched-but-uncollected tick (async mode can carry these)."""
+
+    futures: List[InferenceFuture]
+    requests: List[QueuedRequest]
+    decision: object  # BatchDecision
+    queue_wait: np.ndarray
+    t_sla: object  # scalar or (n,) vector raced at resolution
+    now_ms: float
+    groups: List[Tuple[int, np.ndarray, BatchHandle]]  # (model, rows, handle)
+    row_handles: List[BatchHandle]  # request index -> its remote handle
+    hedged_rows: np.ndarray
+    hedge_handle: Optional[BatchHandle]
+
+    def poll(self) -> bool:
+        handles = [h for _, _, h in self.groups]
+        if self.hedge_handle is not None:
+            handles.append(self.hedge_handle)
+        return all(h.poll() for h in handles)
+
+
+class ServingLoop:
+    """Admission → ``decide_batch`` → concurrent dispatch → resolution.
+
+    Parameters
+    ----------
+    scheduler:
+        The policy half (:class:`repro.serving.scheduler.MDInferenceScheduler`).
+    backend:
+        The remote tier.
+    hedge_backend:
+        Optional on-device tier; without it hedges resolve on profile
+        samples (the simulation reference).
+    dispatch:
+        ``"async"`` (worker threads, tiers overlap — the default) or
+        ``"sync"`` (inline execution, deterministic serialized fallback).
+    """
+
+    def __init__(
+        self,
+        scheduler,
+        backend: ExecutionBackend,
+        hedge_backend: Optional[OnDeviceBackend] = None,
+        *,
+        dispatch: str = "async",
+    ):
+        if dispatch not in ("async", "sync"):
+            raise ValueError(f"dispatch must be 'async' or 'sync', got {dispatch!r}")
+        self.scheduler = scheduler
+        self.backend = backend
+        self.hedge_backend = hedge_backend
+        self.dispatch = dispatch
+        self.now_ms = 0.0
+        self._pending: List[InferenceFuture] = []
+        self._inflight: List[_InflightTick] = []
+        self._rid = itertools.count()
+
+    # -- admission ------------------------------------------------------------
+    def next_rid(self) -> int:
+        return next(self._rid)
+
+    def submit(self, request: QueuedRequest) -> InferenceFuture:
+        """Admit a request; it waits in QUEUED state for the next tick."""
+        future = InferenceFuture(request, loop=self)
+        self._pending.append(future)
+        return future
+
+    @property
+    def pending(self) -> int:
+        return sum(1 for f in self._pending if f.state is RequestState.QUEUED)
+
+    @property
+    def inflight(self) -> int:
+        return sum(len(t.futures) for t in self._inflight)
+
+    # -- the event loop -------------------------------------------------------
+    def tick(
+        self, now_ms: Optional[float] = None, *, wait: bool = True
+    ) -> Optional[TickResult]:
+        """Run one scheduling tick over the pending chunk.
+
+        ``now_ms`` is the tick's loop-clock timestamp (e.g. the close of an
+        arrival window); it defaults to the chunk's latest arrival.  With
+        ``wait=True`` the tick's batches are collected and resolved before
+        returning (the continuous-batching semantics of the old
+        ``serve_queue``).  ``wait=False`` returns ``None`` right after
+        dispatch — futures stay EXECUTING and are resolved by a later
+        :meth:`poll` / :meth:`drain` (the genuinely-async event loop).
+        """
+        # Swap, don't read-then-clear: a submit() racing this tick from
+        # another thread must land in either this batch or the next one,
+        # never vanish between a snapshot and a clear().
+        snapshot, self._pending = self._pending, []
+        candidates = [f for f in snapshot if f.state is RequestState.QUEUED]
+        if not candidates:
+            return None
+        if now_ms is None:
+            now_ms = float(max(f.request.arrival_ms for f in candidates))
+        # Atomic QUEUED -> SCHEDULED claim: a cancel() racing this tick from
+        # another thread loses its slot here, never in a dispatched batch.
+        batch = [f for f in candidates if f._try_schedule(now_ms)]
+        if not batch:
+            return None
+
+        requests = [f.request for f in batch]
+        arrivals = np.asarray([r.arrival_ms for r in requests])
+        self.now_ms = max(self.now_ms, now_ms)
+        queue_wait = np.maximum(now_ms - arrivals, 0.0)
+
+        # Per-request SLA: selection budgets come from t_sla - est - wait,
+        # expressed as an effective estimate offset against the loop SLA.
+        loop_sla = self.scheduler.cfg.t_sla_ms
+        slas = np.asarray(
+            [loop_sla if r.sla_ms is None else float(r.sla_ms) for r in requests]
+        )
+        t_sla = slas if np.any(slas != loop_sla) else loop_sla
+        est = np.asarray([r.t_nw_est_ms for r in requests])
+        decision = self.scheduler.decide_batch(
+            est + queue_wait + (loop_sla - slas)
+        )
+
+        # Dispatch every batch of the tick before waiting on any of them:
+        # the remote variant groups and the hedged rows' duplicate all
+        # start at this tick — the shared origin of both race clocks.
+        sync = self.dispatch == "sync"
+        groups: List[Tuple[int, np.ndarray, BatchHandle]] = []
+        row_handles: List[Optional[BatchHandle]] = [None] * len(requests)
+        for m in np.unique(decision.model_index):
+            rows = np.flatnonzero(decision.model_index == m)
+            gbatch, steps = _pad_batch(requests, rows)
+            name = self.scheduler.names[int(m)]
+            handle = self.backend.submit_batch(name, gbatch, steps, sync=sync)
+            groups.append((int(m), rows, handle))
+            for i in rows:
+                row_handles[i] = handle
+
+        hedged_rows = np.flatnonzero(decision.hedged)
+        hedge_handle: Optional[BatchHandle] = None
+        if self.hedge_backend is not None and hedged_rows.size > 0:
+            hbatch, hsteps = _pad_batch(requests, hedged_rows)
+            hedge_handle = self.hedge_backend.submit_hedge(
+                hbatch, hsteps, sync=sync
+            )
+
+        for i, f in enumerate(batch):
+            tiers = {"remote": row_handles[i].dispatch_wall_ms}
+            if hedge_handle is not None and decision.hedged[i]:
+                tiers["ondevice"] = hedge_handle.dispatch_wall_ms
+            f._mark_executing(tiers)
+
+        tick = _InflightTick(
+            futures=batch,
+            requests=requests,
+            decision=decision,
+            queue_wait=queue_wait,
+            t_sla=t_sla,
+            now_ms=now_ms,
+            groups=groups,
+            row_handles=row_handles,
+            hedged_rows=hedged_rows,
+            hedge_handle=hedge_handle,
+        )
+        if not wait:
+            self._inflight.append(tick)
+            return None
+        return self._collect(tick)
+
+    def poll(self) -> List[TickResult]:
+        """Resolve every in-flight tick whose batches all finished.
+
+        Never blocks: ticks with unfinished batches stay in flight.
+        """
+        # Evaluate poll() once per tick: a batch finishing between two
+        # evaluations must land in exactly one of the two lists.
+        ready = {id(t): t.poll() for t in self._inflight}
+        done = [t for t in self._inflight if ready[id(t)]]
+        self._inflight = [t for t in self._inflight if not ready[id(t)]]
+        return [self._collect(t) for t in done]
+
+    def drain(self) -> List[TickResult]:
+        """Block until every in-flight tick resolves; returns their results."""
+        inflight, self._inflight = self._inflight, []
+        return [self._collect(t) for t in inflight]
+
+    def flush(self) -> List[TickResult]:
+        """Drive the loop until nothing is pending or in flight."""
+        results = self.drain()
+        while self.pending:
+            r = self.tick()
+            if r is not None:
+                results.append(r)
+            results.extend(self.drain())
+        return results
+
+    # -- collection / resolution ---------------------------------------------
+    def _collect(self, tick: _InflightTick) -> TickResult:
+        requests, decision = tick.requests, tick.decision
+        n = len(requests)
+        exec_ms = np.empty(n)
+        gen_tokens: List[Optional[np.ndarray]] = [None] * n
+        remote_wall_sum = 0.0
+        for m, rows, handle in tick.groups:
+            out, wall_ms = handle.wait()
+            remote_wall_sum += wall_ms
+            exec_ms[rows] = wall_ms
+            for row, i in enumerate(rows):
+                gen_tokens[i] = out[row, : requests[i].n_steps]
+        self.scheduler.observe_batch(decision.model_index, exec_ms)
+
+        remote_ms = (
+            tick.queue_wait
+            + np.asarray([r.t_nw_actual_ms for r in requests])
+            + exec_ms
+        )
+
+        measured = tick.hedge_handle is not None
+        ondevice_in: Optional[np.ndarray] = None
+        hedge_wall: Optional[float] = None
+        hedge_tokens: Dict[int, np.ndarray] = {}
+        if measured:
+            out, hedge_wall = tick.hedge_handle.wait()
+            for row, i in enumerate(tick.hedged_rows):
+                hedge_tokens[int(i)] = out[row, : requests[i].n_steps]
+            ondevice_in = np.full(n, hedge_wall)
+            self.scheduler.observe_ondevice(
+                np.full(tick.hedged_rows.size, hedge_wall)
+            )
+
+        # Both tiers launch at the dispatch tick, so queue wait charges the
+        # duplicate's race clock too — and with async dispatch that is also
+        # true of the *wall* clocks (see TickStats / the regression test).
+        acc_used, latency, used_remote, ondevice_ms = self.scheduler.resolve_chunk(
+            decision, remote_ms, ondevice_ms=ondevice_in,
+            ondevice_wait_ms=tick.queue_wait, t_sla_ms=tick.t_sla,
+        )
+
+        names = self.scheduler.names
+        completions: List[CompletedRequest] = []
+        live: List[int] = []
+        for i, f in enumerate(tick.futures):
+            done_walls = {"remote": tick.row_handles[i].done_wall_ms}
+            if measured and decision.hedged[i]:
+                done_walls["ondevice"] = tick.hedge_handle.done_wall_ms
+            f.tier_done_wall_ms.update(done_walls)
+            c = CompletedRequest(
+                rid=requests[i].rid,
+                model_name=names[int(decision.model_index[i])],
+                model_index=int(decision.model_index[i]),
+                tokens=(
+                    hedge_tokens[i]
+                    if i in hedge_tokens and not used_remote[i]
+                    else gen_tokens[i]
+                ),
+                exec_ms=float(exec_ms[i]),
+                remote_ms=float(remote_ms[i]),
+                latency_ms=float(latency[i]),
+                accuracy=float(acc_used[i]),
+                used_remote=bool(used_remote[i]),
+                hedged=bool(decision.hedged[i]),
+                queue_wait_ms=float(tick.queue_wait[i]),
+                ondevice_ms=(
+                    float(ondevice_ms[i]) if decision.hedged[i] else None
+                ),
+                hedge_measured=measured and bool(decision.hedged[i]),
+                time_to_schedule_ms=float(
+                    tick.now_ms - requests[i].arrival_ms
+                ),
+                race_resolution=(
+                    "unhedged" if not decision.hedged[i]
+                    else ("remote_won" if used_remote[i] else "ondevice_won")
+                ),
+            )
+            f._mark_resolved(c)
+            if f.state is RequestState.RESOLVED:
+                live.append(i)
+                completions.append(c)
+
+        metrics = None
+        if live:
+            idx = np.asarray(live)
+            t_sla_live = (
+                tick.t_sla
+                if np.isscalar(tick.t_sla)
+                else np.asarray(tick.t_sla)[idx]
+            )
+            metrics = summarize(
+                accuracy_used=acc_used[idx],
+                latency_ms=latency[idx],
+                t_sla_ms=t_sla_live,
+                model_names=names,
+                model_index=decision.model_index[idx],
+                used_remote=used_remote[idx],
+                queue_wait_ms=tick.queue_wait[idx],
+                race_resolution=np.asarray(
+                    [c.race_resolution for c in completions]
+                ),
+                time_to_schedule_ms=np.asarray(
+                    [c.time_to_schedule_ms for c in completions]
+                ),
+            )
+
+        dispatch_stamps = [h.dispatch_wall_ms for _, _, h in tick.groups]
+        done_stamps = [h.done_wall_ms for _, _, h in tick.groups]
+        if tick.hedge_handle is not None:
+            dispatch_stamps.append(tick.hedge_handle.dispatch_wall_ms)
+            done_stamps.append(tick.hedge_handle.done_wall_ms)
+        stats = TickStats(
+            n_requests=n,
+            n_hedged=int(tick.hedged_rows.size),
+            remote_wall_ms=remote_wall_sum,
+            hedge_wall_ms=hedge_wall,
+            span_wall_ms=max(done_stamps) - min(dispatch_stamps),
+            dispatch_spread_wall_ms=max(dispatch_stamps) - min(dispatch_stamps),
+            hedge_dispatched_before_remote_done=(
+                tick.hedge_handle.dispatch_wall_ms
+                < max(h.done_wall_ms for _, _, h in tick.groups)
+                if tick.hedge_handle is not None
+                else None
+            ),
+        )
+        return TickResult(completions=completions, metrics=metrics, stats=stats)
+
+    # -- loadgen integration --------------------------------------------------
+    def drain_trace(
+        self,
+        trace: LoadTrace,
+        window_ms: float,
+        *,
+        tokens_for: Callable[[int], np.ndarray],
+        n_steps: int,
+        on_tick: Optional[Callable[[float, TickResult], None]] = None,
+    ) -> Tuple[List[CompletedRequest], Optional[RequestMetrics]]:
+        """Drain a :mod:`repro.serving.loadgen` trace through the tick path.
+
+        Each arrival window becomes one tick fired at the window's close;
+        the wait until then is charged against each request's budget and
+        latency.  ``on_tick(tick_ms, result)`` observes each tick.  Returns
+        all completions plus trace-level aggregate metrics.
+        """
+        completions: List[CompletedRequest] = []
+        for window in iter_windows(trace, window_ms):
+            for i in window:
+                self.submit(
+                    QueuedRequest(
+                        rid=int(i),
+                        tokens=tokens_for(int(i)),
+                        n_steps=n_steps,
+                        t_nw_est_ms=float(trace.t_nw_est_ms[i]),
+                        t_nw_actual_ms=float(trace.t_nw_ms[i]),
+                        arrival_ms=float(trace.arrival_ms[i]),
+                    )
+                )
+            tick_ms = (trace.arrival_ms[window[0]] // window_ms + 1) * window_ms
+            result = self.tick(now_ms=float(tick_ms))
+            if result is None:
+                continue
+            if on_tick is not None:
+                on_tick(float(tick_ms), result)
+            completions.extend(result.completions)
+        metrics = None
+        if completions:
+            metrics = summarize(
+                accuracy_used=np.asarray([c.accuracy for c in completions]),
+                latency_ms=np.asarray([c.latency_ms for c in completions]),
+                t_sla_ms=self.scheduler.cfg.t_sla_ms,
+                model_names=self.scheduler.names,
+                model_index=np.asarray([c.model_index for c in completions]),
+                used_remote=np.asarray([c.used_remote for c in completions]),
+                queue_wait_ms=np.asarray([c.queue_wait_ms for c in completions]),
+                race_resolution=np.asarray(
+                    [c.race_resolution for c in completions]
+                ),
+                time_to_schedule_ms=np.asarray(
+                    [c.time_to_schedule_ms for c in completions]
+                ),
+            )
+        return completions, metrics

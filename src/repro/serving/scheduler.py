@@ -277,6 +277,7 @@ class MDInferenceScheduler:
         remote_latency_ms: np.ndarray,
         ondevice_ms: Optional[np.ndarray] = None,
         ondevice_wait_ms: float | np.ndarray = 0.0,
+        t_sla_ms: float | np.ndarray | None = None,
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Resolve a chunk through hedged duplication.
 
@@ -293,6 +294,10 @@ class MDInferenceScheduler:
         the duplicate's race clock so SLA accounting stays honest under
         queueing; pure simulation has no queue and leaves it 0.
 
+        ``t_sla_ms`` overrides the scheduler-wide SLA — a scalar or a
+        per-request vector (the serving loop passes per-request SLAs from
+        :attr:`repro.serving.lifecycle.QueuedRequest.sla_ms`).
+
         Returns ``(accuracy_used, latency_ms, used_remote, ondevice_ms)``;
         the last element echoes the duplicate's from-arrival latencies
         actually raced (wait + execution).  Non-hedged requests keep their
@@ -308,13 +313,15 @@ class MDInferenceScheduler:
                 _EXEC_FLOOR_MS,
             )
         ondevice_ms = np.asarray(ondevice_ms, dtype=np.float64) + ondevice_wait_ms
+        if t_sla_ms is None:
+            t_sla_ms = self.cfg.t_sla_ms
         sel_acc = self.accuracy[decision.model_index]
         out = resolve_duplication(
             remote_latency_ms,
             sel_acc,
             ondevice_ms,
             self.ondevice.accuracy,
-            self.cfg.t_sla_ms,
+            t_sla_ms,
         )
         acc_used = np.where(decision.hedged, out.accuracy, sel_acc)
         latency = np.where(decision.hedged, out.latency_ms, remote_latency_ms)

@@ -1,0 +1,67 @@
+"""Sleep-based stub execution tiers for deterministic ServingLoop tests.
+
+``time.sleep`` releases the GIL, so two stub batches dispatched async
+genuinely overlap — overlap/poll semantics become deterministic instead of
+depending on XLA thread scheduling, and the tests skip all compile cost.
+"""
+import time
+
+import numpy as np
+
+from repro.core.registry import ModelProfile, ModelRegistry
+from repro.serving.backend import ExecutionBackend
+from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
+
+STUB_NAMES = ["stub-a", "stub-b"]
+
+
+class StubRemoteBackend(ExecutionBackend):
+    """Remote tier stub: generation is a fixed-duration sleep."""
+
+    def __init__(self, delay_s: float = 0.05):
+        super().__init__()
+        self.delay_s = delay_s
+        self.batch_rows = []  # rows of each executed (timed) batch
+
+    def register(self, v):
+        self.variants[v.name] = v
+
+    def generate(self, name, tokens, n_steps):
+        t0 = time.perf_counter()
+        time.sleep(self.delay_s)
+        self.batch_rows.append(int(np.shape(tokens)[0]))
+        out = np.zeros((np.shape(tokens)[0], n_steps), dtype=np.int32)
+        return out, (time.perf_counter() - t0) * 1e3
+
+    def run_batch(self, name, batch, n_steps):
+        # No XLA: skip the warm-up so every stub execution is one sleep.
+        return self.generate(name, batch, n_steps)
+
+
+class StubHedgeBackend(StubRemoteBackend):
+    """On-device tier stub with the OnDeviceBackend hedge surface."""
+
+    hedge_name = "stub-hedge"
+
+    def hedge(self, batch, n_steps):
+        return self.run_batch(self.hedge_name, batch, n_steps)
+
+    def submit_hedge(self, batch, n_steps, *, sync=False):
+        return self.submit_batch(self.hedge_name, batch, n_steps, sync=sync)
+
+
+def stub_registry() -> ModelRegistry:
+    return ModelRegistry(
+        [
+            ModelProfile(STUB_NAMES[0], 40.0, 30.0, 2.0),
+            ModelProfile(STUB_NAMES[1], 80.0, 60.0, 4.0),
+        ]
+    )
+
+
+def stub_scheduler(t_sla_ms: float = 1_000.0, seed: int = 0, **kw):
+    reg = stub_registry()
+    ondevice = ModelProfile("stub-hedge", 35.0, 20.0, 2.0)
+    return MDInferenceScheduler(
+        reg, ondevice, SchedulerConfig(t_sla_ms=t_sla_ms, seed=seed, **kw)
+    )

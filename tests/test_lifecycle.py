@@ -1,0 +1,226 @@
+"""Request lifecycle: InferenceFuture states, cancel/timeout, per-request SLA.
+
+Pure-logic paths run on sleep-based stub backends (deterministic, no XLA);
+the client-facing integration paths run on real tiny variants.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import reduced
+from repro.models import transformer as T
+from repro.serving.backend import OnDeviceBackend
+from repro.serving.client import InferenceClient
+from repro.serving.engine import ServingEngine, Variant
+from repro.serving.lifecycle import (
+    InferenceFuture,
+    QueuedRequest,
+    RequestCancelled,
+    RequestState,
+)
+from repro.serving.loop import ServingLoop
+from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
+
+from loop_stubs import StubHedgeBackend, StubRemoteBackend, stub_scheduler
+
+MAX_LEN = 48
+PROMPT, GEN = 8, 2
+
+
+@pytest.fixture(scope="module")
+def real_loop_parts():
+    """(engine, registry, ondevice profile) over real tiny variants."""
+    hedge = OnDeviceBackend.from_zoo(max_len=MAX_LEN)
+    engine = ServingEngine(max_len=MAX_LEN, hedge_backend=hedge)
+    for name, width, quality in (("small", 32, 40.0), ("large", 64, 80.0)):
+        cfg = reduced(
+            "gemma-2b", d_model=width, n_layers=2,
+            n_heads=2, n_kv_heads=1, head_dim=width // 2,
+        )
+        engine.register(
+            Variant(name, cfg, T.init_params(cfg, jax.random.key(0)), quality)
+        )
+    registry = engine.measure_profiles(prompt_len=PROMPT, gen_tokens=GEN, trials=2)
+    ondevice = hedge.measure_profile(prompt_len=PROMPT, gen_tokens=GEN, trials=2)
+    return engine, registry, ondevice
+
+
+def _client(real_loop_parts, t_sla_ms=5_000.0, seed=0, dispatch="async"):
+    engine, registry, ondevice = real_loop_parts
+    sched = MDInferenceScheduler(
+        registry, ondevice, SchedulerConfig(t_sla_ms=t_sla_ms, seed=seed)
+    )
+    loop = engine.make_loop(sched, dispatch=dispatch)
+    return InferenceClient(loop), loop, sched
+
+
+def _prompt(seed=1):
+    return np.random.default_rng(seed).integers(0, 64, PROMPT)
+
+
+# ---------------------------------------------------------------------------
+# State machine + timestamps.
+# ---------------------------------------------------------------------------
+def test_future_walks_the_lifecycle(real_loop_parts):
+    client, loop, _ = _client(real_loop_parts)
+    f = client.submit(_prompt(), GEN, t_nw_est_ms=50.0)
+    assert f.state is RequestState.QUEUED
+    assert not f.done()
+    assert f.time_to_schedule_ms is None
+
+    res = loop.tick(now_ms=30.0)
+    assert f.state is RequestState.RESOLVED
+    assert f.done() and not f.cancelled()
+    assert f.scheduled_ms == 30.0
+    assert f.time_to_schedule_ms == pytest.approx(30.0)
+    # Both tiers' dispatch/done wall stamps were recorded (hedged request).
+    assert set(f.tier_dispatch_wall_ms) == {"remote", "ondevice"}
+    assert set(f.tier_done_wall_ms) == {"remote", "ondevice"}
+    for tier in ("remote", "ondevice"):
+        assert f.tier_done_wall_ms[tier] >= f.tier_dispatch_wall_ms[tier]
+
+    c = f.result()
+    assert c is res.completions[0]
+    assert c.time_to_schedule_ms == pytest.approx(30.0)
+    assert f.resolved_ms == pytest.approx(c.latency_ms)  # arrival was 0
+
+
+def test_result_drives_the_loop_single_threaded(real_loop_parts):
+    client, loop, _ = _client(real_loop_parts)
+    f1 = client.submit(_prompt(1), GEN, t_nw_est_ms=40.0)
+    f2 = client.submit(_prompt(2), GEN, t_nw_est_ms=40.0)
+    c1 = f1.result()  # no one ticked the loop: result() must flush it
+    assert c1.rid == f1.rid
+    assert f2.done()  # same tick served the whole pending chunk
+    assert f2.result().race_resolution in ("remote_won", "ondevice_won")
+
+
+def test_result_timeout_raises_on_detached_future():
+    f = InferenceFuture(
+        QueuedRequest(
+            rid=0, tokens=np.zeros(4, np.int32), n_steps=1,
+            t_nw_est_ms=0.0, t_nw_actual_ms=0.0,
+        )
+    )
+    with pytest.raises(TimeoutError):
+        f.result(timeout=0.02)
+
+
+# ---------------------------------------------------------------------------
+# Cancellation.
+# ---------------------------------------------------------------------------
+def test_cancel_queued_request_never_dispatches(real_loop_parts):
+    client, loop, _ = _client(real_loop_parts)
+    f_live = client.submit(_prompt(1), GEN, t_nw_est_ms=40.0)
+    f_dead = client.submit(_prompt(2), GEN, t_nw_est_ms=40.0)
+    assert f_dead.cancel() is True
+    assert f_dead.state is RequestState.CANCELLED
+    assert f_dead.done() and f_dead.cancelled()
+    res = loop.tick()
+    assert [c.rid for c in res.completions] == [f_live.rid]
+    assert res.metrics.n_requests == 1
+    with pytest.raises(RequestCancelled):
+        f_dead.result()
+    assert f_dead.cancel() is False  # already settled
+
+
+def test_cancelled_hedged_request_frees_its_ondevice_slot():
+    """Satellite: a QUEUED cancel releases the duplicate-batch slot; an
+    in-flight cancel discards the result but still folds the EWMA."""
+    sched = stub_scheduler(t_sla_ms=1_000.0)
+    remote = StubRemoteBackend(delay_s=0.01)
+    hedge = StubHedgeBackend(delay_s=0.01)
+    loop = ServingLoop(sched, remote, hedge, dispatch="async")
+    futures = [
+        loop.submit(
+            QueuedRequest(
+                rid=i, tokens=np.zeros(4, np.int32), n_steps=GEN,
+                t_nw_est_ms=10.0, t_nw_actual_ms=10.0,
+            )
+        )
+        for i in range(3)
+    ]
+    futures[1].cancel()  # QUEUED: freed before the duplicate batch is built
+    mu0 = sched.ondevice_mu
+    res = loop.tick()
+    # The duplicate batch only carried the two live rows.
+    assert res.stats.hedge_rows == 2
+    assert hedge.batch_rows == [2]  # pow2-padded rows actually executed
+    assert [c.rid for c in res.completions] == [0, 2]
+    assert sched.ondevice_mu != mu0  # measured hedge folded into the EWMA
+
+
+def test_inflight_cancel_discards_result_but_folds_ewma():
+    sched = stub_scheduler(t_sla_ms=1_000.0)
+    remote = StubRemoteBackend(delay_s=0.05)
+    hedge = StubHedgeBackend(delay_s=0.05)
+    loop = ServingLoop(sched, remote, hedge, dispatch="async")
+    futures = [
+        loop.submit(
+            QueuedRequest(
+                rid=i, tokens=np.zeros(4, np.int32), n_steps=GEN,
+                t_nw_est_ms=10.0, t_nw_actual_ms=10.0,
+            )
+        )
+        for i in range(2)
+    ]
+    mu0 = sched.ondevice_mu
+    assert loop.tick(wait=False) is None  # dispatched, not collected
+    assert all(f.state is RequestState.EXECUTING for f in futures)
+    assert futures[0].cancel() is False  # batched execution can't be recalled
+    results = loop.drain()
+    assert len(results) == 1
+    res = results[0]
+    # The cancelled request's result is discarded; the other resolves.
+    assert [c.rid for c in res.completions] == [1]
+    assert futures[0].cancelled()
+    with pytest.raises(RequestCancelled):
+        futures[0].result()
+    assert futures[1].result().rid == 1
+    # Its tier really executed: the measurement still folded into the EWMA.
+    assert sched.ondevice_mu != mu0
+    assert res.metrics.n_requests == 1
+
+
+# ---------------------------------------------------------------------------
+# Per-request SLA.
+# ---------------------------------------------------------------------------
+def test_per_request_sla_races_and_budgets(real_loop_parts):
+    client, loop, sched = _client(real_loop_parts, t_sla_ms=5_000.0)
+    # Same network; one request carries a 10ms SLA the remote tier cannot
+    # meet (network alone is 50ms), one inherits the loop's generous SLA.
+    f_tight = client.submit(_prompt(1), GEN, sla=10.0, t_nw_est_ms=50.0)
+    f_loose = client.submit(_prompt(2), GEN, t_nw_est_ms=50.0)
+    tight, loose = f_tight.result(), f_loose.result()
+    assert tight.race_resolution == "ondevice_won"
+    assert not tight.used_remote
+    # Resolution raced the per-request SLA: expiry or the duplicate finish.
+    assert tight.latency_ms == pytest.approx(max(tight.ondevice_ms, 10.0))
+    assert loose.race_resolution == "remote_won"
+    assert loose.latency_ms == pytest.approx(loose.remote_ms)
+
+
+def test_per_request_sla_tightens_the_budget():
+    """A tighter per-request SLA must steer selection to cheaper variants.
+
+    Stub profiles pin the feasibility boundary: stub-a mu=30ms, stub-b
+    mu=60ms.  A 55ms SLA minus the 10ms network estimate leaves a 45ms
+    budget — stub-b can never fit, while the loop-wide 1s SLA fits both.
+    """
+    picks = {}
+    for sla in (None, 55.0):
+        sched = stub_scheduler(t_sla_ms=1_000.0, seed=3)
+        loop = ServingLoop(
+            sched, StubRemoteBackend(0.001), StubHedgeBackend(0.001),
+            dispatch="sync",
+        )
+        client = InferenceClient(loop)
+        futures = [
+            client.submit(np.zeros(4, np.int32), GEN, sla=sla, t_nw_est_ms=10.0)
+            for _ in range(8)
+        ]
+        picks[sla] = [f.result().model_index for f in futures]
+    assert all(p == 0 for p in picks[55.0])  # stub-b infeasible at 45ms
+    assert any(p == 1 for p in picks[None])  # generous budget uses stub-b
+    assert np.mean(picks[None]) > np.mean(picks[55.0])
