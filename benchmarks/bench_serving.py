@@ -203,6 +203,109 @@ def _async_vs_serialized_hedge(
         )
 
 
+def _admission_comparison(
+    *, n_requests: int, sla_ms: float = 250.0, seed: int = 0, sync: bool = False
+):
+    """Bounded admission vs unbounded under a sustained 2x overload.
+
+    One remote variant + the real on-device hedge tier serve an identical
+    2x-overload stream with a service-coupled loop clock (each tick keeps
+    the server busy ``service_ms`` per scheduled request, so offered load
+    beyond capacity builds real queue wait).  Five rows:
+
+    * ``baseline`` — the same stack, uncongested (0.4x capacity): the
+      reference p99.
+    * ``unbounded`` — the pre-admission loop: the backlog's queue wait
+      grows with the overload and p99 diverges.
+    * ``block`` — bounded queue + client backpressure: server batches stay
+      capped, but no work is dropped, so client-observed wait still grows.
+    * ``shed`` — deadline-aware rejection: served requests keep bounded
+      wait; p99 stays within 1.5x of the baseline (the PR's acceptance
+      bar) at the cost of shed_rate.
+    * ``degrade`` — overflow answered by the on-device tier alone: every
+      request served with bounded latency, at the duplicate's accuracy.
+    """
+    import jax
+
+    from repro.configs import reduced
+    from repro.core.network import LognormalNetwork
+    from repro.models import transformer as T
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.backend import OnDeviceBackend
+    from repro.serving.engine import ServingEngine, Variant
+    from repro.serving.loadgen import (
+        OverloadArrivals,
+        PoissonArrivals,
+        make_trace,
+    )
+
+    prompt, gen, window_ms = 8, 2, 100.0
+    service_ms = 6.0  # per scheduled request, coupled into the loop clock
+    capacity_rps = 1e3 / service_ms  # ≈166 rps: what the server retires at
+    # 100% utilization (16-17 requests per 100ms scheduling window)
+    dispatch = "sync" if sync else "async"
+
+    hedge = OnDeviceBackend.from_zoo(max_len=prompt + gen + 4)
+    ondevice = hedge.measure_profile(prompt_len=prompt, gen_tokens=gen, trials=2)
+    engine = ServingEngine(
+        max_len=prompt + gen + 4, hedge_backend=hedge, dispatch=dispatch
+    )
+    cfg = reduced(
+        "gemma-2b", d_model=64, n_layers=2, n_heads=2, n_kv_heads=1, head_dim=32
+    )
+    engine.register(
+        Variant("remote", cfg, T.init_params(cfg, jax.random.key(seed)), 80.0)
+    )
+    registry = engine.measure_profiles(prompt_len=prompt, gen_tokens=gen, trials=2)
+
+    overload = OverloadArrivals(
+        rate_rps=capacity_rps, overload_factor=2.0,
+        overload_start=0.0, overload_stop=1.0,
+    )
+    bounded = dict(max_pending=32, max_chunk=16)
+    rows = (
+        ("baseline", PoissonArrivals(0.4 * capacity_rps),
+         max(n_requests // 2, 60), AdmissionConfig()),
+        ("unbounded", overload, n_requests, AdmissionConfig()),
+        ("block", overload, n_requests,
+         AdmissionConfig(policy="block", **bounded)),
+        ("shed", overload, n_requests,
+         AdmissionConfig(policy="shed", **bounded)),
+        ("degrade", overload, n_requests,
+         AdmissionConfig(policy="degrade", **bounded)),
+    )
+    baseline_p99 = None
+    for name, arrivals, n, admission in rows:
+        trace = make_trace(n, arrivals, LognormalNetwork(80.0, 0.6), seed=seed)
+        prompts = np.random.default_rng(seed).integers(0, 256, (n, prompt))
+        sched = MDInferenceScheduler(
+            registry, ondevice, SchedulerConfig(t_sla_ms=sla_ms, seed=seed)
+        )
+        loop = engine.make_loop(sched, admission=admission)
+        t0 = time.perf_counter()
+        done, metrics = loop.drain_trace(
+            trace, window_ms, tokens_for=lambda i: prompts[i], n_steps=gen,
+            # Degraded rows (stats.n_degraded) are deliberately free here:
+            # they execute on the device, which is exactly how the degrade
+            # policy sheds *server* load.
+            service_model=lambda res: service_ms * res.stats.n_requests,
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        p99 = metrics.p99_latency_ms
+        if baseline_p99 is None:
+            baseline_p99 = p99
+        emit(
+            f"serving/admission/{name}",
+            us / max(len(done), 1),
+            f"p99={p99:.1f}ms p99_vs_baseline={p99 / baseline_p99:.2f}x "
+            f"mean_wait={metrics.mean_queue_wait_ms:.1f}ms "
+            f"goodput={metrics.goodput*100:.2f}% "
+            f"shed_rate={metrics.shed_rate*100:.2f}% "
+            f"quality={metrics.aggregate_accuracy:.2f} "
+            f"served={metrics.n_requests}/{n}",
+        )
+
+
 def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False):
     reg = lm_zoo_registry(chips=8)
     for p in reg:
@@ -266,6 +369,10 @@ def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False):
     _async_vs_serialized_hedge(
         n_requests=16 if smoke else 96, sla_ms=150.0, sync=sync
     )
+
+    # Bounded admission under 2x overload (PR 4 tentpole): shed keeps p99
+    # within 1.5x of the uncongested baseline, unbounded diverges.
+    _admission_comparison(n_requests=240 if smoke else 600, sync=sync)
 
 
 if __name__ == "__main__":

@@ -25,9 +25,17 @@ class RequestMetrics:
     mean_queue_wait_ms: float = 0.0  # scheduling-tick wait (0 when untracked)
     p99_queue_wait_ms: float = 0.0
     # Fraction of requests per race outcome ("remote_won" / "ondevice_won" /
-    # "unhedged"); empty when the serving front doesn't track races.
+    # "unhedged" / "degraded"); empty when the front doesn't track races.
     race_resolution: Dict[str, float] = dataclasses.field(default_factory=dict)
     mean_time_to_schedule_ms: float = 0.0  # admission -> scheduling tick
+    # Overload accounting (bounded admission): rejected requests are not in
+    # n_requests — shed_rate is their fraction of everything *submitted*,
+    # and goodput is the fraction of submitted requests answered within the
+    # SLA (attainment over answered ∩ survived admission).  Without
+    # rejections goodput == sla_attainment.
+    n_rejected: int = 0
+    shed_rate: float = 0.0
+    goodput: float = 0.0
 
     def row(self) -> str:
         return (
@@ -49,55 +57,83 @@ def summarize(
     queue_wait_ms: np.ndarray | None = None,
     race_resolution: np.ndarray | None = None,
     time_to_schedule_ms: np.ndarray | None = None,
+    n_rejected: int = 0,
 ) -> RequestMetrics:
     """Build :class:`RequestMetrics` from per-request outcomes.
 
     ``queue_wait_ms`` (per-request scheduling-tick wait),
     ``race_resolution`` (per-request "remote_won" / "ondevice_won" /
-    "unhedged" strings), and ``time_to_schedule_ms`` are optional —
-    trace-driven simulation has no queue or race bookkeeping, so their
-    aggregates default to empty/0.  ``t_sla_ms`` may be a per-request
-    vector when requests carry individual SLAs.
+    "unhedged" / "degraded" strings), and ``time_to_schedule_ms`` are
+    optional — trace-driven simulation has no queue or race bookkeeping,
+    so their aggregates default to empty/0.  ``t_sla_ms`` may be a
+    per-request vector when requests carry individual SLAs.
+
+    ``n_rejected`` counts requests the admission queue shed (REJECTED
+    terminal state) — they have no latency/accuracy rows, but they *do*
+    count against ``shed_rate`` and ``goodput``.  The per-request arrays
+    may be empty when every request of a tick was shed.
     """
     accuracy_used = np.asarray(accuracy_used, dtype=np.float64)
     latency_ms = np.asarray(latency_ms, dtype=np.float64)
     n = len(latency_ms)
-    attained = float(np.mean(latency_ms <= t_sla_ms + 1e-9))
-    reliance = 0.0 if used_remote is None else float(1.0 - np.mean(used_remote))
+    attained = (
+        float(np.mean(latency_ms <= t_sla_ms + 1e-9)) if n else 0.0
+    )
+    reliance = (
+        0.0
+        if used_remote is None or not n
+        else float(1.0 - np.mean(used_remote))
+    )
+    submitted = n + n_rejected
 
     usage: Dict[str, float] = {}
-    counts = np.bincount(np.asarray(model_index), minlength=len(model_names))
+    counts = np.bincount(
+        np.asarray(model_index, dtype=np.int64), minlength=len(model_names)
+    )
     for name, c in zip(model_names, counts):
         if c:
             usage[name] = float(c) / n
 
     return RequestMetrics(
         n_requests=n,
-        aggregate_accuracy=float(accuracy_used.mean()),
+        aggregate_accuracy=float(accuracy_used.mean()) if n else 0.0,
         sla_attainment=attained,
         ondevice_reliance=reliance,
-        mean_latency_ms=float(latency_ms.mean()),
-        std_latency_ms=float(latency_ms.std()),
-        p50_latency_ms=float(np.percentile(latency_ms, 50)),
-        p99_latency_ms=float(np.percentile(latency_ms, 99)),
+        mean_latency_ms=float(latency_ms.mean()) if n else 0.0,
+        std_latency_ms=float(latency_ms.std()) if n else 0.0,
+        p50_latency_ms=float(np.percentile(latency_ms, 50)) if n else 0.0,
+        p99_latency_ms=float(np.percentile(latency_ms, 99)) if n else 0.0,
         model_usage=usage,
         mean_queue_wait_ms=(
-            0.0 if queue_wait_ms is None else float(np.mean(queue_wait_ms))
+            0.0
+            if queue_wait_ms is None or not n
+            else float(np.mean(queue_wait_ms))
         ),
         p99_queue_wait_ms=(
-            0.0 if queue_wait_ms is None else float(np.percentile(queue_wait_ms, 99))
+            0.0
+            if queue_wait_ms is None or not n
+            else float(np.percentile(queue_wait_ms, 99))
         ),
         race_resolution=(
             {}
             if race_resolution is None
             else {
-                outcome: float(np.mean(np.asarray(race_resolution) == outcome))
-                for outcome in ("remote_won", "ondevice_won", "unhedged")
+                outcome: (
+                    float(np.mean(np.asarray(race_resolution) == outcome))
+                    if n
+                    else 0.0
+                )
+                for outcome in (
+                    "remote_won", "ondevice_won", "unhedged", "degraded"
+                )
             }
         ),
         mean_time_to_schedule_ms=(
             0.0
-            if time_to_schedule_ms is None
+            if time_to_schedule_ms is None or not n
             else float(np.mean(time_to_schedule_ms))
         ),
+        n_rejected=int(n_rejected),
+        shed_rate=(float(n_rejected) / submitted if submitted else 0.0),
+        goodput=(attained * n / submitted if submitted else 0.0),
     )

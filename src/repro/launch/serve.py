@@ -21,6 +21,13 @@ default) the remote batch and the on-device duplicate are dispatched
 concurrently — the race resolves on overlapping wall clocks.
 ``--dispatch sync`` serializes the tiers (the deterministic fallback).
 
+Overload hardening: ``--max-pending``/``--max-chunk`` put a bounded
+admission queue in front of the loop and ``--overload-policy`` picks what
+happens at capacity (``block`` backpressure, ``shed`` deadline-aware
+rejection, ``degrade`` on-device-only service).  ``--overload 2
+--service-ms 5`` drives a sustained 2x overload against a service-coupled
+clock — the adversarial input that makes the policies differ.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --requests 50 --sla 2000
 """
@@ -35,9 +42,15 @@ import numpy as np
 from repro.configs import reduced
 from repro.core.network import NAMED_TRACES, LognormalNetwork
 from repro.models import transformer as T
+from repro.serving.admission import OVERLOAD_POLICIES, AdmissionConfig
 from repro.serving.backend import OnDeviceBackend
 from repro.serving.engine import ServingEngine, Variant
-from repro.serving.loadgen import BurstyArrivals, PoissonArrivals, make_trace
+from repro.serving.loadgen import (
+    BurstyArrivals,
+    OverloadArrivals,
+    PoissonArrivals,
+    make_trace,
+)
 from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
 
 TIERS = (
@@ -83,8 +96,26 @@ def main(argv=None):
     ap.add_argument("--net-cv", type=float, default=0.6)
     ap.add_argument("--rate", type=float, default=20.0, help="arrival rate rps")
     ap.add_argument("--bursty", action="store_true", help="MMPP bursts")
+    ap.add_argument("--overload", type=float, default=0.0, metavar="FACTOR",
+                    help="sustained overload phase at FACTOR x the base "
+                    "rate over the middle half of the stream")
     ap.add_argument("--window", type=float, default=200.0,
                     help="scheduling-tick window (ms)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="bounded admission queue capacity (default: "
+                    "unbounded, the pre-admission behavior)")
+    ap.add_argument("--max-chunk", type=int, default=None,
+                    help="per-tick scheduling cap; leftovers stay queued "
+                    "across ticks")
+    ap.add_argument("--overload-policy", default="unbounded",
+                    choices=list(OVERLOAD_POLICIES),
+                    help="what happens at max-pending capacity: block "
+                    "(client backpressure), shed (deadline-aware REJECTED), "
+                    "degrade (on-device tier alone); requires --max-pending")
+    ap.add_argument("--service-ms", type=float, default=0.0,
+                    help="per-request service-time model coupled into the "
+                    "loop clock (0: uncoupled windows-only clock); makes "
+                    "overload build real queue wait")
     ap.add_argument(
         "--hedge", default="measured", choices=["measured", "sampled"],
         help="resolve duplicates on real hedge-tier wall time (measured) "
@@ -97,6 +128,11 @@ def main(argv=None):
     )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.overload_policy != "unbounded" and args.max_pending is None:
+        ap.error(
+            f"--overload-policy {args.overload_policy} requires "
+            "--max-pending (the capacity whose overflow it governs)"
+        )
 
     measured = args.hedge == "measured"
     print("building + profiling tiers (real execution)...")
@@ -128,9 +164,12 @@ def main(argv=None):
         network = LognormalNetwork(args.net_mean, args.net_cv)
     else:
         network = NAMED_TRACES[args.network]()
-    arrivals = (
-        BurstyArrivals(args.rate) if args.bursty else PoissonArrivals(args.rate)
-    )
+    if args.overload > 0:
+        arrivals = OverloadArrivals(args.rate, overload_factor=args.overload)
+    elif args.bursty:
+        arrivals = BurstyArrivals(args.rate)
+    else:
+        arrivals = PoissonArrivals(args.rate)
     trace = make_trace(args.requests, arrivals, network, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, 256, (args.requests, args.prompt))
@@ -138,29 +177,66 @@ def main(argv=None):
     # The event-loop serving front: each arrival window becomes one tick
     # (fired at the window's close — the wait until then is charged against
     # each request's budget and latency); within a tick every tier's batch
-    # is dispatched before any is awaited.
-    loop = engine.make_loop(sched)
+    # is dispatched before any is awaited.  --max-pending/--overload-policy
+    # put the bounded admission queue with backpressure in front of it.
+    policy = args.overload_policy
+    if policy == "unbounded" and args.max_pending is not None:
+        policy = "block"  # a bound without a policy means backpressure
+    admission = AdmissionConfig(
+        max_pending=args.max_pending,
+        max_chunk=args.max_chunk,
+        policy=policy,
+    )
+    loop = engine.make_loop(sched, admission=admission)
+    # Server service time covers the remote-scheduled rows only: the
+    # degrade lane executes on the device, so it costs the device — not
+    # the server's clock (that offload is the degrade policy's point).
+    service_model = (
+        (lambda res: args.service_ms * res.stats.n_requests)
+        if args.service_ms > 0
+        else None
+    )
 
     def on_tick(tick_ms, res):
+        if not res.completions:
+            print(
+                f"tick t={tick_ms:7.0f}ms batch=  0 "
+                f"shed={res.stats.n_shed} (all rejected)"
+            )
+            return
         c = res.completions[0]
         overlap = ""
         if res.stats.hedge_wall_ms is not None:
             saved = 1.0 - res.stats.span_wall_ms / res.stats.serialized_wall_ms
             overlap = f" overlap={saved*100:4.0f}%"
+        overload = ""
+        if res.stats.n_shed or res.stats.n_degraded:
+            overload = (
+                f" shed={res.stats.n_shed} degraded={res.stats.n_degraded}"
+            )
         print(
             f"tick t={tick_ms:7.0f}ms batch={len(res.completions):3d} "
             f"models={{{', '.join(sorted({d.model_name for d in res.completions}))}}} "
             f"first: wait+nw={c.remote_ms - c.exec_ms:5.0f}ms -> {c.model_name:8s} "
             f"exec={c.exec_ms:7.1f}ms "
-            f"{'remote' if c.used_remote else 'HEDGED'}{overlap}"
+            f"{'remote' if c.used_remote else 'HEDGED'}{overlap}{overload}"
         )
 
     t_start = time.time()
     completions, metrics = loop.drain_trace(
         trace, args.window,
         tokens_for=lambda i: prompts[i], n_steps=args.gen, on_tick=on_tick,
+        service_model=service_model,
     )
 
+    if not completions:  # every request shed: only overload accounting
+        print(
+            f"\nserved 0 of {args.requests} requests "
+            f"(policy={policy}, shed_rate={metrics.shed_rate*100:.1f}%, "
+            f"goodput={metrics.goodput*100:.1f}%) — every request was "
+            "rejected by admission; loosen --sla or --max-pending"
+        )
+        return 0
     lats = np.asarray([c.latency_ms for c in completions])
     waits = np.asarray([c.queue_wait_ms for c in completions])
     hedge_note = (
@@ -171,6 +247,13 @@ def main(argv=None):
     races = " ".join(
         f"{k}={v*100:.0f}%" for k, v in metrics.race_resolution.items()
     )
+    admission_note = ""
+    if metrics.n_rejected or policy != "unbounded":
+        admission_note = (
+            f"admission         : policy={policy} "
+            f"max_pending={args.max_pending} shed_rate={metrics.shed_rate*100:.1f}% "
+            f"goodput={metrics.goodput*100:.1f}%\n"
+        )
     print(
         f"\nserved {len(completions)} requests in {time.time()-t_start:.1f}s wall "
         f"(offered {trace.offered_rps:.1f} rps, dispatch={args.dispatch})\n"
@@ -181,6 +264,7 @@ def main(argv=None):
         f"hedge reliance    : {metrics.ondevice_reliance*100:.1f}%  "
         f"[{hedge_note}]\n"
         f"race resolution   : {races}\n"
+        f"{admission_note}"
         f"queue wait        : mean {waits.mean():.0f}ms  max {waits.max():.0f}ms  "
         f"(time-to-schedule mean {metrics.mean_time_to_schedule_ms:.0f}ms)\n"
         f"p50/p99 latency   : {np.percentile(lats,50):.0f}/{np.percentile(lats,99):.0f} ms"

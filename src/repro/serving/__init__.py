@@ -1,4 +1,9 @@
-"""Serving: client futures + event loop + scheduler policy + backends."""
+"""Serving: client futures + admission + event loop + policy + backends."""
+from repro.serving.admission import (
+    AdmissionConfig,
+    AdmissionQueue,
+    sla_unreachable,
+)
 from repro.serving.backend import (
     BatchHandle,
     ExecutionBackend,
@@ -16,12 +21,15 @@ from repro.serving.engine import (
 from repro.serving.lifecycle import (
     InferenceFuture,
     RequestCancelled,
+    RequestRejected,
     RequestState,
 )
 from repro.serving.loadgen import (
     BurstyArrivals,
     LoadTrace,
+    OverloadArrivals,
     PoissonArrivals,
+    RampArrivals,
     iter_windows,
     make_trace,
 )
@@ -35,11 +43,13 @@ from repro.serving.scheduler import (
 )
 
 __all__ = [
-    "BatchDecision", "BatchHandle", "BurstyArrivals", "CompletedRequest",
-    "Decision", "ExecutionBackend", "InferenceClient", "InferenceFuture",
-    "JitBackend", "LoadTrace", "MDInferenceScheduler", "ONDEVICE_TIER",
-    "OnDeviceBackend", "PoissonArrivals", "QueuedRequest", "RequestCancelled",
-    "RequestState", "SchedulerConfig", "ServingEngine", "ServingLoop",
-    "TickResult", "TickStats", "V5E", "Variant", "build_hedge_variant",
-    "estimate_ms", "iter_windows", "lm_zoo_registry", "make_trace",
+    "AdmissionConfig", "AdmissionQueue", "BatchDecision", "BatchHandle",
+    "BurstyArrivals", "CompletedRequest", "Decision", "ExecutionBackend",
+    "InferenceClient", "InferenceFuture", "JitBackend", "LoadTrace",
+    "MDInferenceScheduler", "ONDEVICE_TIER", "OnDeviceBackend",
+    "OverloadArrivals", "PoissonArrivals", "QueuedRequest", "RampArrivals",
+    "RequestCancelled", "RequestRejected", "RequestState", "SchedulerConfig",
+    "ServingEngine", "ServingLoop", "TickResult", "TickStats", "V5E",
+    "Variant", "build_hedge_variant", "estimate_ms", "iter_windows",
+    "lm_zoo_registry", "make_trace", "sla_unreachable",
 ]

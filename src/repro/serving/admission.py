@@ -1,0 +1,339 @@
+"""Bounded admission with explicit backpressure — the loop's front door.
+
+The event loop (:class:`repro.serving.loop.ServingLoop`) used to drain its
+*entire* pending list every tick: a burst from ``loadgen`` inflated batch
+sizes and queue waits without limit.  :class:`AdmissionQueue` makes
+admission a first-class, capacity-bounded stage:
+
+* ``max_pending`` — the bounded FIFO of admitted-but-unscheduled requests.
+  What happens at capacity is the *overload policy* (below).
+* ``max_chunk`` — per-tick scheduling cap: one tick takes at most this
+  many requests; the rest stay queued across ticks (the persistent
+  multi-tick queue).
+* ``max_inflight_ticks`` — dispatch gate for the ``wait=False`` event
+  loop: no new tick is dispatched while this many are already in flight.
+
+Overload policies (engaged only when ``max_pending`` is set):
+
+* ``"unbounded"`` — no capacity bound; byte-identical to the pre-admission
+  loop (the compatibility default, and the reference the regression tests
+  pin).
+* ``"block"`` — client-side backpressure: ``submit`` returns a future that
+  is *not yet admitted* (``InferenceFuture.admitted`` is False); it waits
+  in an overflow room and is admitted FIFO as capacity frees.  No work is
+  dropped — the queue is pushed back to the client.
+* ``"shed"`` — deadline-aware rejection: a request at capacity, or one
+  whose queue wait already makes its SLA unreachable
+  (:func:`sla_unreachable`), resolves immediately with the terminal
+  :attr:`repro.serving.lifecycle.RequestState.REJECTED` state.  Served
+  requests keep a bounded wait — the policy trades goodput for tail
+  latency.
+* ``"degrade"`` — accuracy-for-latency: overflow routes to the on-device
+  tier *alone* (no remote leg, no two-tier hedge).  The server queue stays
+  bounded and every request is answered, at the duplicate's accuracy.
+
+The shed predicate is deliberately *monotone in queue wait*: a request shed
+at wait ``w`` would also be shed at any wait ``> w`` (property-tested in
+``tests/test_admission.py``) — so shedding never resurrects a request that
+a longer wait would have doomed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+from repro.serving.lifecycle import InferenceFuture, RequestState
+
+__all__ = [
+    "OVERLOAD_POLICIES",
+    "AdmissionConfig",
+    "AdmissionBatch",
+    "AdmissionQueue",
+    "sla_unreachable",
+]
+
+OVERLOAD_POLICIES = ("unbounded", "block", "shed", "degrade")
+
+
+def sla_unreachable(
+    queue_wait_ms: float,
+    sla_ms: float,
+    t_nw_est_ms: float = 0.0,
+    service_floor_ms: float = 0.0,
+    headroom_ms: float = 0.0,
+    ondevice_floor_ms: Optional[float] = None,
+) -> bool:
+    """True when a request's SLA cannot be met even by the fastest path.
+
+    The cheapest completion estimate is the better of the two execution
+    paths: the remote leg (``t_nw_est_ms`` network round trip + the
+    fastest model's expected execution ``service_floor_ms``) and — when a
+    hedge tier exists (``ondevice_floor_ms``) — the on-device duplicate,
+    which has *no* network leg.  On a terrible network the duplicate is
+    exactly what rescues the request, so shedding must not charge it the
+    network estimate.  ``headroom_ms`` adds a safety margin.  Monotone in
+    ``queue_wait_ms`` by construction — no other term depends on the wait.
+    """
+    best_ms = t_nw_est_ms + service_floor_ms
+    if ondevice_floor_ms is not None:
+        best_ms = min(best_ms, ondevice_floor_ms)
+    return queue_wait_ms + best_ms + headroom_ms > sla_ms
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Capacity bounds + overload policy for an :class:`AdmissionQueue`.
+
+    The default (everything ``None``, policy ``"unbounded"``) reproduces
+    the pre-admission loop exactly: every submit is admitted immediately
+    and every tick drains the whole pending queue.
+    """
+
+    max_pending: Optional[int] = None  # bounded FIFO capacity (None: ∞)
+    max_chunk: Optional[int] = None  # per-tick scheduling cap (None: all)
+    max_inflight_ticks: Optional[int] = None  # wait=False dispatch gate
+    policy: str = "unbounded"  # what happens at max_pending capacity
+    shed_headroom_ms: float = 0.0  # extra margin in the shed predicate
+
+    def __post_init__(self):
+        if self.policy not in OVERLOAD_POLICIES:
+            raise ValueError(
+                f"policy must be one of {OVERLOAD_POLICIES}, got {self.policy!r}"
+            )
+        if self.policy != "unbounded" and self.max_pending is None:
+            raise ValueError(
+                f"policy {self.policy!r} requires max_pending (the capacity "
+                "whose overflow it governs)"
+            )
+        for field in ("max_pending", "max_chunk", "max_inflight_ticks"):
+            v = getattr(self, field)
+            if v is not None and v < 1:
+                raise ValueError(f"{field} must be >= 1 or None, got {v}")
+
+    @property
+    def bounded(self) -> bool:
+        return self.max_pending is not None and self.policy != "unbounded"
+
+
+@dataclasses.dataclass
+class AdmissionBatch:
+    """What one tick takes from the admission queue."""
+
+    chunk: List[InferenceFuture]  # requests for the remote/hedged path
+    degraded: List[InferenceFuture]  # requests for the on-device-only path
+    shed: List[InferenceFuture]  # rejected this take (already REJECTED)
+    now_ms: float  # the tick's loop-clock timestamp
+
+    def __bool__(self) -> bool:
+        return bool(self.chunk or self.degraded)
+
+
+class AdmissionQueue:
+    """Bounded FIFO admission stage with pluggable overload policies.
+
+    Thread-safe: :meth:`offer` may race :meth:`take` from another thread —
+    a submitted future lands in exactly one of (admitted queue, overflow
+    room, degrade lane, rejected), never vanishes.  Conservation holds at
+    all times::
+
+        n_submitted == n_resolved + n_rejected + n_cancelled + backlog + in-flight
+    """
+
+    def __init__(self, cfg: AdmissionConfig = AdmissionConfig()):
+        self.cfg = cfg
+        self._lock = threading.Lock()
+        self._admitted: Deque[InferenceFuture] = deque()
+        self._overflow: Deque[InferenceFuture] = deque()  # block policy
+        self._degraded: Deque[InferenceFuture] = deque()  # degrade policy
+        self.n_submitted = 0
+        self.n_rejected = 0  # overflow-rejected + deadline-shed
+        self.n_degraded = 0  # routed to the on-device-only lane
+
+    # -- bookkeeping -----------------------------------------------------------
+    @staticmethod
+    def _queued(q: Deque[InferenceFuture]) -> int:
+        return sum(1 for f in q if f.state is RequestState.QUEUED)
+
+    @property
+    def pending(self) -> int:
+        """Admitted requests waiting for a tick (bounded by max_pending)."""
+        with self._lock:
+            return self._queued(self._admitted)
+
+    @property
+    def blocked(self) -> int:
+        """Not-yet-admitted requests waiting in the overflow room."""
+        with self._lock:
+            return self._queued(self._overflow)
+
+    @property
+    def degrade_pending(self) -> int:
+        """Requests waiting in the on-device-only degrade lane."""
+        with self._lock:
+            return self._queued(self._degraded)
+
+    @property
+    def backlog(self) -> int:
+        """Everything still waiting for a tick, across all lanes."""
+        with self._lock:
+            return (
+                self._queued(self._admitted)
+                + self._queued(self._overflow)
+                + self._queued(self._degraded)
+            )
+
+    @staticmethod
+    def _admit_stamp(future: InferenceFuture) -> None:
+        future.admitted = True
+        future.admitted_wall_ms = time.perf_counter() * 1e3
+
+    # -- submit side -----------------------------------------------------------
+    def offer(self, future: InferenceFuture) -> str:
+        """Place one submitted future; returns its disposition:
+        ``"admitted"`` | ``"blocked"`` | ``"degraded"`` | ``"rejected"``.
+        """
+        with self._lock:
+            self.n_submitted += 1
+            if not self.cfg.bounded:
+                self._admitted.append(future)
+                self._admit_stamp(future)
+                return "admitted"
+            if self._queued(self._admitted) < self.cfg.max_pending:
+                self._admitted.append(future)
+                self._admit_stamp(future)
+                return "admitted"
+            if self.cfg.policy == "block":
+                self._overflow.append(future)
+                return "blocked"
+            if self.cfg.policy == "degrade":
+                self._degraded.append(future)
+                self._admit_stamp(future)
+                self.n_degraded += 1
+                return "degraded"
+        # shed: capacity tail-drop — the queue never grows past
+        # max_pending, and the newest request is the one with the least
+        # wait invested.  The terminal transition runs outside the lock
+        # (it may wake waiters) and can lose to a racing cancel(), so the
+        # counter only tracks transitions that actually happened.
+        if future._mark_rejected():
+            with self._lock:
+                self.n_rejected += 1
+            return "rejected"
+        return "cancelled"
+
+    # -- tick side -------------------------------------------------------------
+    def take(
+        self,
+        now_ms: Optional[float],
+        *,
+        default_sla_ms: float,
+        service_floor_ms: float = 0.0,
+        ondevice_floor_ms: Optional[float] = None,
+    ) -> AdmissionBatch:
+        """One tick's admission work: prune, refill, (shed,) select.
+
+        1. Drop futures that left QUEUED state (cancelled) from every lane.
+        2. Refill the admitted queue FIFO from the overflow room (block).
+        3. Under ``shed``: reject every admitted request — including the
+           would-be chunk — whose wait at the tick clock makes its SLA
+           unreachable, then refill freed capacity again.
+        4. Select the first ``max_chunk`` surviving requests as the tick's
+           chunk; ``now_ms`` defaults to the chunk's latest arrival (the
+           pre-admission loop's convention).
+        5. Take up to ``max_chunk`` requests from the degrade lane.
+
+        The returned futures are still QUEUED — the loop claims them with
+        ``_try_schedule`` (so a racing ``cancel()`` keeps its guarantee).
+        """
+        shed: List[InferenceFuture] = []
+        with self._lock:
+            self._prune()
+            self._refill()
+            if self.cfg.policy == "shed":
+                # The shed clock: the caller's tick time, or the would-be
+                # chunk's latest arrival (what _select_chunk would pick).
+                shed_now = now_ms
+                if shed_now is None and self._admitted:
+                    shed_now = max(
+                        f.request.arrival_ms for f in self._chunk_prefix()
+                    )
+                if shed_now is not None:
+                    shed = self._shed(
+                        float(shed_now), default_sla_ms, service_floor_ms,
+                        ondevice_floor_ms,
+                    )
+                    self._refill()
+            chunk = self._chunk_prefix()
+            for _ in chunk:
+                self._admitted.popleft()
+            self._refill()  # the chunk's slots free immediately
+            if chunk and now_ms is None:
+                now_ms = max(f.request.arrival_ms for f in chunk)
+            degraded = self._take_degraded()
+        # The terminal transitions run outside the lock (they may wake
+        # waiters); a racing cancel() can win, in which case the future is
+        # CANCELLED, not REJECTED — only real transitions are counted.
+        shed = [f for f in shed if f._mark_rejected()]
+        if shed:
+            with self._lock:
+                self.n_rejected += len(shed)
+        if now_ms is None and degraded:
+            now_ms = max(f.request.arrival_ms for f in degraded)
+        return AdmissionBatch(
+            chunk=chunk, degraded=degraded, shed=shed,
+            now_ms=0.0 if now_ms is None else float(now_ms),
+        )
+
+    # The helpers below run under self._lock.
+    def _prune(self) -> None:
+        for q in (self._admitted, self._overflow, self._degraded):
+            stale = any(f.state is not RequestState.QUEUED for f in q)
+            if stale:
+                kept = [f for f in q if f.state is RequestState.QUEUED]
+                q.clear()
+                q.extend(kept)
+
+    def _refill(self) -> None:
+        if not self.cfg.bounded or self.cfg.policy != "block":
+            return
+        while self._overflow and len(self._admitted) < self.cfg.max_pending:
+            future = self._overflow.popleft()
+            self._admitted.append(future)
+            self._admit_stamp(future)
+
+    def _chunk_prefix(self) -> List[InferenceFuture]:
+        cap = self.cfg.max_chunk
+        n = len(self._admitted) if cap is None else min(cap, len(self._admitted))
+        return [self._admitted[i] for i in range(n)]
+
+    def _shed(
+        self,
+        now_ms: float,
+        default_sla_ms: float,
+        service_floor_ms: float,
+        ondevice_floor_ms: Optional[float] = None,
+    ) -> List[InferenceFuture]:
+        shed, kept = [], []
+        for f in self._admitted:
+            r = f.request
+            wait = max(now_ms - r.arrival_ms, 0.0)
+            sla = default_sla_ms if r.sla_ms is None else r.sla_ms
+            if sla_unreachable(
+                wait, sla, r.t_nw_est_ms, service_floor_ms,
+                self.cfg.shed_headroom_ms, ondevice_floor_ms,
+            ):
+                shed.append(f)
+            else:
+                kept.append(f)
+        if shed:
+            self._admitted.clear()
+            self._admitted.extend(kept)
+        return shed
+
+    def _take_degraded(self) -> List[InferenceFuture]:
+        cap = self.cfg.max_chunk
+        n = len(self._degraded) if cap is None else min(cap, len(self._degraded))
+        return [self._degraded.popleft() for _ in range(n)]

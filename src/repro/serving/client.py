@@ -15,6 +15,17 @@ so the minimal usage is just::
 Batch-oriented callers keep submitting and fire ``loop.tick(now_ms)``
 themselves (one tick per arrival window — what
 :meth:`repro.serving.loop.ServingLoop.drain_trace` automates).
+
+When the loop runs a *bounded* admission queue
+(:class:`repro.serving.admission.AdmissionConfig`), ``submit`` is
+backpressure-aware: under the ``block`` overload policy the returned
+future may be *not yet admitted* (``future.admitted`` is False — it waits
+in the overflow room until capacity frees), under ``shed`` it may come
+back already REJECTED (``future.rejected()``; ``result()`` raises
+:class:`repro.serving.lifecycle.RequestRejected`), and under ``degrade``
+it will be answered by the on-device tier alone.  ``wait_admission=True``
+turns the block policy into classic blocking backpressure: ``submit``
+drives the loop until the request actually holds a queue slot.
 """
 from __future__ import annotations
 
@@ -43,19 +54,28 @@ class InferenceClient:
         t_nw_est_ms: float = 0.0,
         t_nw_actual_ms: Optional[float] = None,
         arrival_ms: Optional[float] = None,
+        wait_admission: bool = False,
     ) -> InferenceFuture:
-        """Admit one inference request.
+        """Submit one inference request to the loop's admission queue.
 
         Args:
           prompt: (S,) prompt tokens.
           n_steps: tokens to generate.
           sla: per-request SLA in ms (None: the scheduler's global SLA).
-            Budgeting *and* hedged resolution race against this value.
+            Budgeting, hedged resolution, *and* deadline shedding race
+            against this value.
           t_nw_est_ms: server-side estimate of the request's network time
             (what selection budgets against).
           t_nw_actual_ms: the realized network time (defaults to the
             estimate — a perfect estimator).
           arrival_ms: loop-clock arrival (defaults to the loop's ``now``).
+          wait_admission: with a bounded queue and the ``block`` policy, a
+            full queue parks the future un-admitted (``future.admitted``
+            False) — the client-side backpressure signal.  ``True`` makes
+            ``submit`` block instead: it drives the loop until the future
+            holds a real queue slot (or reached a terminal state).  A
+            single-threaded caller never deadlocks — each tick frees
+            capacity that re-admits the overflow FIFO.
         """
         request = QueuedRequest(
             rid=self.loop.next_rid(),
@@ -70,4 +90,14 @@ class InferenceClient:
             ),
             sla_ms=None if sla is None else float(sla),
         )
-        return self.loop.submit(request)
+        future = self.loop.submit(request)
+        if wait_admission:
+            while not (future.admitted or future.done()):
+                if self.loop.tick() is None and not (
+                    future.admitted or future.done()
+                ):
+                    # No forward progress possible without external events
+                    # (e.g. in-flight ticks that must be polled elsewhere);
+                    # hand the un-admitted future back to the caller.
+                    break
+        return future

@@ -68,9 +68,15 @@ class ServingEngine:
         (generated (B, n_steps), wall_ms)."""
         return self.backend.generate(name, tokens, n_steps)
 
-    def make_loop(self, scheduler, dispatch: Optional[str] = None):
+    def make_loop(self, scheduler, dispatch: Optional[str] = None, admission=None):
         """Build a :class:`repro.serving.loop.ServingLoop` over this
-        engine's backends (the event-loop serving front)."""
+        engine's backends (the event-loop serving front).
+
+        ``admission`` is an optional
+        :class:`repro.serving.admission.AdmissionConfig` — the bounded
+        admission queue with overload policies; ``None`` keeps the
+        unbounded compatibility behavior.
+        """
         from repro.serving.loop import ServingLoop
 
         return ServingLoop(
@@ -78,6 +84,7 @@ class ServingEngine:
             self.backend,
             self.hedge_backend,
             dispatch=self.dispatch if dispatch is None else dispatch,
+            admission=admission,
         )
 
     # -- compatibility shim over the event loop ------------------------------

@@ -3,13 +3,22 @@
 A request moves through explicit states::
 
     QUEUED ──▶ SCHEDULED ──▶ EXECUTING ──▶ RESOLVED
-       │            │             │
-       └────────────┴─────────────┴──────▶ CANCELLED
+       │ │          │             │
+       │ └──────────┴─────────────┴──────▶ CANCELLED
+       └─────────────────────────────────▶ REJECTED
 
-* **QUEUED** — admitted by :class:`repro.serving.loop.ServingLoop` (or an
+* **QUEUED** — submitted to :class:`repro.serving.loop.ServingLoop` (or an
   :class:`repro.serving.client.InferenceClient`), waiting for a scheduling
-  tick.  :meth:`InferenceFuture.cancel` here frees the request entirely —
-  it never occupies a batch slot on either tier.
+  tick.  Under a bounded admission queue
+  (:class:`repro.serving.admission.AdmissionQueue`) a queued future may
+  not be *admitted* yet (``admitted`` False — parked in the overflow room
+  by the ``block`` policy); ``admitted_wall_ms`` stamps the admission.
+  :meth:`InferenceFuture.cancel` here frees the request entirely — it
+  never occupies a batch slot on either tier.
+* **REJECTED** — terminal: the admission queue refused the request (at
+  capacity under the ``shed`` policy, or because its queue wait already
+  made the SLA unreachable).  :meth:`InferenceFuture.result` raises
+  :class:`RequestRejected`.  Only a QUEUED request can be rejected.
 * **SCHEDULED** — a tick picked it up; ``decide_batch`` chose its variant.
 * **EXECUTING** — dispatched to the execution tier(s); per-tier dispatch
   wall timestamps are recorded on the future.  Cancellation from here on
@@ -35,6 +44,7 @@ import numpy as np
 __all__ = [
     "RequestState",
     "RequestCancelled",
+    "RequestRejected",
     "InferenceFuture",
     "QueuedRequest",
     "CompletedRequest",
@@ -47,10 +57,16 @@ class RequestState(enum.Enum):
     EXECUTING = "executing"
     RESOLVED = "resolved"
     CANCELLED = "cancelled"
+    REJECTED = "rejected"
 
 
 class RequestCancelled(RuntimeError):
     """Raised by :meth:`InferenceFuture.result` for a cancelled request."""
+
+
+class RequestRejected(RuntimeError):
+    """Raised by :meth:`InferenceFuture.result` for a request the admission
+    queue refused (overload shedding / unreachable SLA)."""
 
 
 @dataclasses.dataclass
@@ -108,6 +124,11 @@ class InferenceFuture:
         self.submitted_ms: float = request.arrival_ms
         self.scheduled_ms: Optional[float] = None
         self.resolved_ms: Optional[float] = None
+        # Admission bookkeeping: a bounded queue's "block" policy parks the
+        # future un-admitted (backpressure); admitted_wall_ms stamps the
+        # moment it actually entered the bounded pending queue.
+        self.admitted: bool = False
+        self.admitted_wall_ms: Optional[float] = None
         self.tier_dispatch_wall_ms: Dict[str, float] = {}
         self.tier_done_wall_ms: Dict[str, float] = {}
         self._loop = loop
@@ -130,6 +151,9 @@ class InferenceFuture:
 
     def cancelled(self) -> bool:
         return self.state is RequestState.CANCELLED
+
+    def rejected(self) -> bool:
+        return self.state is RequestState.REJECTED
 
     @property
     def time_to_schedule_ms(self) -> Optional[float]:
@@ -178,6 +202,11 @@ class InferenceFuture:
             )
         if self.state is RequestState.CANCELLED:
             raise RequestCancelled(f"request {self.request.rid} was cancelled")
+        if self.state is RequestState.REJECTED:
+            raise RequestRejected(
+                f"request {self.request.rid} was rejected by admission "
+                "(overload shed / unreachable SLA)"
+            )
         assert self._completion is not None
         return self._completion
 
@@ -212,6 +241,22 @@ class InferenceFuture:
     def _mark_cancelled(self) -> None:
         self.state = RequestState.CANCELLED
         self._event.set()
+
+    def _mark_rejected(self) -> bool:
+        """Admission-side terminal transition (overload shed).
+
+        Only a QUEUED request can be rejected — it never reached a batch,
+        so there is no execution to discard.  A racing ``cancel()`` keeps
+        its meaning: whoever takes ``_state_lock`` first wins the terminal
+        state.  Returns True iff this call performed the transition (the
+        admission queue's rejection counters track only real rejections).
+        """
+        with self._state_lock:
+            if self.state is not RequestState.QUEUED:
+                return False
+            self.state = RequestState.REJECTED
+            self._event.set()
+            return True
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (

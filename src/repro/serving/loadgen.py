@@ -12,6 +12,13 @@ Arrival processes:
 * :class:`BurstyArrivals` — a two-state Markov-modulated Poisson process:
   most of the time the base rate, occasionally a burst at
   ``burst_factor`` × the base rate (flash crowds / synchronized clients).
+* :class:`OverloadArrivals` — a sustained overload phase: base-rate
+  Poisson, then ``overload_factor`` × the base rate for a contiguous span
+  of the stream, then base again (the adversarial input for the bounded
+  admission queue's backpressure policies).
+* :class:`RampArrivals` — the rate ramps linearly from ``rate_start_rps``
+  to ``rate_end_rps`` across the stream (capacity-crossing sweeps: find
+  where a policy starts shedding).
 
 Network times come from any :class:`repro.core.network.NetworkModel`; the
 named paper traces (university / residential / LTE) are exposed through
@@ -30,6 +37,8 @@ __all__ = [
     "ArrivalProcess",
     "PoissonArrivals",
     "BurstyArrivals",
+    "OverloadArrivals",
+    "RampArrivals",
     "LoadTrace",
     "make_trace",
     "iter_windows",
@@ -79,6 +88,73 @@ class BurstyArrivals(ArrivalProcess):
             elif flips[i] < self.p_enter:
                 in_burst = True
             gaps[i] = raw[i] * (burst_gap if in_burst else base_gap)
+        return np.cumsum(gaps)
+
+
+@dataclasses.dataclass(frozen=True)
+class OverloadArrivals(ArrivalProcess):
+    """Sustained overload: a contiguous span of the stream arrives at
+    ``overload_factor`` × the base rate.
+
+    ``overload_start`` / ``overload_stop`` are fractions of the *request
+    stream* (not wall time): requests with index in
+    ``[start*n, stop*n)`` use the overloaded rate.  The default is a
+    2× overload over the middle half — long enough that an unbounded
+    pending queue visibly diverges while bounded policies stay flat.
+    """
+
+    rate_rps: float = 100.0
+    overload_factor: float = 2.0
+    overload_start: float = 0.25
+    overload_stop: float = 0.75
+
+    def __post_init__(self):
+        if not 0.0 <= self.overload_start <= self.overload_stop <= 1.0:
+            raise ValueError(
+                "need 0 <= overload_start <= overload_stop <= 1, got "
+                f"[{self.overload_start}, {self.overload_stop})"
+            )
+        if self.overload_factor <= 0:
+            raise ValueError(
+                f"overload_factor must be > 0, got {self.overload_factor}"
+            )
+
+    def sample_arrivals_ms(self, rng, n):
+        idx = np.arange(n)
+        in_overload = (idx >= self.overload_start * n) & (
+            idx < self.overload_stop * n
+        )
+        rate = np.where(
+            in_overload, self.rate_rps * self.overload_factor, self.rate_rps
+        )
+        gaps = rng.exponential(1.0, size=n) * (1e3 / rate)
+        return np.cumsum(gaps)
+
+
+@dataclasses.dataclass(frozen=True)
+class RampArrivals(ArrivalProcess):
+    """Linear rate ramp across the stream: ``rate_start_rps`` for the first
+    request through ``rate_end_rps`` for the last (Poisson gaps at the
+    instantaneous rate).  Sweeps the offered load through the serving
+    tier's capacity — where queue wait starts growing is the knee.
+    """
+
+    rate_start_rps: float = 50.0
+    rate_end_rps: float = 200.0
+
+    def __post_init__(self):
+        if self.rate_start_rps <= 0 or self.rate_end_rps <= 0:
+            raise ValueError(
+                "ramp rates must be > 0, got "
+                f"{self.rate_start_rps} -> {self.rate_end_rps}"
+            )
+
+    def sample_arrivals_ms(self, rng, n):
+        frac = np.arange(n) / max(n - 1, 1)
+        rate = self.rate_start_rps + frac * (
+            self.rate_end_rps - self.rate_start_rps
+        )
+        gaps = rng.exponential(1.0, size=n) * (1e3 / rate)
         return np.cumsum(gaps)
 
 

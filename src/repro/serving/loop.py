@@ -9,6 +9,17 @@ hedged rows' on-device duplicate — through the async
 :meth:`repro.serving.backend.ExecutionBackend.submit_batch` protocol, then
 collects, observes, and resolves.
 
+Admission is a first-class, capacity-bounded stage
+(:class:`repro.serving.admission.AdmissionQueue`): ``max_pending`` bounds
+the persistent multi-tick queue, ``max_chunk`` caps how much one tick may
+take (a burst no longer inflates a single batch without limit), and
+``max_inflight_ticks`` gates ``wait=False`` dispatch.  At capacity the
+overload policy decides: ``block`` (client-side backpressure — futures
+wait un-admitted), ``shed`` (deadline-aware REJECTED resolution), or
+``degrade`` (overflow served by the on-device tier alone, no remote leg).
+The default is the unbounded compatibility behavior: every tick drains
+everything, byte-identical to the pre-admission loop.
+
 Because *all* batches of a tick are submitted before any is waited on, the
 remote batch and the on-device duplicate genuinely run concurrently
 (``dispatch="async"``, worker threads): ``resolve_chunk`` races
@@ -32,6 +43,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.sla import RequestMetrics, summarize
+from repro.serving.admission import AdmissionConfig, AdmissionQueue
 from repro.serving.backend import BatchHandle, ExecutionBackend, OnDeviceBackend
 from repro.serving.lifecycle import (
     CompletedRequest,
@@ -43,6 +55,8 @@ from repro.serving.loadgen import LoadTrace, iter_windows
 from repro.serving.scheduler import pad_to_pow2
 
 __all__ = ["ServingLoop", "TickResult", "TickStats"]
+
+_DEGRADE_EXEC_FLOOR_MS = 0.1  # matches the scheduler's sampled-exec floor
 
 
 def _pad_batch(requests, rows_idx) -> Tuple[np.ndarray, int]:
@@ -73,6 +87,8 @@ class TickStats:
     span_wall_ms: float  # first dispatch -> last batch completion
     dispatch_spread_wall_ms: float  # max - min dispatch stamp across tiers
     hedge_dispatched_before_remote_done: Optional[bool]
+    n_shed: int = 0  # rejected by admission at this tick (shed policy)
+    n_degraded: int = 0  # served on-device-only at this tick (degrade policy)
 
     @property
     def serialized_wall_ms(self) -> float:
@@ -99,7 +115,7 @@ class _InflightTick:
 
     futures: List[InferenceFuture]
     requests: List[QueuedRequest]
-    decision: object  # BatchDecision
+    decision: object  # BatchDecision, or None for a degrade-only tick
     queue_wait: np.ndarray
     t_sla: object  # scalar or (n,) vector raced at resolution
     now_ms: float
@@ -107,11 +123,21 @@ class _InflightTick:
     row_handles: List[BatchHandle]  # request index -> its remote handle
     hedged_rows: np.ndarray
     hedge_handle: Optional[BatchHandle]
+    # Overload-degraded rows: served by the on-device tier alone.
+    degraded_futures: List[InferenceFuture] = dataclasses.field(
+        default_factory=list
+    )
+    degrade_queue_wait: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0)
+    )
+    degrade_handle: Optional[BatchHandle] = None
+    n_shed: int = 0
 
     def poll(self) -> bool:
         handles = [h for _, _, h in self.groups]
-        if self.hedge_handle is not None:
-            handles.append(self.hedge_handle)
+        for h in (self.hedge_handle, self.degrade_handle):
+            if h is not None:
+                handles.append(h)
         return all(h.poll() for h in handles)
 
 
@@ -130,6 +156,11 @@ class ServingLoop:
     dispatch:
         ``"async"`` (worker threads, tiers overlap — the default) or
         ``"sync"`` (inline execution, deterministic serialized fallback).
+    admission:
+        An :class:`repro.serving.admission.AdmissionConfig` (or a prebuilt
+        :class:`~repro.serving.admission.AdmissionQueue`).  ``None`` is the
+        unbounded compatibility default — every submit admitted, every
+        tick drains everything.
     """
 
     def __init__(
@@ -139,6 +170,7 @@ class ServingLoop:
         hedge_backend: Optional[OnDeviceBackend] = None,
         *,
         dispatch: str = "async",
+        admission: Optional[AdmissionConfig | AdmissionQueue] = None,
     ):
         if dispatch not in ("async", "sync"):
             raise ValueError(f"dispatch must be 'async' or 'sync', got {dispatch!r}")
@@ -147,7 +179,13 @@ class ServingLoop:
         self.hedge_backend = hedge_backend
         self.dispatch = dispatch
         self.now_ms = 0.0
-        self._pending: List[InferenceFuture] = []
+        if admission is None:
+            admission = AdmissionConfig()
+        self.admission = (
+            admission
+            if isinstance(admission, AdmissionQueue)
+            else AdmissionQueue(admission)
+        )
         self._inflight: List[_InflightTick] = []
         self._rid = itertools.count()
 
@@ -156,18 +194,44 @@ class ServingLoop:
         return next(self._rid)
 
     def submit(self, request: QueuedRequest) -> InferenceFuture:
-        """Admit a request; it waits in QUEUED state for the next tick."""
+        """Submit a request to the admission queue.
+
+        Under the unbounded default the future is admitted immediately and
+        waits QUEUED for the next tick.  A bounded queue at capacity
+        applies its overload policy instead: the future may come back
+        not-yet-admitted (``block`` — check
+        :attr:`~repro.serving.lifecycle.InferenceFuture.admitted`), already
+        REJECTED (``shed``), or routed to the on-device-only degrade lane.
+        """
         future = InferenceFuture(request, loop=self)
-        self._pending.append(future)
+        self.admission.offer(future)
         return future
 
     @property
     def pending(self) -> int:
-        return sum(1 for f in self._pending if f.state is RequestState.QUEUED)
+        """Admitted requests waiting for a tick (≤ ``max_pending``)."""
+        return self.admission.pending
+
+    @property
+    def blocked(self) -> int:
+        """Backpressured requests waiting un-admitted (block policy)."""
+        return self.admission.blocked
+
+    @property
+    def backlog(self) -> int:
+        """Everything waiting for a tick across all admission lanes."""
+        return self.admission.backlog
 
     @property
     def inflight(self) -> int:
-        return sum(len(t.futures) for t in self._inflight)
+        return sum(
+            len(t.futures) + len(t.degraded_futures) for t in self._inflight
+        )
+
+    def _usage_names(self) -> List[str]:
+        """Model-usage key space: the remote zoo plus the on-device tier
+        (degraded completions are attributed to the duplicate)."""
+        return list(self.scheduler.names) + [self.scheduler.ondevice.name]
 
     # -- the event loop -------------------------------------------------------
     def tick(
@@ -182,67 +246,130 @@ class ServingLoop:
         ``serve_queue``).  ``wait=False`` returns ``None`` right after
         dispatch — futures stay EXECUTING and are resolved by a later
         :meth:`poll` / :meth:`drain` (the genuinely-async event loop).
+
+        A bounded admission queue shapes what one tick may take: at most
+        ``max_chunk`` requests (the rest stay queued across ticks), no new
+        dispatch while ``max_inflight_ticks`` are in flight, and the shed /
+        degrade overload policies resolve or reroute the overflow.  A tick
+        that *only* sheds (every schedulable request rejected) returns its
+        :class:`TickResult` immediately even with ``wait=False`` — there
+        is nothing in flight to poll for, but the shed accounting
+        (``stats.n_shed``, ``metrics.n_rejected``) must reach observers.
         """
-        # Swap, don't read-then-clear: a submit() racing this tick from
-        # another thread must land in either this batch or the next one,
-        # never vanish between a snapshot and a clear().
-        snapshot, self._pending = self._pending, []
-        candidates = [f for f in snapshot if f.state is RequestState.QUEUED]
-        if not candidates:
+        cfg = self.admission.cfg
+        if (
+            cfg.max_inflight_ticks is not None
+            and len(self._inflight) >= cfg.max_inflight_ticks
+        ):
+            return None  # dispatch gate: requests stay queued for later
+        # The admission queue hands one tick's work over atomically: a
+        # submit() racing this tick from another thread lands in either
+        # this chunk or a later one, never vanishes.
+        take = self.admission.take(
+            now_ms,
+            default_sla_ms=self.scheduler.cfg.t_sla_ms,
+            # Cheapest remote execution; the shed predicate also considers
+            # the network-free on-device duplicate — on a bad network the
+            # hedge is exactly what still attains the SLA.
+            service_floor_ms=float(np.min(self.scheduler.mu)),
+            ondevice_floor_ms=float(self.scheduler.ondevice_mu),
+        )
+        if not take and not take.shed:
             return None
-        if now_ms is None:
-            now_ms = float(max(f.request.arrival_ms for f in candidates))
+        now_ms = take.now_ms
+        self.now_ms = max(self.now_ms, now_ms)
         # Atomic QUEUED -> SCHEDULED claim: a cancel() racing this tick from
         # another thread loses its slot here, never in a dispatched batch.
-        batch = [f for f in candidates if f._try_schedule(now_ms)]
-        if not batch:
+        batch = [f for f in take.chunk if f._try_schedule(now_ms)]
+        degraded = [f for f in take.degraded if f._try_schedule(now_ms)]
+        if not batch and not degraded:
+            if take.shed:  # all-shed tick: surface the rejection accounting
+                return self._collect(
+                    _InflightTick(
+                        futures=[], requests=[], decision=None,
+                        queue_wait=np.zeros(0), t_sla=self.scheduler.cfg.t_sla_ms,
+                        now_ms=now_ms, groups=[], row_handles=[],
+                        hedged_rows=np.zeros(0, dtype=np.int64),
+                        hedge_handle=None, n_shed=len(take.shed),
+                    )
+                )
             return None
-
-        requests = [f.request for f in batch]
-        arrivals = np.asarray([r.arrival_ms for r in requests])
-        self.now_ms = max(self.now_ms, now_ms)
-        queue_wait = np.maximum(now_ms - arrivals, 0.0)
-
-        # Per-request SLA: selection budgets come from t_sla - est - wait,
-        # expressed as an effective estimate offset against the loop SLA.
-        loop_sla = self.scheduler.cfg.t_sla_ms
-        slas = np.asarray(
-            [loop_sla if r.sla_ms is None else float(r.sla_ms) for r in requests]
-        )
-        t_sla = slas if np.any(slas != loop_sla) else loop_sla
-        est = np.asarray([r.t_nw_est_ms for r in requests])
-        decision = self.scheduler.decide_batch(
-            est + queue_wait + (loop_sla - slas)
-        )
-
-        # Dispatch every batch of the tick before waiting on any of them:
-        # the remote variant groups and the hedged rows' duplicate all
-        # start at this tick — the shared origin of both race clocks.
         sync = self.dispatch == "sync"
-        groups: List[Tuple[int, np.ndarray, BatchHandle]] = []
-        row_handles: List[Optional[BatchHandle]] = [None] * len(requests)
-        for m in np.unique(decision.model_index):
-            rows = np.flatnonzero(decision.model_index == m)
-            gbatch, steps = _pad_batch(requests, rows)
-            name = self.scheduler.names[int(m)]
-            handle = self.backend.submit_batch(name, gbatch, steps, sync=sync)
-            groups.append((int(m), rows, handle))
-            for i in rows:
-                row_handles[i] = handle
 
-        hedged_rows = np.flatnonzero(decision.hedged)
+        decision = None
+        t_sla: object = self.scheduler.cfg.t_sla_ms
+        queue_wait = np.zeros(len(batch))
+        groups: List[Tuple[int, np.ndarray, BatchHandle]] = []
+        row_handles: List[Optional[BatchHandle]] = [None] * len(batch)
+        hedged_rows = np.zeros(0, dtype=np.int64)
         hedge_handle: Optional[BatchHandle] = None
-        if self.hedge_backend is not None and hedged_rows.size > 0:
-            hbatch, hsteps = _pad_batch(requests, hedged_rows)
-            hedge_handle = self.hedge_backend.submit_hedge(
-                hbatch, hsteps, sync=sync
+        requests = [f.request for f in batch]
+        if batch:
+            arrivals = np.asarray([r.arrival_ms for r in requests])
+            queue_wait = np.maximum(now_ms - arrivals, 0.0)
+
+            # Per-request SLA: selection budgets come from t_sla - est - wait,
+            # expressed as an effective estimate offset against the loop SLA.
+            loop_sla = self.scheduler.cfg.t_sla_ms
+            slas = np.asarray(
+                [
+                    loop_sla if r.sla_ms is None else float(r.sla_ms)
+                    for r in requests
+                ]
             )
+            t_sla = slas if np.any(slas != loop_sla) else loop_sla
+            est = np.asarray([r.t_nw_est_ms for r in requests])
+            decision = self.scheduler.decide_batch(
+                est + queue_wait + (loop_sla - slas)
+            )
+
+            # Dispatch every batch of the tick before waiting on any of
+            # them: the remote variant groups and the hedged rows'
+            # duplicate all start at this tick — the shared origin of both
+            # race clocks.
+            for m in np.unique(decision.model_index):
+                rows = np.flatnonzero(decision.model_index == m)
+                gbatch, steps = _pad_batch(requests, rows)
+                name = self.scheduler.names[int(m)]
+                handle = self.backend.submit_batch(name, gbatch, steps, sync=sync)
+                groups.append((int(m), rows, handle))
+                for i in rows:
+                    row_handles[i] = handle
+
+            hedged_rows = np.flatnonzero(decision.hedged)
+            if self.hedge_backend is not None and hedged_rows.size > 0:
+                hbatch, hsteps = _pad_batch(requests, hedged_rows)
+                hedge_handle = self.hedge_backend.submit_hedge(
+                    hbatch, hsteps, sync=sync
+                )
+
+        # Overload-degraded rows: the on-device tier alone answers — no
+        # remote leg, no hedge race.  Without a hedge backend the duplicate
+        # is simulated from the live on-device profile at collection.
+        degrade_handle: Optional[BatchHandle] = None
+        degrade_queue_wait = np.zeros(len(degraded))
+        if degraded:
+            dreqs = [f.request for f in degraded]
+            degrade_queue_wait = np.maximum(
+                now_ms - np.asarray([r.arrival_ms for r in dreqs]), 0.0
+            )
+            if self.hedge_backend is not None:
+                dbatch, dsteps = _pad_batch(dreqs, range(len(dreqs)))
+                degrade_handle = self.hedge_backend.submit_hedge(
+                    dbatch, dsteps, sync=sync
+                )
 
         for i, f in enumerate(batch):
             tiers = {"remote": row_handles[i].dispatch_wall_ms}
             if hedge_handle is not None and decision.hedged[i]:
                 tiers["ondevice"] = hedge_handle.dispatch_wall_ms
             f._mark_executing(tiers)
+        for f in degraded:
+            f._mark_executing(
+                {}
+                if degrade_handle is None
+                else {"ondevice": degrade_handle.dispatch_wall_ms}
+            )
 
         tick = _InflightTick(
             futures=batch,
@@ -255,6 +382,10 @@ class ServingLoop:
             row_handles=row_handles,
             hedged_rows=hedged_rows,
             hedge_handle=hedge_handle,
+            degraded_futures=degraded,
+            degrade_queue_wait=degrade_queue_wait,
+            degrade_handle=degrade_handle,
+            n_shed=len(take.shed),
         )
         if not wait:
             self._inflight.append(tick)
@@ -279,13 +410,21 @@ class ServingLoop:
         return [self._collect(t) for t in inflight]
 
     def flush(self) -> List[TickResult]:
-        """Drive the loop until nothing is pending or in flight."""
+        """Drive the loop until nothing is backlogged or in flight.
+
+        The backlog spans every admission lane — the bounded pending
+        queue, the block policy's overflow room, and the degrade lane — so
+        a backpressured future still resolves through ``result()``.
+        """
         results = self.drain()
-        while self.pending:
+        while self.backlog:
+            before = self.backlog
             r = self.tick()
             if r is not None:
                 results.append(r)
             results.extend(self.drain())
+            if r is None and self.backlog >= before:
+                break  # nothing schedulable (e.g. all raced to cancel)
         return results
 
     # -- collection / resolution ---------------------------------------------
@@ -301,120 +440,207 @@ class ServingLoop:
             exec_ms[rows] = wall_ms
             for row, i in enumerate(rows):
                 gen_tokens[i] = out[row, : requests[i].n_steps]
-        self.scheduler.observe_batch(decision.model_index, exec_ms)
 
-        remote_ms = (
-            tick.queue_wait
-            + np.asarray([r.t_nw_actual_ms for r in requests])
-            + exec_ms
-        )
-
-        measured = tick.hedge_handle is not None
-        ondevice_in: Optional[np.ndarray] = None
-        hedge_wall: Optional[float] = None
-        hedge_tokens: Dict[int, np.ndarray] = {}
-        if measured:
-            out, hedge_wall = tick.hedge_handle.wait()
-            for row, i in enumerate(tick.hedged_rows):
-                hedge_tokens[int(i)] = out[row, : requests[i].n_steps]
-            ondevice_in = np.full(n, hedge_wall)
-            self.scheduler.observe_ondevice(
-                np.full(tick.hedged_rows.size, hedge_wall)
-            )
-
-        # Both tiers launch at the dispatch tick, so queue wait charges the
-        # duplicate's race clock too — and with async dispatch that is also
-        # true of the *wall* clocks (see TickStats / the regression test).
-        acc_used, latency, used_remote, ondevice_ms = self.scheduler.resolve_chunk(
-            decision, remote_ms, ondevice_ms=ondevice_in,
-            ondevice_wait_ms=tick.queue_wait, t_sla_ms=tick.t_sla,
-        )
-
-        names = self.scheduler.names
         completions: List[CompletedRequest] = []
-        live: List[int] = []
-        for i, f in enumerate(tick.futures):
-            done_walls = {"remote": tick.row_handles[i].done_wall_ms}
-            if measured and decision.hedged[i]:
-                done_walls["ondevice"] = tick.hedge_handle.done_wall_ms
-            f.tier_done_wall_ms.update(done_walls)
-            c = CompletedRequest(
-                rid=requests[i].rid,
-                model_name=names[int(decision.model_index[i])],
-                model_index=int(decision.model_index[i]),
-                tokens=(
-                    hedge_tokens[i]
-                    if i in hedge_tokens and not used_remote[i]
-                    else gen_tokens[i]
-                ),
-                exec_ms=float(exec_ms[i]),
-                remote_ms=float(remote_ms[i]),
-                latency_ms=float(latency[i]),
-                accuracy=float(acc_used[i]),
-                used_remote=bool(used_remote[i]),
-                hedged=bool(decision.hedged[i]),
-                queue_wait_ms=float(tick.queue_wait[i]),
-                ondevice_ms=(
-                    float(ondevice_ms[i]) if decision.hedged[i] else None
-                ),
-                hedge_measured=measured and bool(decision.hedged[i]),
-                time_to_schedule_ms=float(
-                    tick.now_ms - requests[i].arrival_ms
-                ),
-                race_resolution=(
-                    "unhedged" if not decision.hedged[i]
-                    else ("remote_won" if used_remote[i] else "ondevice_won")
-                ),
+        t_sla_live: List[float] = []  # per live completion, for summarize
+        measured = tick.hedge_handle is not None
+        hedge_wall: Optional[float] = None
+        names = self.scheduler.names
+        if n:
+            self.scheduler.observe_batch(decision.model_index, exec_ms)
+
+            remote_ms = (
+                tick.queue_wait
+                + np.asarray([r.t_nw_actual_ms for r in requests])
+                + exec_ms
             )
-            f._mark_resolved(c)
-            if f.state is RequestState.RESOLVED:
-                live.append(i)
-                completions.append(c)
+
+            ondevice_in: Optional[np.ndarray] = None
+            hedge_tokens: Dict[int, np.ndarray] = {}
+            if measured:
+                out, hedge_wall = tick.hedge_handle.wait()
+                for row, i in enumerate(tick.hedged_rows):
+                    hedge_tokens[int(i)] = out[row, : requests[i].n_steps]
+                ondevice_in = np.full(n, hedge_wall)
+                self.scheduler.observe_ondevice(
+                    np.full(tick.hedged_rows.size, hedge_wall)
+                )
+
+            # Both tiers launch at the dispatch tick, so queue wait charges
+            # the duplicate's race clock too — and with async dispatch that
+            # is also true of the *wall* clocks (see TickStats / the
+            # regression test).
+            acc_used, latency, used_remote, ondevice_ms = (
+                self.scheduler.resolve_chunk(
+                    decision, remote_ms, ondevice_ms=ondevice_in,
+                    ondevice_wait_ms=tick.queue_wait, t_sla_ms=tick.t_sla,
+                )
+            )
+
+            for i, f in enumerate(tick.futures):
+                done_walls = {"remote": tick.row_handles[i].done_wall_ms}
+                if measured and decision.hedged[i]:
+                    done_walls["ondevice"] = tick.hedge_handle.done_wall_ms
+                f.tier_done_wall_ms.update(done_walls)
+                c = CompletedRequest(
+                    rid=requests[i].rid,
+                    model_name=names[int(decision.model_index[i])],
+                    model_index=int(decision.model_index[i]),
+                    tokens=(
+                        hedge_tokens[i]
+                        if i in hedge_tokens and not used_remote[i]
+                        else gen_tokens[i]
+                    ),
+                    exec_ms=float(exec_ms[i]),
+                    remote_ms=float(remote_ms[i]),
+                    latency_ms=float(latency[i]),
+                    accuracy=float(acc_used[i]),
+                    used_remote=bool(used_remote[i]),
+                    hedged=bool(decision.hedged[i]),
+                    queue_wait_ms=float(tick.queue_wait[i]),
+                    ondevice_ms=(
+                        float(ondevice_ms[i]) if decision.hedged[i] else None
+                    ),
+                    hedge_measured=measured and bool(decision.hedged[i]),
+                    time_to_schedule_ms=float(
+                        tick.now_ms - requests[i].arrival_ms
+                    ),
+                    race_resolution=(
+                        "unhedged" if not decision.hedged[i]
+                        else ("remote_won" if used_remote[i] else "ondevice_won")
+                    ),
+                )
+                f._mark_resolved(c)
+                if f.state is RequestState.RESOLVED:
+                    completions.append(c)
+                    t_sla_live.append(
+                        float(tick.t_sla)
+                        if np.isscalar(tick.t_sla)
+                        else float(np.asarray(tick.t_sla)[i])
+                    )
+
+        completions, t_sla_live = self._collect_degraded(
+            tick, completions, t_sla_live
+        )
 
         metrics = None
-        if live:
-            idx = np.asarray(live)
-            t_sla_live = (
-                tick.t_sla
-                if np.isscalar(tick.t_sla)
-                else np.asarray(tick.t_sla)[idx]
-            )
+        if completions or tick.n_shed:
             metrics = summarize(
-                accuracy_used=acc_used[idx],
-                latency_ms=latency[idx],
-                t_sla_ms=t_sla_live,
-                model_names=names,
-                model_index=decision.model_index[idx],
-                used_remote=used_remote[idx],
-                queue_wait_ms=tick.queue_wait[idx],
+                accuracy_used=np.asarray([c.accuracy for c in completions]),
+                latency_ms=np.asarray([c.latency_ms for c in completions]),
+                t_sla_ms=np.asarray(t_sla_live),
+                model_names=self._usage_names(),
+                model_index=np.asarray(
+                    [c.model_index for c in completions], dtype=np.int64
+                ),
+                used_remote=np.asarray([c.used_remote for c in completions]),
+                queue_wait_ms=np.asarray(
+                    [c.queue_wait_ms for c in completions]
+                ),
                 race_resolution=np.asarray(
                     [c.race_resolution for c in completions]
                 ),
                 time_to_schedule_ms=np.asarray(
                     [c.time_to_schedule_ms for c in completions]
                 ),
+                n_rejected=tick.n_shed,
             )
 
         dispatch_stamps = [h.dispatch_wall_ms for _, _, h in tick.groups]
         done_stamps = [h.done_wall_ms for _, _, h in tick.groups]
-        if tick.hedge_handle is not None:
-            dispatch_stamps.append(tick.hedge_handle.dispatch_wall_ms)
-            done_stamps.append(tick.hedge_handle.done_wall_ms)
+        for h in (tick.hedge_handle, tick.degrade_handle):
+            if h is not None:
+                dispatch_stamps.append(h.dispatch_wall_ms)
+                done_stamps.append(h.done_wall_ms)
         stats = TickStats(
             n_requests=n,
             n_hedged=int(tick.hedged_rows.size),
             remote_wall_ms=remote_wall_sum,
             hedge_wall_ms=hedge_wall,
-            span_wall_ms=max(done_stamps) - min(dispatch_stamps),
-            dispatch_spread_wall_ms=max(dispatch_stamps) - min(dispatch_stamps),
+            span_wall_ms=(
+                max(done_stamps) - min(dispatch_stamps) if done_stamps else 0.0
+            ),
+            dispatch_spread_wall_ms=(
+                max(dispatch_stamps) - min(dispatch_stamps)
+                if dispatch_stamps
+                else 0.0
+            ),
             hedge_dispatched_before_remote_done=(
                 tick.hedge_handle.dispatch_wall_ms
                 < max(h.done_wall_ms for _, _, h in tick.groups)
-                if tick.hedge_handle is not None
+                if tick.hedge_handle is not None and tick.groups
                 else None
             ),
+            n_shed=tick.n_shed,
+            n_degraded=len(tick.degraded_futures),
         )
         return TickResult(completions=completions, metrics=metrics, stats=stats)
+
+    def _collect_degraded(
+        self,
+        tick: _InflightTick,
+        completions: List[CompletedRequest],
+        t_sla_live: List[float],
+    ) -> Tuple[List[CompletedRequest], List[float]]:
+        """Resolve the tick's on-device-only (overload-degraded) rows.
+
+        With a real hedge backend the duplicate batch executed for real and
+        its measured wall time folds into the live on-device EWMA profile;
+        without one the execution is simulated from the profile (zero
+        tokens — simulation only), mirroring the sampled-hedge fallback.
+        There is no network leg: the duplicate runs on the device, so
+        latency is queue wait + on-device execution.
+        """
+        nd = len(tick.degraded_futures)
+        if not nd:
+            return completions, t_sla_live
+        dreqs = [f.request for f in tick.degraded_futures]
+        sched = self.scheduler
+        if tick.degrade_handle is not None:
+            dout, dwall = tick.degrade_handle.wait()
+            d_exec = np.full(nd, dwall)
+            d_tokens = [dout[row, : r.n_steps] for row, r in enumerate(dreqs)]
+            sched.observe_ondevice(d_exec)
+        else:
+            d_exec = np.maximum(
+                sched.ondevice_mu
+                + sched.ondevice_sigma * sched.rng.standard_normal(nd),
+                _DEGRADE_EXEC_FLOOR_MS,
+            )
+            d_tokens = [np.zeros(r.n_steps, dtype=np.int32) for r in dreqs]
+        d_latency = tick.degrade_queue_wait + d_exec
+        loop_sla = sched.cfg.t_sla_ms
+        degrade_index = len(sched.names)  # the on-device slot in _usage_names
+        for j, f in enumerate(tick.degraded_futures):
+            if tick.degrade_handle is not None:
+                f.tier_done_wall_ms.update(
+                    {"ondevice": tick.degrade_handle.done_wall_ms}
+                )
+            r = dreqs[j]
+            c = CompletedRequest(
+                rid=r.rid,
+                model_name=sched.ondevice.name,
+                model_index=degrade_index,
+                tokens=d_tokens[j],
+                exec_ms=float(d_exec[j]),
+                remote_ms=float(d_latency[j]),  # no remote leg: wait + exec
+                latency_ms=float(d_latency[j]),
+                accuracy=float(sched.ondevice.accuracy),
+                used_remote=False,
+                hedged=False,
+                queue_wait_ms=float(tick.degrade_queue_wait[j]),
+                ondevice_ms=float(d_latency[j]),
+                hedge_measured=tick.degrade_handle is not None,
+                time_to_schedule_ms=float(tick.now_ms - r.arrival_ms),
+                race_resolution="degraded",
+            )
+            f._mark_resolved(c)
+            if f.state is RequestState.RESOLVED:
+                completions.append(c)
+                t_sla_live.append(
+                    loop_sla if r.sla_ms is None else float(r.sla_ms)
+                )
+        return completions, t_sla_live
 
     # -- loadgen integration --------------------------------------------------
     def drain_trace(
@@ -425,15 +651,48 @@ class ServingLoop:
         tokens_for: Callable[[int], np.ndarray],
         n_steps: int,
         on_tick: Optional[Callable[[float, TickResult], None]] = None,
+        service_model: Optional[Callable[[TickResult], float]] = None,
     ) -> Tuple[List[CompletedRequest], Optional[RequestMetrics]]:
         """Drain a :mod:`repro.serving.loadgen` trace through the tick path.
 
         Each arrival window becomes one tick fired at the window's close;
         the wait until then is charged against each request's budget and
         latency.  ``on_tick(tick_ms, result)`` observes each tick.  Returns
-        all completions plus trace-level aggregate metrics.
+        all completions plus trace-level aggregate metrics (including
+        ``shed_rate`` / ``goodput`` when the admission queue rejected
+        requests).
+
+        ``service_model(result) -> ms`` couples service time into the loop
+        clock: after each tick the server is busy for that long, and the
+        next tick cannot fire earlier — so offered load beyond the service
+        rate builds real queue wait instead of being absorbed into one
+        instantaneous mega-batch.  This is what makes overload *visible*
+        to the admission policies (and to ``bench_serving.py``'s
+        ``serving/admission`` rows); ``None`` keeps the pre-admission
+        windows-only clock.
+
+        A bounded admission queue can leave a backlog after the last
+        arrival window; the drain keeps ticking (one window's width at a
+        time, service-coupled) until every lane is empty.
         """
         completions: List[CompletedRequest] = []
+        rejected_before = self.admission.n_rejected
+        busy_until_ms = 0.0
+        tick_ms = 0.0
+
+        def fire(t: float) -> float:
+            nonlocal busy_until_ms
+            if service_model is not None:
+                t = max(t, busy_until_ms)
+            result = self.tick(now_ms=float(t))
+            if result is not None:
+                if service_model is not None:
+                    busy_until_ms = t + max(float(service_model(result)), 0.0)
+                if on_tick is not None:
+                    on_tick(float(t), result)
+                completions.extend(result.completions)
+            return t
+
         for window in iter_windows(trace, window_ms):
             for i in window:
                 self.submit(
@@ -446,20 +705,24 @@ class ServingLoop:
                         arrival_ms=float(trace.arrival_ms[i]),
                     )
                 )
-            tick_ms = (trace.arrival_ms[window[0]] // window_ms + 1) * window_ms
-            result = self.tick(now_ms=float(tick_ms))
-            if result is None:
-                continue
-            if on_tick is not None:
-                on_tick(float(tick_ms), result)
-            completions.extend(result.completions)
+            tick_ms = fire(
+                (trace.arrival_ms[window[0]] // window_ms + 1) * window_ms
+            )
+
+        stalled = 0
+        while self.backlog and stalled < 3:
+            before = self.backlog
+            tick_ms = fire(tick_ms + window_ms)
+            stalled = stalled + 1 if self.backlog >= before else 0
+
         metrics = None
-        if completions:
+        n_rejected = self.admission.n_rejected - rejected_before
+        if completions or n_rejected:
             metrics = summarize(
                 accuracy_used=np.asarray([c.accuracy for c in completions]),
                 latency_ms=np.asarray([c.latency_ms for c in completions]),
                 t_sla_ms=self.scheduler.cfg.t_sla_ms,
-                model_names=self.scheduler.names,
+                model_names=self._usage_names(),
                 model_index=np.asarray([c.model_index for c in completions]),
                 used_remote=np.asarray([c.used_remote for c in completions]),
                 queue_wait_ms=np.asarray([c.queue_wait_ms for c in completions]),
@@ -469,5 +732,6 @@ class ServingLoop:
                 time_to_schedule_ms=np.asarray(
                     [c.time_to_schedule_ms for c in completions]
                 ),
+                n_rejected=n_rejected,
             )
         return completions, metrics

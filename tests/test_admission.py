@@ -1,0 +1,549 @@
+"""Bounded admission queue: overload soak, conservation, policy semantics.
+
+Driven through the sleep-tier stubs (``tests/loop_stubs.py``) so every test
+is deterministic and compile-free.  The invariants under test:
+
+* ``pending`` never exceeds ``max_pending`` under any overload policy;
+* request conservation: ``resolved + rejected + cancelled == submitted``;
+* shed decisions are monotone in queue wait (a request shed at wait *w*
+  would also be shed at any wait > *w*);
+* ``max_chunk`` caps every tick's batch, with leftovers persisting FIFO
+  across ticks;
+* the unbounded default is behaviorally identical to the pre-admission
+  loop (the compat pin — the byte-identical reference lives in
+  ``tests/test_loop.py``'s shim-equivalence test).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.admission import (
+    AdmissionConfig,
+    AdmissionQueue,
+    sla_unreachable,
+)
+from repro.serving.lifecycle import (
+    CompletedRequest,
+    InferenceFuture,
+    QueuedRequest,
+    RequestRejected,
+    RequestState,
+)
+from repro.serving.loop import ServingLoop
+
+from hypothesis_compat import given, settings, st
+from loop_stubs import StubHedgeBackend, StubRemoteBackend, stub_scheduler
+
+TERMINAL = (
+    RequestState.RESOLVED, RequestState.REJECTED, RequestState.CANCELLED
+)
+# The stub scheduler's fastest remote mu (the shed predicate's service
+# floor: stub-a's mu_ms), its on-device tier's mu (the network-free hedge
+# floor), and the stub est used by _request below.  The loop's shed
+# predicate charges min(est + remote floor, ondevice floor).
+STUB_FLOOR_MS, STUB_ONDEV_MS, STUB_EST_MS = 30.0, 20.0, 10.0
+STUB_SHED_FLOOR_MS = min(STUB_EST_MS + STUB_FLOOR_MS, STUB_ONDEV_MS)
+
+
+def _request(rid, arrival_ms=0.0, est=STUB_EST_MS, sla=None, n_steps=2):
+    return QueuedRequest(
+        rid=rid,
+        tokens=np.zeros(4, np.int32),
+        n_steps=n_steps,
+        t_nw_est_ms=est,
+        t_nw_actual_ms=est,
+        arrival_ms=float(arrival_ms),
+        sla_ms=sla,
+    )
+
+
+def _completion(rid):
+    return CompletedRequest(
+        rid=rid, model_name="stub", model_index=0,
+        tokens=np.zeros(1, np.int32), exec_ms=1.0, remote_ms=1.0,
+        latency_ms=1.0, accuracy=1.0, used_remote=True, hedged=False,
+    )
+
+
+def _loop(admission, *, t_sla_ms=1_000.0, delay_s=0.0, dispatch="sync", **kw):
+    kw.setdefault("profile_ewma", 0.0)  # frozen profiles: fixed shed floor
+    return ServingLoop(
+        stub_scheduler(t_sla_ms=t_sla_ms, **kw),
+        StubRemoteBackend(delay_s),
+        StubHedgeBackend(delay_s),
+        dispatch=dispatch,
+        admission=admission,
+    )
+
+
+def _drive(loop, *, step_ms=50.0, max_pending=None, max_ticks=10_000):
+    """Tick the loop dry, checking the pending bound at every step."""
+    results = []
+    t = loop.now_ms
+    for _ in range(max_ticks):
+        if not (loop.backlog or loop.inflight):
+            return results
+        t += step_ms
+        r = loop.tick(now_ms=t)
+        results.extend(loop.drain())
+        if r is not None:
+            results.append(r)
+        if max_pending is not None:
+            assert loop.pending <= max_pending
+    raise AssertionError("loop did not drain within the tick budget")
+
+
+def _state_counts(futures):
+    resolved = sum(f.state is RequestState.RESOLVED for f in futures)
+    rejected = sum(f.state is RequestState.REJECTED for f in futures)
+    cancelled = sum(f.state is RequestState.CANCELLED for f in futures)
+    return resolved, rejected, cancelled
+
+
+# ---------------------------------------------------------------------------
+# Overload soak: 4x capacity through every bounded policy.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["block", "shed", "degrade"])
+def test_overload_soak_bounds_pending_and_conserves(policy):
+    cap = 8
+    loop = _loop(AdmissionConfig(max_pending=cap, max_chunk=4, policy=policy))
+    futures = []
+    for i in range(4 * cap):  # 4x capacity, all at once
+        futures.append(loop.submit(_request(i, arrival_ms=0.0)))
+        assert loop.pending <= cap
+    results = _drive(loop, max_pending=cap)
+    assert all(f.state in TERMINAL for f in futures)
+    resolved, rejected, cancelled = _state_counts(futures)
+    assert resolved + rejected + cancelled == len(futures)
+    assert loop.admission.n_submitted == len(futures)
+    assert rejected == loop.admission.n_rejected
+    if policy == "shed":
+        # Capacity tail-drop: everything past the bounded queue rejected
+        # at submit (their waits were 0 — no deadline shedding possible).
+        assert rejected == 3 * cap and resolved == cap
+        with pytest.raises(RequestRejected):
+            futures[-1].result(timeout=0)
+    else:
+        assert rejected == 0 and resolved == 4 * cap
+    if policy == "degrade":
+        degraded = [
+            c for r in results for c in r.completions
+            if c.race_resolution == "degraded"
+        ]
+        assert len(degraded) == 3 * cap  # the overflow went on-device
+
+
+@pytest.mark.stress
+@pytest.mark.parametrize("policy", ["block", "shed", "degrade"])
+def test_overload_soak_stress(policy):
+    """Wave-driven soak: 16 waves of 128 submissions against capacity 32.
+
+    Runs in the non-blocking CI ``stress`` job; the wall-clock budget
+    assertion keeps it an honest soak rather than an unbounded crawl.
+    """
+    t0 = time.perf_counter()
+    cap, waves, per_wave = 32, 16, 128
+    loop = _loop(
+        AdmissionConfig(max_pending=cap, max_chunk=16, policy=policy),
+        delay_s=0.0005,
+    )
+    futures, rid = [], 0
+    t = 0.0
+    for _ in range(waves):
+        for _ in range(per_wave):
+            futures.append(loop.submit(_request(rid, arrival_ms=t)))
+            rid += 1
+            assert loop.pending <= cap
+        t += 50.0
+        loop.tick(now_ms=t)
+        assert loop.pending <= cap
+    _drive(loop, max_pending=cap)
+    assert all(f.state in TERMINAL for f in futures)
+    resolved, rejected, cancelled = _state_counts(futures)
+    assert resolved + rejected + cancelled == waves * per_wave
+    assert rejected == loop.admission.n_rejected
+    if policy != "shed":
+        assert resolved == waves * per_wave
+    assert time.perf_counter() - t0 < 90.0  # wall-clock soak budget
+
+
+# ---------------------------------------------------------------------------
+# Policy semantics.
+# ---------------------------------------------------------------------------
+def test_block_policy_backpressures_then_admits_fifo():
+    cap = 2
+    loop = _loop(AdmissionConfig(max_pending=cap, max_chunk=2, policy="block"))
+    fs = [loop.submit(_request(i)) for i in range(5)]
+    assert [f.admitted for f in fs] == [True, True, False, False, False]
+    assert loop.pending == 2 and loop.blocked == 3
+    assert all(f.admitted_wall_ms is not None for f in fs[:2])
+    assert all(f.admitted_wall_ms is None for f in fs[2:])
+
+    loop.tick(now_ms=50.0)  # serves the chunk; freed slots refill FIFO
+    assert fs[2].admitted and fs[3].admitted and not fs[4].admitted
+    assert fs[2].admitted_wall_ms >= fs[0].admitted_wall_ms
+    assert loop.blocked == 1
+
+    loop.flush()  # drives the overflow room dry too
+    assert loop.backlog == 0
+    assert all(f.state is RequestState.RESOLVED for f in fs)
+    # FIFO: completion order == submission order.
+    assert [f.result(timeout=0).rid for f in fs] == [0, 1, 2, 3, 4]
+
+
+def test_blocked_future_result_drives_the_loop():
+    loop = _loop(AdmissionConfig(max_pending=1, max_chunk=1, policy="block"))
+    first = loop.submit(_request(0))
+    blocked = loop.submit(_request(1))
+    assert not blocked.admitted
+    # result() on a backpressured future flushes the loop through the
+    # overflow room — a single-threaded caller never deadlocks.
+    assert blocked.result().rid == 1
+    assert first.state is RequestState.RESOLVED
+
+
+def test_client_wait_admission_blocks_until_slot():
+    from repro.serving.client import InferenceClient
+
+    loop = _loop(AdmissionConfig(max_pending=1, max_chunk=1, policy="block"))
+    client = InferenceClient(loop)
+    client.submit(np.zeros(4, np.int32), n_steps=2)
+    f = client.submit(np.zeros(4, np.int32), n_steps=2, wait_admission=True)
+    assert f.admitted  # submit ticked the loop until capacity freed
+
+
+def test_shed_deadline_rejects_unreachable_sla():
+    loop = _loop(
+        AdmissionConfig(max_pending=8, max_chunk=8, policy="shed"),
+        t_sla_ms=200.0,
+    )
+    # The loop's shed floor is min(est + fastest remote mu, ondevice mu)
+    # = min(10 + 30, 20) = 20: the network-free duplicate is the cheapest
+    # path, so a request sheds only once wait + 20 exceeds its SLA.
+    ok = loop.submit(_request(0, arrival_ms=90.0))  # wait 100: 120 <= 200
+    late = loop.submit(_request(1, arrival_ms=0.0))  # wait 190: 210 > 200
+    tight = loop.submit(_request(2, arrival_ms=150.0, sla=50.0))  # 60 > 50
+    res = loop.tick(now_ms=190.0)
+    assert [c.rid for c in res.completions] == [0]
+    assert res.stats.n_shed == 2
+    assert late.state is RequestState.REJECTED
+    assert tight.state is RequestState.REJECTED
+    assert ok.state is RequestState.RESOLVED
+    with pytest.raises(RequestRejected):
+        late.result(timeout=0)
+    assert late.done() and late.rejected() and not late.cancelled()
+    # Overload accounting on the tick metrics.
+    assert res.metrics.n_rejected == 2
+    assert res.metrics.shed_rate == pytest.approx(2 / 3)
+    assert res.metrics.goodput == pytest.approx(1 / 3)
+    assert res.metrics.sla_attainment == 1.0  # the served one attained
+
+
+def test_all_shed_tick_surfaces_rejection_accounting():
+    loop = _loop(
+        AdmissionConfig(max_pending=8, max_chunk=8, policy="shed"),
+        t_sla_ms=100.0,
+    )
+    fs = [loop.submit(_request(i, arrival_ms=0.0)) for i in range(3)]
+    res = loop.tick(now_ms=500.0)  # wait 500 >> sla: everything shed
+    assert res is not None and res.completions == []
+    assert res.stats.n_shed == 3 and res.stats.n_requests == 0
+    assert res.metrics.n_rejected == 3
+    assert res.metrics.shed_rate == 1.0 and res.metrics.goodput == 0.0
+    assert all(f.state is RequestState.REJECTED for f in fs)
+    assert loop.backlog == 0
+    assert loop.tick(now_ms=600.0) is None  # truly empty tick stays None
+
+
+def test_drain_trace_metrics_survive_total_shedding():
+    from repro.core.network import FixedCVNetwork
+    from repro.serving.loadgen import PoissonArrivals, make_trace
+
+    n = 20
+    trace = make_trace(n, PoissonArrivals(100.0), FixedCVNetwork(10.0, 0.0), seed=2)
+    # Even the cheapest path (the network-free on-device duplicate,
+    # mu 20) exceeds the SLA: every request is shed at wait 0.
+    loop = _loop(
+        AdmissionConfig(max_pending=8, max_chunk=8, policy="shed"),
+        t_sla_ms=15.0,
+    )
+    done, metrics = loop.drain_trace(
+        trace, 50.0, tokens_for=lambda i: np.zeros(4, np.int32), n_steps=2
+    )
+    assert done == []
+    assert metrics is not None  # overload accounting survives total shed
+    assert metrics.n_requests == 0 and metrics.n_rejected == n
+    assert metrics.shed_rate == 1.0 and metrics.goodput == 0.0
+
+
+def test_degrade_policy_routes_overflow_ondevice_only():
+    loop = _loop(AdmissionConfig(max_pending=2, max_chunk=8, policy="degrade"))
+    fs = [loop.submit(_request(i)) for i in range(6)]
+    res = loop.tick(now_ms=100.0)
+    comps = {c.rid: c for c in res.completions}
+    assert len(comps) == 6 and all(f.state is RequestState.RESOLVED for f in fs)
+    assert res.stats.n_requests == 2 and res.stats.n_degraded == 4
+    for rid in (0, 1):  # admitted: the normal two-tier path
+        assert comps[rid].race_resolution != "degraded"
+    for rid in (2, 3, 4, 5):  # overflow: on-device tier alone
+        c = comps[rid]
+        assert c.race_resolution == "degraded"
+        assert not c.used_remote and not c.hedged
+        assert c.model_name == "stub-hedge"
+        assert c.accuracy == 35.0  # the stub on-device tier's quality
+        assert c.hedge_measured  # the duplicate really executed
+        assert c.latency_ms == pytest.approx(
+            c.queue_wait_ms + c.exec_ms
+        )  # no network leg
+    assert res.metrics.race_resolution["degraded"] == pytest.approx(4 / 6)
+    assert res.metrics.model_usage["stub-hedge"] == pytest.approx(4 / 6)
+
+
+# ---------------------------------------------------------------------------
+# Chunk capping + multi-tick persistence + inflight gating.
+# ---------------------------------------------------------------------------
+def test_max_chunk_persists_leftovers_fifo_across_ticks():
+    loop = _loop(AdmissionConfig(max_chunk=3))
+    fs = [loop.submit(_request(i, arrival_ms=float(i))) for i in range(10)]
+    sizes, rids = [], []
+    t = 10.0
+    while loop.backlog:
+        t += 50.0
+        r = loop.tick(now_ms=t)
+        sizes.append(r.stats.n_requests)
+        rids.extend(c.rid for c in r.completions)
+    assert sizes == [3, 3, 3, 1]
+    assert rids == list(range(10))  # FIFO across ticks
+    assert all(f.state is RequestState.RESOLVED for f in fs)
+    # Later ticks charge the persistent queue's wait honestly.
+    waits = {c.rid: c.queue_wait_ms for r in _drive(loop) for c in r.completions}
+    assert waits == {}  # already drained
+
+
+def test_max_inflight_ticks_gates_dispatch():
+    loop = _loop(
+        AdmissionConfig(max_chunk=2, max_inflight_ticks=1),
+        delay_s=0.05,
+        dispatch="async",
+    )
+    fs = [loop.submit(_request(i)) for i in range(4)]
+    assert loop.tick(now_ms=1.0, wait=False) is None  # dispatched 2
+    assert loop.inflight == 2 and loop.pending == 2
+    # The gate: a second tick dispatches nothing while one is in flight.
+    assert loop.tick(now_ms=2.0, wait=False) is None
+    assert loop.inflight == 2 and loop.pending == 2
+    assert fs[2].state is RequestState.QUEUED
+    deadline = time.perf_counter() + 5.0
+    while not loop.poll() and time.perf_counter() < deadline:
+        time.sleep(0.005)
+    assert loop.inflight == 0
+    assert loop.tick(now_ms=3.0, wait=False) is None  # gate reopened
+    assert loop.inflight == 2
+    loop.drain()
+    assert all(f.state is RequestState.RESOLVED for f in fs)
+
+
+def test_cancelled_blocked_future_frees_nothing_and_conserves():
+    loop = _loop(AdmissionConfig(max_pending=1, max_chunk=1, policy="block"))
+    kept = loop.submit(_request(0))
+    dropped = loop.submit(_request(1))
+    assert dropped.cancel()  # still QUEUED in the overflow room
+    assert dropped.state is RequestState.CANCELLED
+    loop.flush()
+    assert kept.state is RequestState.RESOLVED
+    resolved, rejected, cancelled = _state_counts([kept, dropped])
+    assert (resolved, rejected, cancelled) == (1, 0, 1)
+    assert resolved + rejected + cancelled == loop.admission.n_submitted
+
+
+# ---------------------------------------------------------------------------
+# Unbounded default == pre-admission behavior (regression pin; the
+# byte-identical serve_queue reference lives in test_loop.py).
+# ---------------------------------------------------------------------------
+def test_unbounded_default_matches_explicit_unbounded_config():
+    def serve(admission):
+        loop = _loop(admission, t_sla_ms=1_000.0, seed=3)
+        fs = [
+            loop.submit(_request(i, arrival_ms=7.0 * i)) for i in range(12)
+        ]
+        res = loop.tick(now_ms=100.0)
+        assert len(res.completions) == 12  # one tick drains everything
+        return [
+            (c.rid, c.model_index, c.hedged, c.used_remote, c.accuracy,
+             c.queue_wait_ms, c.time_to_schedule_ms, c.race_resolution)
+            for c in res.completions
+        ], res.metrics
+
+    rows_default, m_default = serve(None)
+    rows_explicit, m_explicit = serve(AdmissionConfig())
+    rows_nocap, m_nocap = serve(
+        AdmissionConfig(max_pending=None, max_chunk=None, policy="unbounded")
+    )
+    assert rows_default == rows_explicit == rows_nocap
+    for m in (m_default, m_explicit, m_nocap):
+        assert m.n_rejected == 0 and m.shed_rate == 0.0
+        assert m.goodput == m.sla_attainment
+        assert m.model_usage == m_default.model_usage
+
+
+# ---------------------------------------------------------------------------
+# Service-coupled clock: overload builds real wait; shed bounds it.
+# ---------------------------------------------------------------------------
+def test_service_coupled_overload_wait_grows_and_shed_bounds_it():
+    from repro.core.network import FixedCVNetwork
+    from repro.serving.loadgen import PoissonArrivals, make_trace
+
+    sla, n = 300.0, 80
+    trace = make_trace(n, PoissonArrivals(100.0), FixedCVNetwork(10.0, 0.0), seed=4)
+
+    def serve(admission):
+        loop = _loop(admission, t_sla_ms=sla)
+        done, metrics = loop.drain_trace(
+            trace, 50.0, tokens_for=lambda i: np.zeros(4, np.int32), n_steps=2,
+            # 20ms of service per scheduled request vs ~10ms offered
+            # inter-arrival: a sustained 2x overload.
+            service_model=lambda res: 20.0 * res.stats.n_requests,
+        )
+        return done, metrics
+
+    done_u, m_u = serve(None)
+    done_s, m_s = serve(
+        AdmissionConfig(max_pending=16, max_chunk=8, policy="shed")
+    )
+    assert len(done_u) == n  # unbounded serves everything...
+    assert m_u.p99_queue_wait_ms > 2 * sla  # ...with divergent queue wait
+    assert m_s.n_rejected > 0 and len(done_s) + m_s.n_rejected == n
+    # Shed keeps every *served* request's wait under the reachability bar
+    # (the cheapest path is the network-free on-device duplicate).
+    max_wait = sla - STUB_SHED_FLOOR_MS
+    assert all(c.queue_wait_ms <= max_wait + 1e-6 for c in done_s)
+    assert m_s.p99_queue_wait_ms <= max_wait + 1e-6
+    assert m_s.shed_rate == pytest.approx(m_s.n_rejected / n)
+
+
+# ---------------------------------------------------------------------------
+# Conservation + monotonicity: seeded deterministic twins of the
+# hypothesis properties (so tier-1 exercises them without hypothesis).
+# ---------------------------------------------------------------------------
+def _check_conservation(arrival_gaps, policy, max_pending, max_chunk):
+    cfg = AdmissionConfig(
+        max_pending=None if policy == "unbounded" else max_pending,
+        max_chunk=max_chunk,
+        policy=policy,
+    )
+    q = AdmissionQueue(cfg)
+    futures, t = [], 0.0
+    for i, gap in enumerate(arrival_gaps):
+        t += float(gap)
+        f = InferenceFuture(_request(i, arrival_ms=t))
+        q.offer(f)
+        futures.append(f)
+        if cfg.bounded:
+            assert q.pending <= max_pending
+    now = t
+    for _ in range(10_000):
+        if not q.backlog:
+            break
+        now += 25.0
+        batch = q.take(now, default_sla_ms=1e9)  # no deadline shedding
+        for f in batch.chunk + batch.degraded:
+            assert f._try_schedule(batch.now_ms)
+            f._mark_resolved(_completion(f.request.rid))
+        if cfg.bounded:
+            assert q.pending <= max_pending
+        if not batch and not batch.shed:
+            raise AssertionError("admission queue stalled with a backlog")
+    assert q.backlog == 0
+    resolved, rejected, cancelled = _state_counts(futures)
+    assert resolved + rejected + cancelled == len(futures) == q.n_submitted
+    assert rejected == q.n_rejected
+    # No admitted request is ever lost.
+    assert all(
+        f.state is RequestState.RESOLVED for f in futures if f.admitted
+    )
+
+
+@pytest.mark.parametrize("policy", ["unbounded", "block", "shed", "degrade"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_conservation_seeded(policy, seed):
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(10.0, size=30)
+    _check_conservation(gaps, policy, max_pending=4, max_chunk=3)
+
+
+@given(
+    gaps=st.lists(
+        st.floats(min_value=0.0, max_value=100.0), min_size=1, max_size=40
+    ),
+    policy=st.sampled_from(["unbounded", "block", "shed", "degrade"]),
+    max_pending=st.integers(min_value=1, max_value=6),
+    max_chunk=st.one_of(st.none(), st.integers(min_value=1, max_value=5)),
+)
+@settings(deadline=None, max_examples=60)
+def test_conservation_property(gaps, policy, max_pending, max_chunk):
+    _check_conservation(gaps, policy, max_pending, max_chunk)
+
+
+def test_shed_monotone_in_queue_wait_seeded():
+    # For a fixed request, sweep the tick clock: the shed decision must
+    # flip at most once, from "keep" to "shed", as the wait grows.
+    decisions = []
+    for now in np.linspace(0.0, 400.0, 81):
+        q = AdmissionQueue(
+            AdmissionConfig(max_pending=4, policy="shed")
+        )
+        q.offer(InferenceFuture(_request(0, arrival_ms=0.0)))
+        batch = q.take(
+            float(now), default_sla_ms=200.0, service_floor_ms=STUB_FLOOR_MS
+        )
+        decisions.append(bool(batch.shed))
+    assert decisions == sorted(decisions)  # monotone: False... then True...
+    assert decisions[0] is False and decisions[-1] is True
+
+
+@given(
+    wait=st.floats(min_value=0.0, max_value=1e4),
+    delta=st.floats(min_value=0.0, max_value=1e4),
+    sla=st.floats(min_value=0.0, max_value=1e4),
+    est=st.floats(min_value=0.0, max_value=1e3),
+    floor=st.floats(min_value=0.0, max_value=1e3),
+    headroom=st.floats(min_value=0.0, max_value=1e3),
+    ondev=st.one_of(st.none(), st.floats(min_value=0.0, max_value=1e3)),
+)
+@settings(deadline=None, max_examples=200)
+def test_shed_monotone_property(wait, delta, sla, est, floor, headroom, ondev):
+    if sla_unreachable(wait, sla, est, floor, headroom, ondev):
+        assert sla_unreachable(wait + delta, sla, est, floor, headroom, ondev)
+
+
+def test_shed_floor_considers_the_network_free_hedge_path():
+    # A terrible network (est 300 > sla 250) must NOT get a request shed
+    # when the on-device duplicate (no network leg) still attains the SLA.
+    assert sla_unreachable(0.0, 250.0, 300.0, 30.0)  # remote-only: hopeless
+    assert not sla_unreachable(0.0, 250.0, 300.0, 30.0, ondevice_floor_ms=20.0)
+    # ...and through the loop: the request is served, not rejected.
+    loop = _loop(
+        AdmissionConfig(max_pending=8, max_chunk=8, policy="shed"),
+        t_sla_ms=250.0,
+    )
+    f = loop.submit(_request(0, arrival_ms=0.0, est=300.0))
+    res = loop.tick(now_ms=50.0)
+    assert f.state is RequestState.RESOLVED
+    assert res.stats.n_shed == 0 and len(res.completions) == 1
+
+
+# ---------------------------------------------------------------------------
+# Config validation.
+# ---------------------------------------------------------------------------
+def test_admission_config_validation():
+    with pytest.raises(ValueError):
+        AdmissionConfig(policy="drop-everything")
+    with pytest.raises(ValueError):
+        AdmissionConfig(policy="shed")  # bounded policy needs max_pending
+    with pytest.raises(ValueError):
+        AdmissionConfig(max_pending=0, policy="block")
+    with pytest.raises(ValueError):
+        AdmissionConfig(max_chunk=-1)
+    assert not AdmissionConfig().bounded
+    assert AdmissionConfig(max_pending=4, policy="block").bounded

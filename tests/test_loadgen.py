@@ -1,4 +1,5 @@
-"""Load generation: seeded determinism, window iteration, boundaries."""
+"""Load generation: seeded determinism, window iteration, boundaries, and
+bursty/overload traces driven through the ServingLoop seam (drain_trace)."""
 import numpy as np
 import pytest
 
@@ -6,7 +7,9 @@ from repro.core.network import FixedCVNetwork
 from repro.serving.loadgen import (
     BurstyArrivals,
     LoadTrace,
+    OverloadArrivals,
     PoissonArrivals,
+    RampArrivals,
     iter_windows,
     make_trace,
 )
@@ -23,8 +26,13 @@ def _trace_from_arrivals(arrival_ms):
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize(
     "process",
-    [PoissonArrivals(150.0), BurstyArrivals(150.0, burst_factor=6.0)],
-    ids=["poisson", "bursty"],
+    [
+        PoissonArrivals(150.0),
+        BurstyArrivals(150.0, burst_factor=6.0),
+        OverloadArrivals(150.0, overload_factor=3.0),
+        RampArrivals(50.0, 400.0),
+    ],
+    ids=["poisson", "bursty", "overload", "ramp"],
 )
 def test_arrivals_deterministic_under_seed(process):
     a = process.sample_arrivals_ms(np.random.default_rng(42), 2_000)
@@ -98,3 +106,94 @@ def test_windows_partition_in_arrival_order():
     )
     seen = np.concatenate(list(iter_windows(trace, 25.0)))
     np.testing.assert_array_equal(seen, np.arange(400))
+
+
+# ---------------------------------------------------------------------------
+# Overload / ramp arrival shapes.
+# ---------------------------------------------------------------------------
+def test_overload_phase_compresses_gaps():
+    n = 6_000
+    a = OverloadArrivals(
+        100.0, overload_factor=4.0, overload_start=0.25, overload_stop=0.75
+    ).sample_arrivals_ms(np.random.default_rng(0), n)
+    gaps = np.diff(np.concatenate([[0.0], a]))
+    base = np.concatenate([gaps[: n // 4], gaps[3 * n // 4:]])
+    overload = gaps[n // 4: 3 * n // 4]
+    # The overload phase's mean gap is ~4x tighter than the base phases'.
+    assert np.mean(overload) < np.mean(base) / 2.5
+    assert np.mean(base) == pytest.approx(10.0, rel=0.15)  # 100 rps
+    assert np.mean(overload) == pytest.approx(2.5, rel=0.15)  # 400 rps
+
+
+def test_ramp_rate_increases_across_the_stream():
+    n = 6_000
+    a = RampArrivals(50.0, 400.0).sample_arrivals_ms(
+        np.random.default_rng(1), n
+    )
+    gaps = np.diff(np.concatenate([[0.0], a]))
+    first, last = gaps[: n // 3], gaps[-n // 3:]
+    assert np.mean(first) > 2.5 * np.mean(last)  # 50 rps -> ~400 rps
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        dict(overload_start=0.8, overload_stop=0.2),
+        dict(overload_start=-0.1),
+        dict(overload_stop=1.5),
+        dict(overload_factor=0.0),
+    ],
+)
+def test_overload_arrivals_validation(bad):
+    with pytest.raises(ValueError):
+        OverloadArrivals(100.0, **bad)
+
+
+def test_ramp_arrivals_validation():
+    with pytest.raises(ValueError):
+        RampArrivals(0.0, 100.0)
+    with pytest.raises(ValueError):
+        RampArrivals(100.0, -5.0)
+
+
+# ---------------------------------------------------------------------------
+# The loop seam: saturated bursty/overload traces through drain_trace keep
+# every tick's batch within max_chunk (previously only arrival sampling
+# was covered, not the serving path).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "arrivals",
+    [
+        BurstyArrivals(400.0, burst_factor=6.0),
+        OverloadArrivals(200.0, overload_factor=3.0),
+    ],
+    ids=["bursty", "overload"],
+)
+def test_saturated_trace_batches_capped_at_max_chunk(arrivals):
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.loop import ServingLoop
+
+    from loop_stubs import StubHedgeBackend, StubRemoteBackend, stub_scheduler
+
+    n, window_ms, max_chunk = 300, 50.0, 8
+    trace = make_trace(n, arrivals, FixedCVNetwork(20.0, 0.3), seed=7)
+    loop = ServingLoop(
+        stub_scheduler(t_sla_ms=10_000.0, profile_ewma=0.0),
+        StubRemoteBackend(0.0),
+        StubHedgeBackend(0.0),
+        dispatch="sync",
+        admission=AdmissionConfig(max_chunk=max_chunk),
+    )
+    stats = []
+    done, metrics = loop.drain_trace(
+        trace, window_ms,
+        tokens_for=lambda i: np.zeros(4, np.int32), n_steps=2,
+        on_tick=lambda t, res: stats.append(res.stats),
+    )
+    # Saturation really happened (windows bigger than the cap) ...
+    assert any(s.n_requests == max_chunk for s in stats)
+    # ... yet no tick's batch ever exceeded the cap, and the leftovers
+    # persisted across ticks until everything was served exactly once.
+    assert all(s.n_requests <= max_chunk for s in stats)
+    assert sorted(c.rid for c in done) == list(range(n))
+    assert metrics.n_requests == n and metrics.n_rejected == 0

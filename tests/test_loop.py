@@ -11,6 +11,7 @@ import jax
 from repro.configs import reduced
 from repro.core.network import LognormalNetwork
 from repro.models import transformer as T
+from repro.serving.admission import AdmissionConfig
 from repro.serving.backend import OnDeviceBackend
 from repro.serving.engine import QueuedRequest, ServingEngine, Variant
 from repro.serving.lifecycle import RequestState
@@ -132,6 +133,63 @@ def test_serve_queue_shim_equals_loop_on_seeded_trace(sampled_engine):
     assert metrics.aggregate_accuracy == pytest.approx(
         np.mean([c.accuracy for c in done_shim])
     )
+
+
+def test_unbounded_admission_is_byte_identical_to_the_shim(sampled_engine):
+    """Regression pin for the admission refactor: with ``max_pending=None``
+    and no overload policy, an *explicitly* unbounded admission queue
+    reproduces the PR 3 equivalence reference (the serve_queue shim)
+    byte-for-byte on decision-level fields and loop-clock timings.
+    """
+    n, window_ms = 24, 50.0
+    trace = make_trace(
+        n, PoissonArrivals(120.0), LognormalNetwork(40.0, 0.5), seed=13
+    )
+    prompts = np.random.default_rng(13).integers(0, 64, (n, PROMPT))
+    registry = sampled_engine.measure_profiles(
+        prompt_len=PROMPT, gen_tokens=GEN, trials=2
+    )
+    cfg = SchedulerConfig(t_sla_ms=5_000.0, seed=8, profile_ewma=0.0)
+
+    sched_a = MDInferenceScheduler(registry, registry[0], cfg)
+    done_shim = []
+    for window in iter_windows(trace, window_ms):
+        tick = (trace.arrival_ms[window[0]] // window_ms + 1) * window_ms
+        requests = [
+            QueuedRequest(
+                rid=int(i), tokens=prompts[i], n_steps=GEN,
+                t_nw_est_ms=float(trace.t_nw_est_ms[i]),
+                t_nw_actual_ms=float(trace.t_nw_ms[i]),
+                arrival_ms=float(trace.arrival_ms[i]),
+            )
+            for i in window
+        ]
+        done_shim.extend(
+            sampled_engine.serve_queue(sched_a, requests, dispatch_ms=tick)[0]
+        )
+
+    sched_b = MDInferenceScheduler(registry, registry[0], cfg)
+    loop = ServingLoop(
+        sched_b, sampled_engine.backend, dispatch="async",
+        admission=AdmissionConfig(
+            max_pending=None, max_chunk=None, policy="unbounded"
+        ),
+    )
+    done_loop, metrics = loop.drain_trace(
+        trace, window_ms, tokens_for=lambda i: prompts[i], n_steps=GEN
+    )
+    assert [c.rid for c in done_shim] == [c.rid for c in done_loop]
+    for a, b in zip(done_shim, done_loop):
+        assert a.model_index == b.model_index
+        assert a.hedged == b.hedged
+        assert a.used_remote == b.used_remote
+        assert a.accuracy == b.accuracy
+        assert a.race_resolution == b.race_resolution
+        assert a.queue_wait_ms == b.queue_wait_ms
+        assert a.time_to_schedule_ms == b.time_to_schedule_ms
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert metrics.n_rejected == 0 and metrics.shed_rate == 0.0
+    assert metrics.goodput == metrics.sla_attainment
 
 
 # ---------------------------------------------------------------------------
