@@ -11,7 +11,9 @@ duplicate *concurrently* — and ``result()`` returns the resolved
 Part 2 serves an open-loop Poisson trace through the same tick path
 (``launch.serve`` / ``ServingLoop.drain_trace``): the paper's Figure 1(d)
 running for real on both tiers, with continuous batching and measured
-hedged duplication bounding every response at the SLA.
+hedged duplication bounding every response at the SLA — here over a
+2-replica ``ClusterBackend`` pool with join-shortest-queue routing (the
+hedge duplicate stays a device-side singleton outside the pool).
 
 Run:  PYTHONPATH=src python examples/serve_mdinference.py
 """
@@ -62,8 +64,9 @@ def client_demo():
 
 if __name__ == "__main__":
     client_demo()
-    print("=== part 2: open-loop trace through the same tick path ===")
+    print("=== part 2: open-loop trace through a 2-replica cluster ===")
     raise SystemExit(
         main(["--requests", "30", "--sla", "2500", "--gen", "8", "--rate", "20",
-              "--hedge", "measured", "--dispatch", "async"])
+              "--hedge", "measured", "--dispatch", "async",
+              "--replicas", "2", "--router", "least_inflight"])
     )

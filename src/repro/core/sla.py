@@ -6,7 +6,17 @@ from typing import Dict
 
 import numpy as np
 
-__all__ = ["RequestMetrics", "summarize"]
+__all__ = ["ReplicaRow", "RequestMetrics", "summarize"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaRow:
+    """Per-replica aggregates for a replicated execution cluster."""
+
+    share: float  # fraction of completions this replica served
+    goodput_share: float  # fraction of all SLA-attained completions
+    utilization: float  # rows served / rows on the busiest replica
+    p99_inflight: float  # p99 queue depth (rows) at dispatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +46,12 @@ class RequestMetrics:
     n_rejected: int = 0
     shed_rate: float = 0.0
     goodput: float = 0.0
+    # Per-replica rows (replicated execution cluster): replica id ->
+    # utilization / goodput share / inflight p99.  Empty when the serving
+    # front runs a single unclustered backend.
+    replica_rows: Dict[int, ReplicaRow] = dataclasses.field(
+        default_factory=dict
+    )
 
     def row(self) -> str:
         return (
@@ -58,6 +74,8 @@ def summarize(
     race_resolution: np.ndarray | None = None,
     time_to_schedule_ms: np.ndarray | None = None,
     n_rejected: int = 0,
+    replica: np.ndarray | None = None,
+    replica_inflight: np.ndarray | None = None,
 ) -> RequestMetrics:
     """Build :class:`RequestMetrics` from per-request outcomes.
 
@@ -72,13 +90,21 @@ def summarize(
     terminal state) — they have no latency/accuracy rows, but they *do*
     count against ``shed_rate`` and ``goodput``.  The per-request arrays
     may be empty when every request of a tick was shed.
+
+    ``replica`` (per-request cluster replica id, ``-1`` for requests that
+    never rode a pool replica — i.e. degrade-lane rows; a hedged row that
+    lost the race still carries the replica that ran its remote leg) and
+    ``replica_inflight`` (the replica's queue depth at dispatch) feed the
+    per-replica ``replica_rows`` aggregates; both optional and safe on
+    empty batches.
     """
     accuracy_used = np.asarray(accuracy_used, dtype=np.float64)
     latency_ms = np.asarray(latency_ms, dtype=np.float64)
     n = len(latency_ms)
-    attained = (
-        float(np.mean(latency_ms <= t_sla_ms + 1e-9)) if n else 0.0
-    )
+    # The one SLA-attainment predicate: sla_attainment, goodput, and the
+    # per-replica goodput_share rows must all agree on who attained.
+    attained_mask = latency_ms <= np.asarray(t_sla_ms) + 1e-9
+    attained = float(attained_mask.mean()) if n else 0.0
     reliance = (
         0.0
         if used_remote is None or not n
@@ -93,6 +119,36 @@ def summarize(
     for name, c in zip(model_names, counts):
         if c:
             usage[name] = float(c) / n
+
+    replica_rows: Dict[int, ReplicaRow] = {}
+    if replica is not None and n:
+        rep = np.asarray(replica, dtype=np.int64)
+        n_attained = int(attained_mask.sum())
+        ids = sorted(int(r) for r in np.unique(rep) if r >= 0)
+        if ids:
+            per_rows = {r: int(np.sum(rep == r)) for r in ids}
+            busiest = max(per_rows.values())
+            inflight = (
+                None
+                if replica_inflight is None
+                else np.asarray(replica_inflight, dtype=np.float64)
+            )
+            for r in ids:
+                mask = rep == r
+                replica_rows[r] = ReplicaRow(
+                    share=per_rows[r] / n,
+                    goodput_share=(
+                        float(np.sum(attained_mask & mask)) / n_attained
+                        if n_attained
+                        else 0.0
+                    ),
+                    utilization=per_rows[r] / busiest,
+                    p99_inflight=(
+                        float(np.percentile(inflight[mask], 99))
+                        if inflight is not None
+                        else 0.0
+                    ),
+                )
 
     return RequestMetrics(
         n_requests=n,
@@ -136,4 +192,5 @@ def summarize(
         n_rejected=int(n_rejected),
         shed_rate=(float(n_rejected) / submitted if submitted else 0.0),
         goodput=(attained * n / submitted if submitted else 0.0),
+        replica_rows=replica_rows,
     )

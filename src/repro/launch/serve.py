@@ -43,7 +43,8 @@ from repro.configs import reduced
 from repro.core.network import NAMED_TRACES, LognormalNetwork
 from repro.models import transformer as T
 from repro.serving.admission import OVERLOAD_POLICIES, AdmissionConfig
-from repro.serving.backend import OnDeviceBackend
+from repro.serving.backend import JitBackend, OnDeviceBackend
+from repro.serving.cluster import ROUTERS, ClusterBackend, shard_slices
 from repro.serving.engine import ServingEngine, Variant
 from repro.serving.loadgen import (
     BurstyArrivals,
@@ -63,14 +64,32 @@ TIERS = (
 
 def build_engine(
     max_len: int, seed: int = 0, measured_hedge: bool = True,
-    dispatch: str = "async",
+    dispatch: str = "async", replicas: int = 1, router: str = "round_robin",
+    shard_zoo: bool = False,
 ) -> ServingEngine:
     hedge = (
         OnDeviceBackend.from_zoo(max_len=max_len, seed=seed)
         if measured_hedge
         else None
     )
-    engine = ServingEngine(max_len=max_len, hedge_backend=hedge, dispatch=dispatch)
+    # With --replicas > 1 (or --shard-zoo) the remote tier becomes a
+    # replicated cluster behind the same execution protocol; the hedge
+    # tier stays the device-side singleton outside the pool.
+    backend = None
+    if replicas > 1 or shard_zoo:
+        slices = (
+            shard_slices([t[0] for t in TIERS], replicas)
+            if shard_zoo
+            else None
+        )
+        backend = ClusterBackend(
+            [JitBackend(max_len) for _ in range(replicas)],
+            router=router, slices=slices, seed=seed,
+        )
+    engine = ServingEngine(
+        max_len=max_len, backend=backend, hedge_backend=hedge,
+        dispatch=dispatch,
+    )
     for name, arch, width, layers, quality in TIERS:
         cfg = reduced(
             arch, d_model=width, n_layers=layers,
@@ -126,6 +145,20 @@ def main(argv=None):
         help="dispatch the tiers' batches concurrently (async) or "
         "serialized (sync, the deterministic fallback)",
     )
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="remote-tier replica count: >1 serves through a "
+                    "ClusterBackend pool with load-aware routing")
+    ap.add_argument("--router", default="round_robin",
+                    choices=list(ROUTERS),
+                    help="cluster routing policy (with --replicas > 1): "
+                    "round_robin, least_inflight (join-shortest-queue), "
+                    "power_of_two (2 random replicas, pick by live "
+                    "latency EWMA)")
+    ap.add_argument("--shard-zoo", action="store_true",
+                    help="shard the model zoo across replicas (disjoint "
+                    "slices, one backend per slice) instead of full "
+                    "replication; selection is constrained to hosted "
+                    "variants and routing respects placement")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.overload_policy != "unbounded" and args.max_pending is None:
@@ -134,12 +167,21 @@ def main(argv=None):
             "--max-pending (the capacity whose overflow it governs)"
         )
 
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+
     measured = args.hedge == "measured"
     print("building + profiling tiers (real execution)...")
     engine = build_engine(
         max_len=args.prompt + args.gen + 8, seed=args.seed,
         measured_hedge=measured, dispatch=args.dispatch,
+        replicas=args.replicas, router=args.router, shard_zoo=args.shard_zoo,
     )
+    cluster = engine.backend if isinstance(engine.backend, ClusterBackend) else None
+    if cluster is not None:
+        print(f"cluster: {cluster.n_replicas} replicas, router={args.router}")
+        for snap in cluster.snapshot():
+            print(f"  replica {snap.replica_id}: hosts {list(snap.hosts)}")
     registry = engine.measure_profiles(
         prompt_len=args.prompt, gen_tokens=args.gen, trials=3, seed=args.seed
     )
@@ -191,8 +233,10 @@ def main(argv=None):
     # Server service time covers the remote-scheduled rows only: the
     # degrade lane executes on the device, so it costs the device — not
     # the server's clock (that offload is the degrade policy's point).
+    # Replicas serve in parallel, so a tick's makespan is the busiest
+    # replica's rows (== the whole tick on a single backend).
     service_model = (
-        (lambda res: args.service_ms * res.stats.n_requests)
+        (lambda res: args.service_ms * res.stats.max_replica_rows)
         if args.service_ms > 0
         else None
     )
@@ -254,6 +298,16 @@ def main(argv=None):
             f"max_pending={args.max_pending} shed_rate={metrics.shed_rate*100:.1f}% "
             f"goodput={metrics.goodput*100:.1f}%\n"
         )
+    cluster_note = ""
+    if metrics.replica_rows:
+        shares = " ".join(
+            f"r{rid}={row.share*100:.0f}%(util={row.utilization:.2f})"
+            for rid, row in sorted(metrics.replica_rows.items())
+        )
+        cluster_note = (
+            f"cluster           : {args.replicas} replicas "
+            f"router={args.router} served {shares}\n"
+        )
     print(
         f"\nserved {len(completions)} requests in {time.time()-t_start:.1f}s wall "
         f"(offered {trace.offered_rps:.1f} rps, dispatch={args.dispatch})\n"
@@ -265,6 +319,7 @@ def main(argv=None):
         f"[{hedge_note}]\n"
         f"race resolution   : {races}\n"
         f"{admission_note}"
+        f"{cluster_note}"
         f"queue wait        : mean {waits.mean():.0f}ms  max {waits.max():.0f}ms  "
         f"(time-to-schedule mean {metrics.mean_time_to_schedule_ms:.0f}ms)\n"
         f"p50/p99 latency   : {np.percentile(lats,50):.0f}/{np.percentile(lats,99):.0f} ms"

@@ -12,6 +12,18 @@ from repro.serving.backend import (
     build_hedge_variant,
 )
 from repro.serving.client import InferenceClient
+from repro.serving.cluster import (
+    ROUTERS,
+    ClusterBackend,
+    LeastInflightRouter,
+    PowerOfTwoRouter,
+    Replica,
+    ReplicaPool,
+    RoundRobinRouter,
+    Router,
+    make_router,
+    shard_slices,
+)
 from repro.serving.engine import (
     CompletedRequest,
     QueuedRequest,
@@ -44,12 +56,16 @@ from repro.serving.scheduler import (
 
 __all__ = [
     "AdmissionConfig", "AdmissionQueue", "BatchDecision", "BatchHandle",
-    "BurstyArrivals", "CompletedRequest", "Decision", "ExecutionBackend",
-    "InferenceClient", "InferenceFuture", "JitBackend", "LoadTrace",
-    "MDInferenceScheduler", "ONDEVICE_TIER", "OnDeviceBackend",
-    "OverloadArrivals", "PoissonArrivals", "QueuedRequest", "RampArrivals",
-    "RequestCancelled", "RequestRejected", "RequestState", "SchedulerConfig",
+    "BurstyArrivals", "ClusterBackend", "CompletedRequest", "Decision",
+    "ExecutionBackend", "InferenceClient", "InferenceFuture", "JitBackend",
+    "LeastInflightRouter", "LoadTrace", "MDInferenceScheduler",
+    "ONDEVICE_TIER", "OnDeviceBackend", "OverloadArrivals",
+    "PoissonArrivals", "PowerOfTwoRouter", "QueuedRequest", "ROUTERS",
+    "RampArrivals", "Replica", "ReplicaPool", "RequestCancelled",
+    "RequestRejected",
+    "RequestState", "RoundRobinRouter", "Router", "SchedulerConfig",
     "ServingEngine", "ServingLoop", "TickResult", "TickStats", "V5E",
     "Variant", "build_hedge_variant", "estimate_ms", "iter_windows",
-    "lm_zoo_registry", "make_trace", "sla_unreachable",
+    "lm_zoo_registry", "make_router", "make_trace", "shard_slices",
+    "sla_unreachable",
 ]

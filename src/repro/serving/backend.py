@@ -66,6 +66,11 @@ class BatchHandle:
       by thread-submit overhead only — this is the race clocks' shared
       start, replacing the serialized remote-then-duplicate measurement.
     * ``done_wall_ms`` — stamp when execution (warm-up included) finished.
+
+    ``replica`` / ``inflight_at_dispatch`` are stamped by a routing layer
+    (:class:`repro.serving.cluster.ClusterBackend`): which pool replica ran
+    the batch and the replica's queue depth (rows, this batch included) at
+    dispatch.  ``None`` on a plain single-backend handle.
     """
 
     def __init__(self, name: str, n_rows: int):
@@ -73,6 +78,8 @@ class BatchHandle:
         self.n_rows = n_rows
         self.dispatch_wall_ms = time.perf_counter() * 1e3
         self.done_wall_ms: Optional[float] = None
+        self.replica: Optional[int] = None
+        self.inflight_at_dispatch: Optional[int] = None
 
     def poll(self) -> bool:
         """Non-blocking: True once the batch result is ready."""
@@ -104,10 +111,12 @@ class _ThreadedBatchHandle(BatchHandle):
 
     The worker executes the tier's warm-once-then-timed ``run_batch``, so
     the returned wall time keeps the same XLA-compile-free semantics as
-    the synchronous path.
+    the synchronous path.  ``on_done(wall_ms | None)`` fires on the worker
+    right when execution finishes (before the event is set) — the backend
+    uses it to keep its inflight-row count and latency EWMA live.
     """
 
-    def __init__(self, name, n_rows, fn):
+    def __init__(self, name, n_rows, fn, on_done=None):
         super().__init__(name, n_rows)
         self._done = threading.Event()
         self._result: Optional[Tuple[np.ndarray, float]] = None
@@ -120,6 +129,10 @@ class _ThreadedBatchHandle(BatchHandle):
                 self._error = e
             finally:
                 self.done_wall_ms = time.perf_counter() * 1e3
+                if on_done is not None:
+                    on_done(
+                        self._result[1] if self._result is not None else None
+                    )
                 self._done.set()
 
         self._thread = threading.Thread(
@@ -141,11 +154,26 @@ class _ThreadedBatchHandle(BatchHandle):
         return self._result
 
 
+_STATS_EWMA = 0.25  # live per-backend wall-latency EWMA (routing signal)
+
+
 class ExecutionBackend:
     """What the policy-facing engine needs from an execution tier.
 
     Concrete backends implement :meth:`register` and :meth:`generate`;
     :meth:`run_batch` (warm-once-then-timed) is shared.
+
+    Every backend keeps live load accounting, maintained by
+    :meth:`submit_batch` regardless of dispatch mode:
+
+    * ``inflight_rows`` — rows dispatched but not yet finished executing.
+    * ``dispatched_rows`` / ``completed_batches`` — cumulative counters.
+    * ``ewma_wall_ms`` — EWMA of observed batch wall times (``None`` until
+      the first completion).
+
+    These are the routing signals a :class:`repro.serving.cluster.ReplicaPool`
+    reads per replica (join-shortest-queue, power-of-two-choices); on a
+    single backend they are inert bookkeeping.
     """
 
     variants: Dict[str, Variant]
@@ -153,6 +181,31 @@ class ExecutionBackend:
     def __init__(self):
         self.variants = {}
         self._warmed_shapes: set = set()
+        self._stats_lock = threading.Lock()
+        self.inflight_rows = 0
+        self.dispatched_rows = 0
+        self.completed_batches = 0
+        self.ewma_wall_ms: Optional[float] = None
+
+    def _note_dispatch(self, n_rows: int) -> None:
+        with self._stats_lock:
+            self.inflight_rows += n_rows
+            self.dispatched_rows += n_rows
+
+    def _note_done(self, n_rows: int, wall_ms: Optional[float]) -> None:
+        """Completion hook: drop the rows from inflight and fold the batch
+        wall time into the live EWMA (``wall_ms=None``: execution raised —
+        the rows still leave the inflight count)."""
+        with self._stats_lock:
+            self.inflight_rows -= n_rows
+            if wall_ms is not None:
+                self.completed_batches += 1
+                self.ewma_wall_ms = (
+                    float(wall_ms)
+                    if self.ewma_wall_ms is None
+                    else (1 - _STATS_EWMA) * self.ewma_wall_ms
+                    + _STATS_EWMA * float(wall_ms)
+                )
 
     def register(self, v: Variant) -> None:
         raise NotImplementedError
@@ -193,14 +246,23 @@ class ExecutionBackend:
         semantics and the measured wall time are identical across modes.
         """
         n_rows = int(batch.shape[0])
+        self._note_dispatch(n_rows)
         if sync:
             dispatch_wall_ms = time.perf_counter() * 1e3
-            out, wall_ms = self.run_batch(name, batch, n_steps)
+            try:
+                out, wall_ms = self.run_batch(name, batch, n_steps)
+            except BaseException:
+                self._note_done(n_rows, None)
+                raise
+            self._note_done(n_rows, wall_ms)
             return _CompletedBatchHandle(
                 name, n_rows, dispatch_wall_ms, out, wall_ms
             )
         return _ThreadedBatchHandle(
-            name, n_rows, lambda: self.run_batch(name, batch, n_steps)
+            name,
+            n_rows,
+            lambda: self.run_batch(name, batch, n_steps),
+            on_done=lambda wall_ms: self._note_done(n_rows, wall_ms),
         )
 
     def measure_profile(

@@ -1,0 +1,453 @@
+"""Replicated execution cluster: sharded zoo slices + load-aware routing.
+
+A single :class:`repro.serving.backend.JitBackend` replica saturates
+exactly when the admission queue starts shedding — the aggregate-accuracy
+wins only hold if the chosen cloud model is actually served within budget
+under load.  This module multiplies the backend seam horizontally:
+
+* :class:`Replica` — one routable backend plus a live view of its load
+  accounting (``inflight_rows``, cumulative ``dispatched_rows``, wall-time
+  EWMA — maintained by :meth:`ExecutionBackend.submit_batch` itself).
+* :class:`ReplicaPool` — N replicas + zoo placement across their slices
+  (the cluster's state half: registration, hosted masks, snapshots).
+* :class:`Router` — pluggable routing policy over the *eligible* replica
+  set (:data:`ROUTERS`): ``round_robin`` (stateless cycling),
+  ``least_inflight`` (join-shortest-queue over per-replica inflight rows,
+  cumulative-work tie-break so serialized dispatch still balances), and
+  ``power_of_two`` (two random replicas, pick by live wall-latency EWMA).
+* :class:`ClusterBackend` — fronts a pool of N replicas behind the
+  existing ``submit_batch -> BatchHandle`` protocol, so the serving loop
+  and admission stages need no semantic changes.  Each replica may host a
+  *slice* of the model zoo (:func:`shard_slices`); ``register`` places a
+  variant on every admitting replica and routing never sends a row to a
+  replica that doesn't host its variant.
+
+Placement-aware selection: :meth:`ClusterBackend.hosted_mask` tells the
+scheduler which variants have at least one live replica —
+``MDInferenceScheduler.decide_batch(..., eligible=...)`` masks the rest
+out, so a partial slice set constrains selection instead of crashing
+dispatch.
+
+The hedge tier is deliberately *not* poolable: the paper's on-device
+duplicate is a device-side singleton, so an
+:class:`~repro.serving.backend.OnDeviceBackend` is rejected as a replica.
+
+A one-replica pool under ``round_robin`` is behaviorally identical to the
+plain single-backend loop (regression-pinned in ``tests/test_cluster.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.backend import (
+    BatchHandle,
+    ExecutionBackend,
+    OnDeviceBackend,
+    Variant,
+)
+
+__all__ = [
+    "ROUTERS",
+    "Replica",
+    "ReplicaPool",
+    "Router",
+    "RoundRobinRouter",
+    "LeastInflightRouter",
+    "PowerOfTwoRouter",
+    "make_router",
+    "shard_slices",
+    "ClusterBackend",
+]
+
+
+class Replica:
+    """One routable backend replica in a pool.
+
+    ``slice_names`` is the subset of the zoo this replica *admits* at
+    registration (``None``: everything — full replication).  What it
+    actually *hosts* is its backend's variant registry — the source of
+    truth routing consults.
+    """
+
+    def __init__(
+        self,
+        replica_id: int,
+        backend: ExecutionBackend,
+        slice_names: Optional[Sequence[str]] = None,
+    ):
+        self.replica_id = replica_id
+        self.backend = backend
+        self.slice_names = (
+            None if slice_names is None else frozenset(slice_names)
+        )
+
+    def admits(self, name: str) -> bool:
+        """Whether registration may place variant ``name`` here."""
+        return self.slice_names is None or name in self.slice_names
+
+    def hosts(self, name: str) -> bool:
+        """Whether this replica can execute variant ``name`` right now."""
+        return name in self.backend.variants
+
+    # Live load/latency accounting (maintained by the backend itself).
+    @property
+    def inflight_rows(self) -> int:
+        return self.backend.inflight_rows
+
+    @property
+    def dispatched_rows(self) -> int:
+        return self.backend.dispatched_rows
+
+    @property
+    def ewma_wall_ms(self) -> Optional[float]:
+        return self.backend.ewma_wall_ms
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"Replica({self.replica_id}, inflight={self.inflight_rows}, "
+            f"hosts={sorted(self.backend.variants)})"
+        )
+
+
+class Router:
+    """Routing policy: pick one replica from the eligible (hosting) set.
+
+    ``pick`` receives only replicas that host the batch's variant, in
+    ascending ``replica_id`` order, and the set is never empty.
+    """
+
+    name = "?"
+
+    def pick(self, eligible: Sequence[Replica]) -> Replica:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    """Cycle a global counter over the eligible set (load-blind)."""
+
+    name = "round_robin"
+
+    def __init__(self, seed: int = 0):
+        self._next = 0
+
+    def pick(self, eligible: Sequence[Replica]) -> Replica:
+        r = eligible[self._next % len(eligible)]
+        self._next += 1
+        return r
+
+
+class LeastInflightRouter(Router):
+    """Join-shortest-queue over per-replica inflight-row accounting.
+
+    Ties break on cumulative dispatched rows (least total work first), so
+    serialized ``sync`` dispatch — where batches complete inline and
+    inflight is 0 at every pick — still spreads load instead of pinning
+    everything to replica 0; then on ``replica_id`` for determinism.
+    """
+
+    name = "least_inflight"
+
+    def __init__(self, seed: int = 0):
+        pass
+
+    def pick(self, eligible: Sequence[Replica]) -> Replica:
+        return min(
+            eligible,
+            key=lambda r: (r.inflight_rows, r.dispatched_rows, r.replica_id),
+        )
+
+
+class PowerOfTwoRouter(Router):
+    """Power-of-two-choices: sample two replicas, keep the faster one.
+
+    The comparison key is the live per-replica wall-latency EWMA (an
+    unprobed replica counts as 0 so cold replicas get explored), then
+    inflight rows, then ``replica_id``.  Sampling is seeded — routing is
+    reproducible for a fixed request stream.
+
+    Every ``probe_every``-th two-candidate pick takes the *less*-favored
+    candidate instead: a replica whose EWMA got stuck high early would
+    otherwise lose every pairing and never execute again, leaving its
+    estimate permanently stale (latency-keyed p2c's classic starvation
+    mode).  The bounded probe refreshes it, so a healthy replica with an
+    unlucky early measurement rejoins the rotation.
+
+    Because the EWMA dominates the key, consecutive picks (e.g. the
+    sub-batches of one tick's fan-out) concentrate on the
+    fastest-measured replica until its EWMA catches up — deliberate for
+    a skewed pool (avoid the slow replica), load-blind for a homogeneous
+    one.  Prefer ``least_inflight`` when within-tick spread matters more
+    than latency skew.
+    """
+
+    name = "power_of_two"
+
+    def __init__(self, seed: int = 0, probe_every: int = 16):
+        if probe_every < 2:
+            raise ValueError(f"probe_every must be >= 2, got {probe_every}")
+        self.rng = np.random.default_rng(seed)
+        self.probe_every = probe_every
+        self._picks = 0
+
+    @staticmethod
+    def _key(r: Replica):
+        ewma = r.ewma_wall_ms
+        return (0.0 if ewma is None else ewma, r.inflight_rows, r.replica_id)
+
+    def pick(self, eligible: Sequence[Replica]) -> Replica:
+        if len(eligible) == 1:
+            return eligible[0]
+        i, j = self.rng.choice(len(eligible), size=2, replace=False)
+        a, b = eligible[int(i)], eligible[int(j)]
+        if self._key(a) > self._key(b):
+            a, b = b, a  # a: favored, b: the probe candidate
+        self._picks += 1
+        return b if self._picks % self.probe_every == 0 else a
+
+
+ROUTERS: Dict[str, Callable[..., Router]] = {
+    RoundRobinRouter.name: RoundRobinRouter,
+    LeastInflightRouter.name: LeastInflightRouter,
+    PowerOfTwoRouter.name: PowerOfTwoRouter,
+}
+
+
+def make_router(name: str, seed: int = 0) -> Router:
+    if name not in ROUTERS:
+        raise ValueError(f"router must be one of {tuple(ROUTERS)}, got {name!r}")
+    return ROUTERS[name](seed=seed)
+
+
+def shard_slices(
+    names: Sequence[str], n_replicas: int, overlap: int = 1
+) -> List[List[str]]:
+    """Round-robin zoo placement: variant ``i`` lands on ``overlap``
+    consecutive replicas starting at ``i % n_replicas``.
+
+    ``overlap=1`` gives disjoint slices (each variant on exactly one
+    replica — the fully sharded zoo); ``overlap=n_replicas`` is full
+    replication.  Every variant gets at least one replica, so the union
+    always covers the zoo.
+    """
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    if not 1 <= overlap <= n_replicas:
+        raise ValueError(
+            f"overlap must be in [1, {n_replicas}], got {overlap}"
+        )
+    slices: List[List[str]] = [[] for _ in range(n_replicas)]
+    for i, name in enumerate(names):
+        for o in range(overlap):
+            slices[(i + o) % n_replicas].append(name)
+    return slices
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSnapshot:
+    """Point-in-time view of one replica's load accounting."""
+
+    replica_id: int
+    hosts: tuple
+    inflight_rows: int
+    dispatched_rows: int
+    completed_batches: int
+    ewma_wall_ms: Optional[float]
+
+
+class ReplicaPool:
+    """N backend replicas + zoo placement (the cluster's state half).
+
+    The pool owns the replicas, variant placement across their slices,
+    and load observability; the *protocol* half —
+    :class:`ClusterBackend` — fronts a pool behind the single-backend
+    execution interface.  ``slices`` restricts which variants each
+    replica admits (see :func:`shard_slices`); ``None`` replicates every
+    variant everywhere.
+    """
+
+    def __init__(
+        self,
+        backends: Sequence[ExecutionBackend],
+        slices: Optional[Sequence[Sequence[str]]] = None,
+    ):
+        if not backends:
+            raise ValueError("a ReplicaPool needs at least one replica")
+        for b in backends:
+            if isinstance(b, OnDeviceBackend):
+                raise ValueError(
+                    "OnDeviceBackend is the device-side hedge singleton, "
+                    "not a routable replica — pass it to the serving loop "
+                    "as hedge_backend instead"
+                )
+            if isinstance(b, ClusterBackend):
+                # A nested cluster would report inflight 0 / EWMA None to
+                # the outer router (its accounting lives on its replicas),
+                # silently defeating load-aware routing.
+                raise ValueError(
+                    "nested ClusterBackend replicas are not supported — "
+                    "flatten the backends into one pool (multi-host "
+                    "transport is the queued follow-on for hierarchy)"
+                )
+        if slices is not None and len(slices) != len(backends):
+            raise ValueError(
+                f"slices covers {len(slices)} replicas but the pool has "
+                f"{len(backends)}"
+            )
+        self.replicas = [
+            Replica(i, b, None if slices is None else slices[i])
+            for i, b in enumerate(backends)
+        ]
+
+    def __len__(self) -> int:
+        return len(self.replicas)
+
+    def place(self, v: Variant) -> List[Replica]:
+        """Register a variant on every admitting replica; fails loudly
+        when no slice admits it (the union must cover the zoo)."""
+        placed = [r for r in self.replicas if r.admits(v.name)]
+        if not placed:
+            raise ValueError(
+                f"no replica slice admits variant {v.name!r} — every "
+                "variant needs at least one replica (see shard_slices)"
+            )
+        for r in placed:
+            r.backend.register(v)
+        return placed
+
+    def replicas_for(self, name: str) -> List[Replica]:
+        """The eligible replica set for a variant (ascending replica_id)."""
+        return [r for r in self.replicas if r.hosts(name)]
+
+    def hosted_mask(self, names: Sequence[str]) -> np.ndarray:
+        """Bool mask over ``names``: True where >= 1 replica hosts the
+        variant — the scheduler's selection-eligibility input."""
+        return np.asarray(
+            [any(r.hosts(n) for r in self.replicas) for n in names],
+            dtype=bool,
+        )
+
+    def snapshot(self) -> List[ReplicaSnapshot]:
+        """Per-replica load accounting (for logs / benches / soak tests)."""
+        return [
+            ReplicaSnapshot(
+                replica_id=r.replica_id,
+                hosts=tuple(sorted(r.backend.variants)),
+                inflight_rows=r.inflight_rows,
+                dispatched_rows=r.dispatched_rows,
+                completed_batches=r.backend.completed_batches,
+                ewma_wall_ms=r.ewma_wall_ms,
+            )
+            for r in self.replicas
+        ]
+
+
+class ClusterBackend(ExecutionBackend):
+    """A replica pool behind the single-backend execution protocol.
+
+    ``submit_batch`` routes each batch to one hosting replica via the
+    routing policy and stamps the returned handle with ``replica`` (the
+    chosen replica id) and ``inflight_at_dispatch`` (the replica's queue
+    depth in rows, this batch included) — the serving loop threads both
+    onto :class:`repro.serving.lifecycle.CompletedRequest`.
+
+    Construct from raw backends (a :class:`ReplicaPool` is built for you)
+    or pass a prebuilt pool.  Routing never considers a replica that
+    doesn't host the batch's variant.
+    """
+
+    def __init__(
+        self,
+        backends: Sequence[ExecutionBackend] | ReplicaPool,
+        *,
+        router: str | Router = "round_robin",
+        slices: Optional[Sequence[Sequence[str]]] = None,
+        seed: int = 0,
+    ):
+        super().__init__()
+        if isinstance(backends, ReplicaPool):
+            if slices is not None:
+                raise ValueError(
+                    "pass slices to the ReplicaPool, not the ClusterBackend"
+                )
+            self.pool = backends
+        else:
+            self.pool = ReplicaPool(backends, slices=slices)
+        self.router = router if isinstance(router, Router) else make_router(
+            router, seed=seed
+        )
+
+    @property
+    def replicas(self) -> List[Replica]:
+        return self.pool.replicas
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.pool)
+
+    @property
+    def max_len(self):
+        """The pool's sequence cap (replicas are homogeneous)."""
+        return getattr(self.pool.replicas[0].backend, "max_len", None)
+
+    # -- placement ------------------------------------------------------------
+    def register(self, v: Variant) -> None:
+        self.pool.place(v)
+        self.variants[v.name] = v
+
+    def replicas_for(self, name: str) -> List[Replica]:
+        return self.pool.replicas_for(name)
+
+    def hosted_mask(self, names: Sequence[str]) -> np.ndarray:
+        return self.pool.hosted_mask(names)
+
+    def fan_out(self, name: str) -> int:
+        """How many replicas a batch of this variant can spread across."""
+        return max(1, len(self.pool.replicas_for(name)))
+
+    # -- routing --------------------------------------------------------------
+    def route(self, name: str) -> Replica:
+        """Pick the replica that runs the next batch of variant ``name``."""
+        eligible = self.pool.replicas_for(name)
+        if not eligible:
+            raise ValueError(
+                f"no replica hosts variant {name!r} (slices: "
+                f"{[sorted(r.backend.variants) for r in self.pool.replicas]})"
+            )
+        return self.router.pick(eligible)
+
+    # -- the execution protocol, routed ---------------------------------------
+    def submit_batch(
+        self, name: str, batch: np.ndarray, n_steps: int, *, sync: bool = False
+    ) -> BatchHandle:
+        replica = self.route(name)
+        depth = replica.inflight_rows + int(batch.shape[0])
+        handle = replica.backend.submit_batch(name, batch, n_steps, sync=sync)
+        handle.replica = replica.replica_id
+        handle.inflight_at_dispatch = depth
+        return handle
+
+    def generate(self, name, tokens, n_steps):
+        return self.route(name).backend.generate(name, tokens, n_steps)
+
+    def run_batch(self, name, batch, n_steps):
+        # Delegate whole: each replica owns its warm-shape set, so the
+        # first batch a replica sees of a shape absorbs its own compile.
+        return self.route(name).backend.run_batch(name, batch, n_steps)
+
+    def measure_profile(
+        self, name, prompt_len, gen_tokens, batch=1, trials=5, seed=0
+    ):
+        # Pin the measurement to one hosting replica: replicas are
+        # homogeneous, and rotating the router between timed trials would
+        # charge each replica's one-time compile to the profile.
+        return self.replicas_for(name)[0].backend.measure_profile(
+            name, prompt_len, gen_tokens, batch=batch, trials=trials, seed=seed
+        )
+
+    # -- observability --------------------------------------------------------
+    def snapshot(self) -> List[ReplicaSnapshot]:
+        """Per-replica load accounting (for logs / benches / soak tests)."""
+        return self.pool.snapshot()

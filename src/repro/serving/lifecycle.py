@@ -105,6 +105,12 @@ class CompletedRequest:
     hedge_measured: bool = False  # True: ondevice_ms is real wall time
     time_to_schedule_ms: float = 0.0  # scheduling tick - arrival
     race_resolution: str = "unhedged"  # remote_won | ondevice_won | unhedged
+    # Cluster routing: which pool replica ran the remote batch (None on a
+    # single unclustered backend and for degrade-lane rows — the on-device
+    # hedge singleton is never a routable replica), and the replica's
+    # queue depth in rows, this batch included, at dispatch.
+    replica: Optional[int] = None
+    replica_inflight: Optional[int] = None
 
 
 class InferenceFuture:

@@ -70,6 +70,26 @@ def _pad_batch(requests, rows_idx) -> Tuple[np.ndarray, int]:
     return batch, steps
 
 
+def _replica_array(completions) -> np.ndarray:
+    """Per-completion cluster replica ids for summarize (-1: unrouted —
+    single-backend rows and degrade-lane rows; a hedged row that lost the
+    race still carries the replica that ran its remote leg)."""
+    return np.asarray(
+        [-1 if c.replica is None else c.replica for c in completions],
+        dtype=np.int64,
+    )
+
+
+def _replica_inflight_array(completions) -> np.ndarray:
+    return np.asarray(
+        [
+            0 if c.replica_inflight is None else c.replica_inflight
+            for c in completions
+        ],
+        dtype=np.int64,
+    )
+
+
 @dataclasses.dataclass
 class TickStats:
     """Wall-clock evidence of one tick's dispatch behavior.
@@ -89,6 +109,9 @@ class TickStats:
     hedge_dispatched_before_remote_done: Optional[bool]
     n_shed: int = 0  # rejected by admission at this tick (shed policy)
     n_degraded: int = 0  # served on-device-only at this tick (degrade policy)
+    # Rows dispatched per cluster replica this tick (empty: unclustered
+    # backend — every remote row then counts as one replica's work).
+    replica_rows: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def serialized_wall_ms(self) -> float:
@@ -98,6 +121,17 @@ class TickStats:
     def hedge_rows(self) -> int:
         """Live rows in the measured duplicate batch (0: no hedge tier)."""
         return self.n_hedged if self.hedge_wall_ms is not None else 0
+
+    @property
+    def max_replica_rows(self) -> int:
+        """Rows on the tick's busiest replica — the parallel-server
+        makespan unit a service model should charge (falls back to the
+        whole tick's rows on an unclustered backend)."""
+        return (
+            max(self.replica_rows.values())
+            if self.replica_rows
+            else self.n_requests
+        )
 
 
 @dataclasses.dataclass
@@ -233,6 +267,36 @@ class ServingLoop:
         (degraded completions are attributed to the duplicate)."""
         return list(self.scheduler.names) + [self.scheduler.ondevice.name]
 
+    # -- cluster integration (inert on a single unclustered backend) ----------
+    def _eligible_mask(self) -> Optional[np.ndarray]:
+        """Selection-eligibility mask from the backend's zoo placement.
+
+        A cluster backend with partial zoo slices exposes ``hosted_mask``:
+        variants no live replica hosts are masked out of selection, so
+        routing never has to place a row on a replica that doesn't host
+        its variant.  Plain backends return ``None`` — the unmasked path,
+        preserving the pre-cluster behavior bit-for-bit.
+        """
+        hosted = getattr(self.backend, "hosted_mask", None)
+        if hosted is None:
+            return None
+        return hosted(self.scheduler.names)
+
+    def _fan_out(self, name: str, rows: np.ndarray) -> List[np.ndarray]:
+        """Split one variant group across the backend's replica fan-out.
+
+        A cluster backend reports ``fan_out(name)`` (its hosting replica
+        count); the group is split into that many near-equal row slices,
+        each routed independently — the per-replica fan-out within one
+        tick.  Plain backends (and one-replica pools) keep the single
+        undivided batch, byte-identical to the pre-cluster dispatch.
+        """
+        fan = getattr(self.backend, "fan_out", None)
+        k = 1 if fan is None else max(1, min(int(fan(name)), len(rows)))
+        if k == 1:
+            return [rows]
+        return [part for part in np.array_split(rows, k) if part.size]
+
     # -- the event loop -------------------------------------------------------
     def tick(
         self, now_ms: Optional[float] = None, *, wait: bool = True
@@ -320,21 +384,28 @@ class ServingLoop:
             t_sla = slas if np.any(slas != loop_sla) else loop_sla
             est = np.asarray([r.t_nw_est_ms for r in requests])
             decision = self.scheduler.decide_batch(
-                est + queue_wait + (loop_sla - slas)
+                est + queue_wait + (loop_sla - slas),
+                eligible=self._eligible_mask(),
             )
 
             # Dispatch every batch of the tick before waiting on any of
             # them: the remote variant groups and the hedged rows'
             # duplicate all start at this tick — the shared origin of both
-            # race clocks.
+            # race clocks.  A cluster backend fans each variant group out
+            # across its hosting replicas (one routed sub-batch per
+            # replica the group can spread over), so several replicas run
+            # concurrently within one tick.
             for m in np.unique(decision.model_index):
                 rows = np.flatnonzero(decision.model_index == m)
-                gbatch, steps = _pad_batch(requests, rows)
                 name = self.scheduler.names[int(m)]
-                handle = self.backend.submit_batch(name, gbatch, steps, sync=sync)
-                groups.append((int(m), rows, handle))
-                for i in rows:
-                    row_handles[i] = handle
+                for part in self._fan_out(name, rows):
+                    gbatch, steps = _pad_batch(requests, part)
+                    handle = self.backend.submit_batch(
+                        name, gbatch, steps, sync=sync
+                    )
+                    groups.append((int(m), part, handle))
+                    for i in part:
+                        row_handles[i] = handle
 
             hedged_rows = np.flatnonzero(decision.hedged)
             if self.hedge_backend is not None and hedged_rows.size > 0:
@@ -509,6 +580,8 @@ class ServingLoop:
                         "unhedged" if not decision.hedged[i]
                         else ("remote_won" if used_remote[i] else "ondevice_won")
                     ),
+                    replica=tick.row_handles[i].replica,
+                    replica_inflight=tick.row_handles[i].inflight_at_dispatch,
                 )
                 f._mark_resolved(c)
                 if f.state is RequestState.RESOLVED:
@@ -544,7 +617,16 @@ class ServingLoop:
                     [c.time_to_schedule_ms for c in completions]
                 ),
                 n_rejected=tick.n_shed,
+                replica=_replica_array(completions),
+                replica_inflight=_replica_inflight_array(completions),
             )
+
+        replica_rows: Dict[int, int] = {}
+        for _, rows, handle in tick.groups:
+            if handle.replica is not None:
+                replica_rows[handle.replica] = (
+                    replica_rows.get(handle.replica, 0) + len(rows)
+                )
 
         dispatch_stamps = [h.dispatch_wall_ms for _, _, h in tick.groups]
         done_stamps = [h.done_wall_ms for _, _, h in tick.groups]
@@ -573,6 +655,7 @@ class ServingLoop:
             ),
             n_shed=tick.n_shed,
             n_degraded=len(tick.degraded_futures),
+            replica_rows=replica_rows,
         )
         return TickResult(completions=completions, metrics=metrics, stats=stats)
 
@@ -733,5 +816,7 @@ class ServingLoop:
                     [c.time_to_schedule_ms for c in completions]
                 ),
                 n_rejected=n_rejected,
+                replica=_replica_array(completions),
+                replica_inflight=_replica_inflight_array(completions),
             )
         return completions, metrics

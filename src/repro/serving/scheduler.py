@@ -80,6 +80,24 @@ class SchedulerConfig:
     seed: int = 0
     algorithm: str = "mdinference"  # any repro.core.baselines policy
     chunk_size: int = 256  # 1 == scalar reference path
+    # Sub-chunk profile refresh for run_trace: selection normally sees the
+    # chunk-start profile snapshot for the whole chunk; with this set, a
+    # chunk is served in sub-chunks of this many requests and the EWMA
+    # snapshot refreshes between them — drift shows up mid-chunk instead
+    # of one whole chunk late.  Mechanically this caps the effective
+    # serving stride at min(chunk_size, subchunk_refresh): it exists as a
+    # separate knob so callers can bound snapshot *staleness* without
+    # redefining the batching granularity their jit shapes / callers are
+    # tuned to (the pre-drawn randomness makes the two commute; see the
+    # identity test).  None keeps the frozen-snapshot behavior.
+    subchunk_refresh: Optional[int] = None
+
+    def __post_init__(self):
+        if self.subchunk_refresh is not None and self.subchunk_refresh < 1:
+            raise ValueError(
+                "subchunk_refresh must be >= 1 or None, "
+                f"got {self.subchunk_refresh}"
+            )
 
 
 @dataclasses.dataclass
@@ -170,17 +188,39 @@ class MDInferenceScheduler:
         t_nw_est_ms: np.ndarray,
         *,
         uniforms: Optional[np.ndarray] = None,
+        eligible: Optional[np.ndarray] = None,
     ) -> BatchDecision:
         """Vectorized selection for a chunk of network-time estimates.
 
         ``uniforms`` (one U[0,1) draw per request) lets callers pre-draw the
         sampling randomness; when omitted the scheduler's own rng is used.
+
+        ``eligible`` is an optional bool mask over the zoo (one entry per
+        model): selection places zero probability on masked-out models.
+        The serving loop passes the cluster's hosted-variant mask
+        (:meth:`repro.serving.cluster.ClusterBackend.hosted_mask`) so a
+        partial zoo sharding constrains selection — routing never has to
+        place a row on a replica that doesn't host its variant.  An
+        all-True mask is exactly the unmasked path (bit-identical); a
+        request whose eligible models all have zero selection mass falls
+        back to the fastest eligible model (``fallback`` set).
         """
         t_nw_est_ms = np.atleast_1d(np.asarray(t_nw_est_ms, dtype=np.float64))
         n = len(t_nw_est_ms)
         budgets = self.cfg.t_sla_ms - t_nw_est_ms
         if uniforms is None:
             uniforms = self.rng.random(n)
+        if eligible is not None:
+            eligible = np.asarray(eligible, dtype=bool)
+            if eligible.shape != (len(self.names),):
+                raise ValueError(
+                    f"eligible mask must have shape ({len(self.names)},), "
+                    f"got {eligible.shape}"
+                )
+            if not eligible.any():
+                raise ValueError("eligible mask excludes every model")
+            if eligible.all():
+                eligible = None  # the unmasked path, bit-identical
 
         # Jit-friendly: pad the budget vector to a power-of-two length so
         # arbitrary chunk sizes reuse a handful of compiled shapes.
@@ -197,6 +237,21 @@ class MDInferenceScheduler:
         probs = np.asarray(probs, dtype=np.float64)[:n]
         base = np.asarray(base)[:n].astype(np.int64)
         fallback = np.asarray(fallback)[:n]
+
+        if eligible is not None:
+            # Placement-aware selection: zero the masked-out models.  A
+            # request left with no selection mass falls back to the
+            # fastest eligible model; the hedging reference (base) is
+            # remapped there too when the stage-1 base is ineligible.
+            probs = np.where(eligible[None, :], probs, 0.0)
+            fastest = int(
+                np.flatnonzero(eligible)[np.argmin(self.mu[eligible])]
+            )
+            dead = probs.sum(axis=1) <= 0.0
+            if dead.any():
+                probs[dead, fastest] = 1.0
+                fallback = fallback | dead
+            base = np.where(eligible[base], base, fastest)
 
         # Inverse-CDF sampling against the pre-drawn uniforms: the result for
         # request i depends only on (profiles, budget_i, u_i), never on chunk
@@ -341,6 +396,14 @@ class MDInferenceScheduler:
         All randomness is pre-drawn up-front, so the outcome with
         ``profile_ewma=0`` is independent of ``chunk_size``; with EWMA
         enabled, ``chunk_size=1`` is the scalar reference behavior.
+
+        With :attr:`SchedulerConfig.subchunk_refresh` set, each chunk is
+        served in sub-chunks of that many requests, folding observations
+        in *between* them: selection no longer sees a profile snapshot
+        frozen at chunk start, so drift (queueing transients, §V-A) is
+        re-discovered mid-chunk.  With ``profile_ewma=0`` the refresh is a
+        no-op and the outcome is bit-identical (the randomness is
+        pre-drawn per request, not per chunk).
         """
         t_nw_actual = np.asarray(t_nw_actual, dtype=np.float64)
         if t_nw_est is None:
@@ -349,6 +412,11 @@ class MDInferenceScheduler:
         chunk = self.cfg.chunk_size if chunk_size is None else chunk_size
         if chunk < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk}")
+        # Sub-chunk refresh: serve in smaller strides so the EWMA snapshot
+        # selection sees is at most `subchunk_refresh` requests stale.
+        refresh = self.cfg.subchunk_refresh
+        if refresh is not None:
+            chunk = min(chunk, refresh)
         n = len(t_nw_actual)
 
         # Pre-drawn randomness: selection uniforms, execution z-scores,

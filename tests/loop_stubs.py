@@ -9,7 +9,8 @@ import time
 import numpy as np
 
 from repro.core.registry import ModelProfile, ModelRegistry
-from repro.serving.backend import ExecutionBackend
+from repro.serving.backend import ExecutionBackend, Variant
+from repro.serving.cluster import ClusterBackend
 from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
 
 STUB_NAMES = ["stub-a", "stub-b"]
@@ -22,6 +23,7 @@ class StubRemoteBackend(ExecutionBackend):
         super().__init__()
         self.delay_s = delay_s
         self.batch_rows = []  # rows of each executed (timed) batch
+        self.batch_names = []  # variant of each executed batch
 
     def register(self, v):
         self.variants[v.name] = v
@@ -30,6 +32,7 @@ class StubRemoteBackend(ExecutionBackend):
         t0 = time.perf_counter()
         time.sleep(self.delay_s)
         self.batch_rows.append(int(np.shape(tokens)[0]))
+        self.batch_names.append(name)
         out = np.zeros((np.shape(tokens)[0], n_steps), dtype=np.int32)
         return out, (time.perf_counter() - t0) * 1e3
 
@@ -48,6 +51,29 @@ class StubHedgeBackend(StubRemoteBackend):
 
     def submit_hedge(self, batch, n_steps, *, sync=False):
         return self.submit_batch(self.hedge_name, batch, n_steps, sync=sync)
+
+
+def stub_cluster(
+    n_replicas: int,
+    delay_s: float = 0.0,
+    *,
+    router: str = "round_robin",
+    slices=None,
+    seed: int = 0,
+) -> ClusterBackend:
+    """A ClusterBackend of sleep-stub replicas hosting the stub zoo.
+
+    Registration goes through the cluster (exercising slice placement);
+    each replica's ``batch_rows`` log identifies the batches it ran.
+    """
+    cluster = ClusterBackend(
+        [StubRemoteBackend(delay_s) for _ in range(n_replicas)],
+        router=router, slices=slices, seed=seed,
+    )
+    for name, quality in zip(STUB_NAMES, (40.0, 80.0)):
+        if slices is None or any(name in s for s in slices):
+            cluster.register(Variant(name, None, None, quality))
+    return cluster
 
 
 def stub_registry() -> ModelRegistry:

@@ -206,3 +206,116 @@ def test_observe_keeps_sigma_positive(observations, alpha):
     assert sched.sigma[0] > 0.0
     assert np.isfinite(sched.sigma[0])
     assert np.isfinite(sched.mu[0])
+
+
+# ---------------------------------------------------------------------------
+# Placement-eligibility masks (the cluster's selection constraint).
+# ---------------------------------------------------------------------------
+def test_eligible_all_true_is_identical_to_unmasked():
+    t_nw = _trace(n=200)
+    a = MDInferenceScheduler(ZOO, ONDEVICE_TIER, SchedulerConfig(seed=3))
+    b = MDInferenceScheduler(ZOO, ONDEVICE_TIER, SchedulerConfig(seed=3))
+    da = a.decide_batch(t_nw)
+    db = b.decide_batch(t_nw, eligible=np.ones(len(ZOO), bool))
+    np.testing.assert_array_equal(da.model_index, db.model_index)
+    np.testing.assert_array_equal(da.base_index, db.base_index)
+    np.testing.assert_array_equal(da.hedged, db.hedged)
+    np.testing.assert_array_equal(da.fallback, db.fallback)
+
+
+def test_eligible_mask_excludes_unhosted_models():
+    t_nw = _trace(n=400)
+    sched = MDInferenceScheduler(ZOO, ONDEVICE_TIER, SchedulerConfig(seed=3))
+    eligible = np.ones(len(ZOO), bool)
+    eligible[::2] = False  # half the zoo has no hosting replica
+    d = sched.decide_batch(t_nw, eligible=eligible)
+    assert np.all(eligible[d.model_index])
+    assert np.all(eligible[d.base_index])
+
+
+def test_eligible_dead_rows_fall_back_to_fastest_eligible():
+    # Only the slowest model is eligible; a sub-mu budget leaves zero
+    # selection mass -> the row must fall back to the fastest *eligible*
+    # model (which is that same model), flagged as fallback.
+    sched = MDInferenceScheduler(ZOO, ONDEVICE_TIER, SchedulerConfig())
+    eligible = np.zeros(len(ZOO), bool)
+    slowest = int(np.argmax(sched.mu))
+    eligible[slowest] = True
+    d = sched.decide_batch(np.full(8, 249.0), eligible=eligible)
+    assert np.all(d.model_index == slowest)
+    assert np.all(d.fallback)
+
+
+def test_eligible_mask_validation():
+    sched = MDInferenceScheduler(ZOO, ONDEVICE_TIER, SchedulerConfig())
+    with pytest.raises(ValueError, match="shape"):
+        sched.decide_batch(np.full(4, 100.0), eligible=np.ones(3, bool))
+    with pytest.raises(ValueError, match="excludes every model"):
+        sched.decide_batch(
+            np.full(4, 100.0), eligible=np.zeros(len(ZOO), bool)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Sub-chunk profile refresh (the frozen-intra-chunk EWMA ROADMAP item).
+# ---------------------------------------------------------------------------
+def test_subchunk_refresh_is_identity_with_ewma_off():
+    """With profile_ewma=0 the refresh folds nothing, and the pre-drawn
+    randomness makes the outcome independent of the refresh stride."""
+    t_nw = _trace(n=500)
+    cfg = dict(t_sla_ms=250.0, profile_ewma=0.0, seed=9, chunk_size=256)
+    m_frozen = MDInferenceScheduler(
+        ZOO, ONDEVICE_TIER, SchedulerConfig(**cfg)
+    ).run_trace(t_nw)
+    m_refresh = MDInferenceScheduler(
+        ZOO, ONDEVICE_TIER, SchedulerConfig(subchunk_refresh=16, **cfg)
+    ).run_trace(t_nw)
+    assert m_frozen.model_usage == m_refresh.model_usage
+    np.testing.assert_allclose(
+        m_frozen.aggregate_accuracy, m_refresh.aggregate_accuracy
+    )
+    np.testing.assert_allclose(
+        m_frozen.mean_latency_ms, m_refresh.mean_latency_ms
+    )
+
+
+def test_subchunk_refresh_adapts_to_drift_within_a_chunk():
+    """Drift regression: a model whose real latency jumped 30x mid-stream.
+
+    A frozen 512-request chunk keeps selecting it from the stale snapshot
+    for the whole chunk; sub-chunk refresh folds the observations between
+    sub-chunks and abandons the degraded model mid-chunk — strictly fewer
+    picks, and a live mu that has moved toward the truth by chunk end.
+    """
+    reg = ModelRegistry(
+        [
+            ModelProfile("fast", 50.0, 10.0, 0.5),
+            ModelProfile("big", 90.0, 100.0, 1.0),
+        ]
+    )
+    t_nw = np.full(512, 100.0)  # budget 150ms: 'big' wins while healthy
+    drifted_mu = 3000.0
+
+    def drifted_sampler(model_index, rng):
+        return drifted_mu if model_index == 1 else 10.0
+
+    def picks(subchunk):
+        sched = MDInferenceScheduler(
+            reg,
+            ONDEVICE_TIER,
+            SchedulerConfig(
+                t_sla_ms=250.0, profile_ewma=0.3, seed=2, chunk_size=512,
+                subchunk_refresh=subchunk,
+            ),
+        )
+        m = sched.run_trace(t_nw, exec_sampler=drifted_sampler)
+        n_big = sum(1 for r in sched.log if r["model"] == "big")
+        return n_big, float(sched.mu[1]), m
+
+    n_frozen, mu_frozen, _ = picks(None)
+    n_refresh, mu_refresh, _ = picks(32)
+    assert n_frozen == 512  # the stale snapshot never learns mid-chunk
+    assert n_refresh < n_frozen  # refresh abandons the degraded model
+    assert n_refresh <= 64  # within ~two sub-chunks
+    # Both folded what they observed; the refreshed path's selection saw it.
+    assert abs(mu_refresh - drifted_mu) < drifted_mu  # moved toward truth
