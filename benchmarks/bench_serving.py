@@ -406,6 +406,145 @@ def _cluster_scaling(
     )
 
 
+def _cluster_fault(
+    *, n_requests: int, sla_ms: float = 250.0, seed: int = 0, sync: bool = False
+):
+    """Fault-injection: kill 1 of 2 replicas mid-overload, measure recovery.
+
+    The cluster-scaling setup (2x-of-one-replica sustained overload, shed
+    admission, service-coupled clock) served by a 2-replica pool whose
+    backends sit behind the replica transport; replica 0 is killed halfway
+    through the trace.  Acceptance (ROADMAP open item 1): post-kill
+    goodput recovers to within 5% of the same trace served by a 1-replica
+    pool from the start (the (N-1)-replica reference), and *zero*
+    non-shed requests are lost — every submitted request resolves or is
+    shed by admission (conservation), with lost batches requeued or
+    failing over to their measured hedge duplicate.
+    """
+    import functools
+
+    import jax
+
+    from repro.configs import reduced
+    from repro.core.network import LognormalNetwork
+    from repro.models import transformer as T
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.backend import JitBackend, OnDeviceBackend
+    from repro.serving.cluster import ClusterBackend
+    from repro.serving.engine import ServingEngine, Variant
+    from repro.serving.loadgen import OverloadArrivals, make_trace
+    from repro.serving.transport import ProcessTransportBackend
+
+    prompt, gen, window_ms = 8, 2, 100.0
+    service_ms = 6.0
+    capacity_rps = 1e3 / service_ms  # one replica's retire rate
+    dispatch = "sync" if sync else "async"
+    max_len = prompt + gen + 4
+
+    hedge = OnDeviceBackend.from_zoo(max_len=max_len)
+    ondevice = hedge.measure_profile(prompt_len=prompt, gen_tokens=gen, trials=2)
+    cfg = reduced(
+        "gemma-2b", d_model=64, n_layers=2, n_heads=2, n_kv_heads=1, head_dim=32
+    )
+    params = T.init_params(cfg, jax.random.key(seed))
+
+    # Sustained 2x of ONE replica's capacity: exactly the 2-replica pool's
+    # capacity before the kill, and a 2x overload on the survivor after.
+    overload = OverloadArrivals(
+        rate_rps=capacity_rps, overload_factor=2.0,
+        overload_start=0.0, overload_stop=1.0,
+    )
+    trace = make_trace(
+        n_requests, overload, LognormalNetwork(80.0, 0.6), seed=seed
+    )
+    prompts = np.random.default_rng(seed).integers(0, 256, (n_requests, prompt))
+    kill_ms = float(trace.arrival_ms[-1]) * 0.5
+    admission = AdmissionConfig(policy="shed", max_pending=32, max_chunk=16)
+
+    def segment_goodput(done):
+        """SLA-attained fraction of the requests arriving after the kill
+        point (rid indexes the trace, so arrivals attribute exactly)."""
+        seg = np.flatnonzero(trace.arrival_ms >= kill_ms)
+        ok = sum(
+            1
+            for c in done
+            if trace.arrival_ms[c.rid] >= kill_ms and c.latency_ms <= sla_ms
+        )
+        return ok / max(len(seg), 1)
+
+    registry = None
+
+    def serve(n_replicas, kill_at=None):
+        nonlocal registry
+        backend = ClusterBackend(
+            [
+                ProcessTransportBackend(
+                    functools.partial(JitBackend, max_len),
+                    mode="inline", max_len=max_len,
+                )
+                for _ in range(n_replicas)
+            ],
+            router="least_inflight", seed=seed,
+        )
+        engine = ServingEngine(
+            max_len=max_len, backend=backend, hedge_backend=hedge,
+            dispatch=dispatch,
+        )
+        engine.register(Variant("remote", cfg, params, 80.0))
+        if registry is None:
+            registry = engine.measure_profiles(
+                prompt_len=prompt, gen_tokens=gen, trials=2
+            )
+        sched = MDInferenceScheduler(
+            registry, ondevice, SchedulerConfig(t_sla_ms=sla_ms, seed=seed)
+        )
+        loop = engine.make_loop(sched, admission=admission)
+        fault = {"killed": False, "lost": 0, "requeued": 0}
+
+        def on_tick(tick_ms, res):
+            fault["lost"] += res.stats.n_lost
+            fault["requeued"] += res.stats.n_requeued
+            if kill_at is not None and not fault["killed"] and tick_ms >= kill_at:
+                backend.kill_replica(0, reason="bench fault injection")
+                fault["killed"] = True
+
+        t0 = time.perf_counter()
+        done, metrics = loop.drain_trace(
+            trace, window_ms, tokens_for=lambda i: prompts[i], n_steps=gen,
+            on_tick=on_tick,
+            service_model=lambda res: service_ms * res.stats.max_replica_rows,
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        return done, metrics, fault, us, loop
+
+    ref_done, ref_metrics, _, ref_us, _ = serve(1)
+    ref_goodput = segment_goodput(ref_done)
+    emit(
+        "serving/cluster/fault/reference_1x",
+        ref_us / max(len(ref_done), 1),
+        f"post-kill-segment goodput={ref_goodput*100:.2f}% "
+        f"shed_rate={ref_metrics.shed_rate*100:.2f}% (1 replica, no fault)",
+    )
+
+    done, metrics, fault, us, loop = serve(2, kill_at=kill_ms)
+    goodput = segment_goodput(done)
+    recovery = goodput / max(ref_goodput, 1e-9)
+    # Conservation: every submitted request resolved or was shed — a lost
+    # batch must never lose a request (requeue / hedge-failover recovered
+    # all of them).
+    n_lost_requests = n_requests - len(done) - loop.admission.n_rejected
+    emit(
+        "serving/cluster/fault/kill_mid",
+        us / max(len(done), 1),
+        f"post-kill-segment goodput={goodput*100:.2f}% "
+        f"recovery={recovery:.2f}x-of-1x "
+        f"(target >=0.95) lost_rows={fault['lost']} "
+        f"requeued={fault['requeued']} "
+        f"lost_requests={n_lost_requests} (must be 0) "
+        f"shed_rate={metrics.shed_rate*100:.2f}%",
+    )
+
+
 def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False):
     reg = lm_zoo_registry(chips=8)
     for p in reg:
@@ -478,6 +617,11 @@ def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False):
     # served by 1/2/4 pooled replicas under least_inflight routing —
     # goodput rises monotonically with the replica count.
     _cluster_scaling(n_requests=240 if smoke else 600, sync=sync)
+
+    # Fault-tolerant pool (PR 6 tentpole): kill 1 of 2 replicas mid-trace;
+    # the survivor's post-kill goodput recovers to the 1-replica reference
+    # and conservation holds (zero lost non-shed requests).
+    _cluster_fault(n_requests=240 if smoke else 600, sync=sync)
 
 
 if __name__ == "__main__":

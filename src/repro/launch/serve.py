@@ -34,6 +34,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -45,6 +46,7 @@ from repro.models import transformer as T
 from repro.serving.admission import OVERLOAD_POLICIES, AdmissionConfig
 from repro.serving.backend import JitBackend, OnDeviceBackend
 from repro.serving.cluster import ROUTERS, ClusterBackend, shard_slices
+from repro.serving.transport import ProcessTransportBackend
 from repro.serving.engine import ServingEngine, Variant
 from repro.serving.loadgen import (
     BurstyArrivals,
@@ -62,28 +64,44 @@ TIERS = (
 )
 
 
+def _jit_backend_factory(max_len: int) -> JitBackend:
+    """Top-level (picklable) backend factory for the process transport."""
+    return JitBackend(max_len)
+
+
 def build_engine(
     max_len: int, seed: int = 0, measured_hedge: bool = True,
     dispatch: str = "async", replicas: int = 1, router: str = "round_robin",
-    shard_zoo: bool = False,
+    shard_zoo: bool = False, transport: str = "none",
 ) -> ServingEngine:
     hedge = (
         OnDeviceBackend.from_zoo(max_len=max_len, seed=seed)
         if measured_hedge
         else None
     )
-    # With --replicas > 1 (or --shard-zoo) the remote tier becomes a
-    # replicated cluster behind the same execution protocol; the hedge
-    # tier stays the device-side singleton outside the pool.
+    # With --replicas > 1 (or --shard-zoo / --transport) the remote tier
+    # becomes a replicated cluster behind the same execution protocol; the
+    # hedge tier stays the device-side singleton outside the pool.
     backend = None
-    if replicas > 1 or shard_zoo:
+    if replicas > 1 or shard_zoo or transport != "none":
         slices = (
             shard_slices([t[0] for t in TIERS], replicas)
             if shard_zoo
             else None
         )
+
+        def make_replica():
+            if transport == "none":
+                return JitBackend(max_len)
+            # inline: same process, but with the transport's fault surface
+            # (kill/inject); process: a real spawned worker per replica.
+            return ProcessTransportBackend(
+                functools.partial(_jit_backend_factory, max_len),
+                mode=transport, max_len=max_len,
+            )
+
         backend = ClusterBackend(
-            [JitBackend(max_len) for _ in range(replicas)],
+            [make_replica() for _ in range(replicas)],
             router=router, slices=slices, seed=seed,
         )
     engine = ServingEngine(
@@ -159,6 +177,25 @@ def main(argv=None):
                     "slices, one backend per slice) instead of full "
                     "replication; selection is constrained to hosted "
                     "variants and routing respects placement")
+    ap.add_argument("--transport", default="none",
+                    choices=["none", "inline", "process"],
+                    help="replica transport: none (in-process backends, "
+                    "the default), inline (in-process with the transport's "
+                    "kill/fault surface), process (each replica's backend "
+                    "in a spawned worker — a real failure domain)")
+    ap.add_argument("--kill-replica-at", type=float, default=None,
+                    metavar="MS",
+                    help="fault injection: kill one replica at this "
+                    "loop-clock time; its breaker trips permanently, "
+                    "in-flight rows requeue/fail over, routing continues "
+                    "on the survivors (requires --replicas > 1 unless you "
+                    "want the whole chunk degraded on-device)")
+    ap.add_argument("--kill-replica", type=int, default=0, metavar="ID",
+                    help="which replica --kill-replica-at kills")
+    ap.add_argument("--rejoin-replica-at", type=float, default=None,
+                    metavar="MS",
+                    help="bring the killed replica back at this loop-clock "
+                    "time (breaker reset + transport restart)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.overload_policy != "unbounded" and args.max_pending is None:
@@ -176,10 +213,16 @@ def main(argv=None):
         max_len=args.prompt + args.gen + 8, seed=args.seed,
         measured_hedge=measured, dispatch=args.dispatch,
         replicas=args.replicas, router=args.router, shard_zoo=args.shard_zoo,
+        transport=args.transport,
     )
     cluster = engine.backend if isinstance(engine.backend, ClusterBackend) else None
+    if args.kill_replica_at is not None and cluster is None:
+        ap.error("--kill-replica-at needs a cluster (--replicas/--transport)")
     if cluster is not None:
-        print(f"cluster: {cluster.n_replicas} replicas, router={args.router}")
+        print(
+            f"cluster: {cluster.n_replicas} replicas, router={args.router}, "
+            f"transport={args.transport}"
+        )
         for snap in cluster.snapshot():
             print(f"  replica {snap.replica_id}: hosts {list(snap.hosts)}")
     registry = engine.measure_profiles(
@@ -241,7 +284,38 @@ def main(argv=None):
         else None
     )
 
+    fault = {"killed": False, "rejoined": False}
+
+    def drive_faults(tick_ms):
+        # Loop-clock fault schedule: kill (and optionally rejoin) between
+        # ticks, exactly where an operator action would land.
+        if (
+            args.kill_replica_at is not None
+            and not fault["killed"]
+            and tick_ms >= args.kill_replica_at
+        ):
+            cluster.kill_replica(args.kill_replica, reason="operator kill")
+            fault["killed"] = True
+            print(f"tick t={tick_ms:7.0f}ms !! killed replica {args.kill_replica}")
+        if (
+            args.rejoin_replica_at is not None
+            and fault["killed"]
+            and not fault["rejoined"]
+            and tick_ms >= args.rejoin_replica_at
+        ):
+            cluster.rejoin(args.kill_replica)
+            fault["rejoined"] = True
+            print(f"tick t={tick_ms:7.0f}ms !! rejoined replica {args.kill_replica}")
+
     def on_tick(tick_ms, res):
+        if cluster is not None:
+            drive_faults(tick_ms)
+        if res.stats.n_lost:
+            print(
+                f"tick t={tick_ms:7.0f}ms !! lost {res.stats.n_lost} rows "
+                f"to a failed replica ({res.stats.n_requeued} requeued, "
+                f"{res.stats.n_lost - res.stats.n_requeued} hedge-failover)"
+            )
         if not res.completions:
             print(
                 f"tick t={tick_ms:7.0f}ms batch=  0 "

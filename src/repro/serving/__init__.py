@@ -16,6 +16,7 @@ from repro.serving.cluster import (
     ROUTERS,
     ClusterBackend,
     LeastInflightRouter,
+    NoHealthyReplica,
     PowerOfTwoRouter,
     Replica,
     ReplicaPool,
@@ -24,6 +25,7 @@ from repro.serving.cluster import (
     make_router,
     shard_slices,
 )
+from repro.serving.health import BreakerConfig, CircuitBreaker, ReplicaHealth
 from repro.serving.engine import (
     CompletedRequest,
     QueuedRequest,
@@ -46,6 +48,13 @@ from repro.serving.loadgen import (
     make_trace,
 )
 from repro.serving.loop import ServingLoop, TickResult, TickStats
+from repro.serving.transport import (
+    FailedBatchHandle,
+    ProcessTransportBackend,
+    RemoteExecutionError,
+    ReplicaDied,
+    TransportError,
+)
 from repro.serving.profiles import ONDEVICE_TIER, V5E, estimate_ms, lm_zoo_registry
 from repro.serving.scheduler import (
     BatchDecision,
@@ -56,15 +65,17 @@ from repro.serving.scheduler import (
 
 __all__ = [
     "AdmissionConfig", "AdmissionQueue", "BatchDecision", "BatchHandle",
-    "BurstyArrivals", "ClusterBackend", "CompletedRequest", "Decision",
-    "ExecutionBackend", "InferenceClient", "InferenceFuture", "JitBackend",
+    "BreakerConfig", "BurstyArrivals", "CircuitBreaker", "ClusterBackend",
+    "CompletedRequest", "Decision", "ExecutionBackend", "FailedBatchHandle",
+    "InferenceClient", "InferenceFuture", "JitBackend",
     "LeastInflightRouter", "LoadTrace", "MDInferenceScheduler",
-    "ONDEVICE_TIER", "OnDeviceBackend", "OverloadArrivals",
-    "PoissonArrivals", "PowerOfTwoRouter", "QueuedRequest", "ROUTERS",
-    "RampArrivals", "Replica", "ReplicaPool", "RequestCancelled",
-    "RequestRejected",
-    "RequestState", "RoundRobinRouter", "Router", "SchedulerConfig",
-    "ServingEngine", "ServingLoop", "TickResult", "TickStats", "V5E",
+    "NoHealthyReplica", "ONDEVICE_TIER", "OnDeviceBackend",
+    "OverloadArrivals", "PoissonArrivals", "PowerOfTwoRouter",
+    "ProcessTransportBackend", "QueuedRequest", "ROUTERS", "RampArrivals",
+    "RemoteExecutionError", "Replica", "ReplicaDied", "ReplicaHealth",
+    "ReplicaPool", "RequestCancelled", "RequestRejected", "RequestState",
+    "RoundRobinRouter", "Router", "SchedulerConfig", "ServingEngine",
+    "ServingLoop", "TickResult", "TickStats", "TransportError", "V5E",
     "Variant", "build_hedge_variant", "estimate_ms", "iter_windows",
     "lm_zoo_registry", "make_router", "make_trace", "shard_slices",
     "sla_unreachable",

@@ -151,6 +151,7 @@ class AdmissionQueue:
         self.n_submitted = 0
         self.n_rejected = 0  # overflow-rejected + deadline-shed
         self.n_degraded = 0  # routed to the on-device-only lane
+        self.n_requeued = 0  # lost-batch rows returned by the loop
 
     # -- bookkeeping -----------------------------------------------------------
     @staticmethod
@@ -223,6 +224,23 @@ class AdmissionQueue:
                 self.n_rejected += 1
             return "rejected"
         return "cancelled"
+
+    def requeue(self, futures: List[InferenceFuture]) -> None:
+        """Return lost-batch futures to the *front* of the admitted queue.
+
+        Called by the loop when a replica failure loses a dispatched
+        batch: the rows already went through admission once (they are
+        counted in ``n_submitted`` and invested real queue wait), so they
+        re-enter at the head — ahead of younger arrivals — and bypass the
+        ``max_pending`` capacity check (they held a slot when first
+        admitted; bouncing them to the overload policy would turn a
+        replica fault into spurious shed/degrade).  Conservation is
+        unchanged: a requeued request is backlog again, not a new submit.
+        """
+        with self._lock:
+            for f in reversed(futures):
+                self._admitted.appendleft(f)
+            self.n_requeued += len(futures)
 
     # -- tick side -------------------------------------------------------------
     def take(

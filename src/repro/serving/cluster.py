@@ -7,7 +7,9 @@ under load.  This module multiplies the backend seam horizontally:
 
 * :class:`Replica` — one routable backend plus a live view of its load
   accounting (``inflight_rows``, cumulative ``dispatched_rows``, wall-time
-  EWMA — maintained by :meth:`ExecutionBackend.submit_batch` itself).
+  EWMA — maintained by :meth:`ExecutionBackend.submit_batch` itself) and
+  its health (:class:`repro.serving.health.ReplicaHealth`: circuit
+  breaker + drain flag — membership is *dynamic*).
 * :class:`ReplicaPool` — N replicas + zoo placement across their slices
   (the cluster's state half: registration, hosted masks, snapshots).
 * :class:`Router` — pluggable routing policy over the *eligible* replica
@@ -23,10 +25,23 @@ under load.  This module multiplies the backend seam horizontally:
   replica that doesn't host its variant.
 
 Placement-aware selection: :meth:`ClusterBackend.hosted_mask` tells the
-scheduler which variants have at least one live replica —
+scheduler which variants have at least one live *routable* replica —
 ``MDInferenceScheduler.decide_batch(..., eligible=...)`` masks the rest
-out, so a partial slice set constrains selection instead of crashing
-dispatch.
+out, so a partial slice set (or a partially-failed pool) constrains
+selection instead of crashing dispatch.  The mask is recomputed against
+the loop clock every tick (:meth:`ClusterBackend.advance_clock`), so a
+replica whose breaker opens leaves eligibility the *same tick*, and one
+whose cooldown elapses re-enters it.
+
+Fault handling: :meth:`ClusterBackend.submit_batch` converts a
+:class:`repro.serving.transport.TransportError` raised at dispatch into a
+:class:`repro.serving.transport.FailedBatchHandle` (the loop requeues or
+hedge-fails-over those rows — a tick never crashes on a dead replica),
+and the loop reports batch outcomes back through :meth:`note_success` /
+:meth:`note_failure` to drive each replica's breaker.  When every hosting
+replica is unroutable, :meth:`route` raises the typed
+:class:`NoHealthyReplica` (never a bare ``ZeroDivisionError`` /
+``IndexError`` from a router over an empty set).
 
 The hedge tier is deliberately *not* poolable: the paper's on-device
 duplicate is a device-side singleton, so an
@@ -48,9 +63,16 @@ from repro.serving.backend import (
     OnDeviceBackend,
     Variant,
 )
+from repro.serving.health import BreakerConfig, CircuitBreaker, ReplicaHealth
+from repro.serving.transport import (
+    FailedBatchHandle,
+    ReplicaDied,
+    TransportError,
+)
 
 __all__ = [
     "ROUTERS",
+    "NoHealthyReplica",
     "Replica",
     "ReplicaPool",
     "Router",
@@ -63,13 +85,21 @@ __all__ = [
 ]
 
 
+class NoHealthyReplica(RuntimeError):
+    """Every replica hosting the variant is unroutable (breaker open,
+    draining, or dead).  The serving loop diverts the affected rows to the
+    on-device degrade lane instead of crashing the tick."""
+
+
 class Replica:
     """One routable backend replica in a pool.
 
     ``slice_names`` is the subset of the zoo this replica *admits* at
     registration (``None``: everything — full replication).  What it
     actually *hosts* is its backend's variant registry — the source of
-    truth routing consults.
+    truth routing consults.  ``health`` is the replica's routability
+    state (circuit breaker + drain flag); a replica can *host* a variant
+    yet be unroutable this tick.
     """
 
     def __init__(
@@ -77,11 +107,15 @@ class Replica:
         replica_id: int,
         backend: ExecutionBackend,
         slice_names: Optional[Sequence[str]] = None,
+        breaker: Optional[BreakerConfig] = None,
     ):
         self.replica_id = replica_id
         self.backend = backend
         self.slice_names = (
             None if slice_names is None else frozenset(slice_names)
+        )
+        self.health = ReplicaHealth(
+            None if breaker is None else CircuitBreaker(breaker)
         )
 
     def admits(self, name: str) -> bool:
@@ -91,6 +125,11 @@ class Replica:
     def hosts(self, name: str) -> bool:
         """Whether this replica can execute variant ``name`` right now."""
         return name in self.backend.variants
+
+    def routable(self, now_ms: float) -> bool:
+        """Whether routing may send a batch here at ``now_ms`` (breaker
+        closed or probing, not draining)."""
+        return self.health.routable(now_ms)
 
     # Live load/latency accounting (maintained by the backend itself).
     @property
@@ -113,30 +152,54 @@ class Replica:
 
 
 class Router:
-    """Routing policy: pick one replica from the eligible (hosting) set.
+    """Routing policy: pick one replica from the eligible (hosting,
+    routable) set.
 
-    ``pick`` receives only replicas that host the batch's variant, in
-    ascending ``replica_id`` order, and the set is never empty.
+    ``pick`` receives only replicas that host the batch's variant and are
+    routable this tick, in ascending ``replica_id`` order.  The eligible
+    set is dynamic — health transitions grow and shrink it between picks —
+    and an empty set raises the typed :class:`NoHealthyReplica` (never a
+    bare ``IndexError``/``ZeroDivisionError``).
     """
 
     name = "?"
+
+    @staticmethod
+    def _require_nonempty(eligible: Sequence[Replica]) -> None:
+        if not eligible:
+            raise NoHealthyReplica(
+                "every replica in the eligible set is unroutable"
+            )
 
     def pick(self, eligible: Sequence[Replica]) -> Replica:
         raise NotImplementedError
 
 
 class RoundRobinRouter(Router):
-    """Cycle a global counter over the eligible set (load-blind)."""
+    """Cycle over the eligible set, keyed on replica *identity* (load-blind).
+
+    The rotation remembers the last-picked ``replica_id`` and takes the
+    next-higher id present in today's eligible set (wrapping to the
+    lowest).  A global ``counter % len(eligible)`` would skew the moment
+    the set changes size between picks — e.g. a 3-replica pool shrinking
+    to 2 makes ``counter % 2`` repeatedly skip one survivor — whereas the
+    identity key stays fair under any interleaving of joins and leaves.
+    """
 
     name = "round_robin"
 
     def __init__(self, seed: int = 0):
-        self._next = 0
+        self._last: Optional[int] = None  # replica_id of the previous pick
 
     def pick(self, eligible: Sequence[Replica]) -> Replica:
-        r = eligible[self._next % len(eligible)]
-        self._next += 1
-        return r
+        self._require_nonempty(eligible)
+        if self._last is None:
+            choice = eligible[0]
+        else:
+            after = [r for r in eligible if r.replica_id > self._last]
+            choice = after[0] if after else eligible[0]
+        self._last = choice.replica_id
+        return choice
 
 
 class LeastInflightRouter(Router):
@@ -154,6 +217,7 @@ class LeastInflightRouter(Router):
         pass
 
     def pick(self, eligible: Sequence[Replica]) -> Replica:
+        self._require_nonempty(eligible)
         return min(
             eligible,
             key=lambda r: (r.inflight_rows, r.dispatched_rows, r.replica_id),
@@ -198,6 +262,7 @@ class PowerOfTwoRouter(Router):
         return (0.0 if ewma is None else ewma, r.inflight_rows, r.replica_id)
 
     def pick(self, eligible: Sequence[Replica]) -> Replica:
+        self._require_nonempty(eligible)
         if len(eligible) == 1:
             return eligible[0]
         i, j = self.rng.choice(len(eligible), size=2, replace=False)
@@ -247,7 +312,7 @@ def shard_slices(
 
 @dataclasses.dataclass(frozen=True)
 class ReplicaSnapshot:
-    """Point-in-time view of one replica's load accounting."""
+    """Point-in-time view of one replica's load accounting and health."""
 
     replica_id: int
     hosts: tuple
@@ -255,6 +320,11 @@ class ReplicaSnapshot:
     dispatched_rows: int
     completed_batches: int
     ewma_wall_ms: Optional[float]
+    # Health: breaker state machine + drain flag (see repro.serving.health).
+    health: str = "closed"  # closed | open | half_open
+    reason: Optional[str] = None  # why the breaker tripped (open/half_open)
+    open_until_ms: Optional[float] = None  # loop-clock; inf: permanent (kill)
+    draining: bool = False
 
 
 class ReplicaPool:
@@ -272,6 +342,7 @@ class ReplicaPool:
         self,
         backends: Sequence[ExecutionBackend],
         slices: Optional[Sequence[Sequence[str]]] = None,
+        breaker: Optional[BreakerConfig] = None,
     ):
         if not backends:
             raise ValueError("a ReplicaPool needs at least one replica")
@@ -297,7 +368,7 @@ class ReplicaPool:
                 f"{len(backends)}"
             )
         self.replicas = [
-            Replica(i, b, None if slices is None else slices[i])
+            Replica(i, b, None if slices is None else slices[i], breaker)
             for i, b in enumerate(backends)
         ]
 
@@ -318,15 +389,32 @@ class ReplicaPool:
         return placed
 
     def replicas_for(self, name: str) -> List[Replica]:
-        """The eligible replica set for a variant (ascending replica_id)."""
+        """The hosting replica set for a variant (ascending replica_id),
+        health-blind — placement truth, not routability."""
         return [r for r in self.replicas if r.hosts(name)]
 
-    def hosted_mask(self, names: Sequence[str]) -> np.ndarray:
-        """Bool mask over ``names``: True where >= 1 replica hosts the
-        variant — the scheduler's selection-eligibility input."""
+    def routable_for(self, name: str, now_ms: float) -> List[Replica]:
+        """The replicas a batch of ``name`` may be routed to *right now*
+        (hosting, breaker closed or probing, not draining)."""
+        return [r for r in self.replicas_for(name) if r.routable(now_ms)]
+
+    def hosted_mask(
+        self, names: Sequence[str], now_ms: Optional[float] = None
+    ) -> np.ndarray:
+        """Bool mask over ``names``: True where >= 1 replica can serve the
+        variant — the scheduler's selection-eligibility input.
+
+        With ``now_ms`` the mask is *membership-aware*: a variant whose
+        every hosting replica is unroutable (breaker open, draining) is
+        masked out the same tick the health transition happens.  Without
+        it the mask is static placement only (the pre-health behavior).
+        """
+        if now_ms is None:
+            live = self.replicas
+        else:
+            live = [r for r in self.replicas if r.routable(now_ms)]
         return np.asarray(
-            [any(r.hosts(n) for r in self.replicas) for n in names],
-            dtype=bool,
+            [any(r.hosts(n) for r in live) for n in names], dtype=bool
         )
 
     def snapshot(self) -> List[ReplicaSnapshot]:
@@ -339,6 +427,10 @@ class ReplicaPool:
                 dispatched_rows=r.dispatched_rows,
                 completed_batches=r.backend.completed_batches,
                 ewma_wall_ms=r.ewma_wall_ms,
+                health=r.health.breaker.state,
+                reason=r.health.breaker.reason,
+                open_until_ms=r.health.breaker.open_until_ms,
+                draining=r.health.draining,
             )
             for r in self.replicas
         ]
@@ -365,19 +457,31 @@ class ClusterBackend(ExecutionBackend):
         router: str | Router = "round_robin",
         slices: Optional[Sequence[Sequence[str]]] = None,
         seed: int = 0,
+        breaker: Optional[BreakerConfig] = None,
     ):
         super().__init__()
         if isinstance(backends, ReplicaPool):
-            if slices is not None:
+            if slices is not None or breaker is not None:
                 raise ValueError(
-                    "pass slices to the ReplicaPool, not the ClusterBackend"
+                    "pass slices/breaker to the ReplicaPool, not the "
+                    "ClusterBackend"
                 )
             self.pool = backends
         else:
-            self.pool = ReplicaPool(backends, slices=slices)
+            self.pool = ReplicaPool(backends, slices=slices, breaker=breaker)
         self.router = router if isinstance(router, Router) else make_router(
             router, seed=seed
         )
+        # The cluster's view of the serving loop's clock (ms): breaker
+        # cooldowns and routability are evaluated against this, so health
+        # behavior is deterministic trace time, not wall time.
+        self._now_ms = 0.0
+
+    # -- membership clock -----------------------------------------------------
+    def advance_clock(self, now_ms: float) -> None:
+        """Feed the loop clock forward (ticks call this before routing);
+        monotone — a stale caller never rewinds breaker cooldowns."""
+        self._now_ms = max(self._now_ms, float(now_ms))
 
     @property
     def replicas(self) -> List[Replica]:
@@ -401,22 +505,98 @@ class ClusterBackend(ExecutionBackend):
         return self.pool.replicas_for(name)
 
     def hosted_mask(self, names: Sequence[str]) -> np.ndarray:
-        return self.pool.hosted_mask(names)
+        # Membership-aware: evaluated at the cluster clock, so the mask
+        # tracks breaker/drain transitions tick-by-tick.
+        return self.pool.hosted_mask(names, self._now_ms)
 
     def fan_out(self, name: str) -> int:
-        """How many replicas a batch of this variant can spread across."""
-        return max(1, len(self.pool.replicas_for(name)))
+        """How many replicas a batch of this variant can spread across
+        *this tick* (routable hosting replicas only)."""
+        return max(1, len(self.pool.routable_for(name, self._now_ms)))
 
     # -- routing --------------------------------------------------------------
     def route(self, name: str) -> Replica:
-        """Pick the replica that runs the next batch of variant ``name``."""
-        eligible = self.pool.replicas_for(name)
-        if not eligible:
+        """Pick the replica that runs the next batch of variant ``name``.
+
+        Distinguishes the two empty cases: *nothing hosts the variant* is
+        a placement error (``ValueError`` — a registration bug), while
+        *everything hosting it is unroutable* is an operational condition
+        (:class:`NoHealthyReplica` — the loop degrades those rows).
+        """
+        hosting = self.pool.replicas_for(name)
+        if not hosting:
             raise ValueError(
                 f"no replica hosts variant {name!r} (slices: "
                 f"{[sorted(r.backend.variants) for r in self.pool.replicas]})"
             )
-        return self.router.pick(eligible)
+        eligible = [r for r in hosting if r.routable(self._now_ms)]
+        if not eligible:
+            raise NoHealthyReplica(
+                f"no healthy replica for variant {name!r}: "
+                + "; ".join(
+                    f"replica {r.replica_id} "
+                    + (
+                        "draining"
+                        if r.health.draining
+                        else f"{r.health.breaker.state}"
+                        + (
+                            f" ({r.health.breaker.reason})"
+                            if r.health.breaker.reason
+                            else ""
+                        )
+                    )
+                    for r in hosting
+                )
+            )
+        replica = self.router.pick(eligible)
+        replica.health.breaker.on_dispatch(self._now_ms)
+        return replica
+
+    # -- health reporting (driven by the serving loop) ------------------------
+    def note_success(self, replica_id: int) -> None:
+        """A routed batch completed on ``replica_id``: feed its breaker
+        (closes a half-open probe, resets the failure streak)."""
+        self.replicas[replica_id].health.breaker.on_success(self._now_ms)
+
+    def note_failure(
+        self, replica_id: int, reason: str, *, fatal: bool = False
+    ) -> None:
+        """A routed batch was lost on ``replica_id``: feed its breaker
+        (``fatal`` — worker death/timeout — trips immediately)."""
+        self.replicas[replica_id].health.breaker.on_failure(
+            self._now_ms, reason, fatal=fatal
+        )
+
+    # -- membership operations ------------------------------------------------
+    def drain(self, replica_id: int) -> None:
+        """Gracefully remove a replica from routing: nothing new is routed
+        to it, in-flight batches finish normally (their completions still
+        resolve), and :meth:`rejoin` restores it.  The loop requeues any
+        rows a drain-then-death races out of."""
+        self.replicas[replica_id].health.draining = True
+
+    def rejoin(self, replica_id: int) -> None:
+        """Bring a drained/tripped/killed replica back into routing:
+        clears the drain flag, resets the breaker, and restarts a dead
+        transport worker (when the backend supports it)."""
+        r = self.replicas[replica_id]
+        r.health.draining = False
+        r.health.breaker.reset()
+        restart = getattr(r.backend, "restart", None)
+        if restart is not None and not getattr(r.backend, "alive", True):
+            restart()
+
+    def kill_replica(self, replica_id: int, reason: str = "killed") -> None:
+        """Fault injection / hard removal: kill the replica's transport
+        worker (when it has one) and trip its breaker *permanently* —
+        only :meth:`rejoin` recovers it.  In-flight batches surface as
+        :class:`~repro.serving.transport.ReplicaDied` at collection and
+        the loop requeues their rows."""
+        r = self.replicas[replica_id]
+        kill = getattr(r.backend, "kill", None)
+        if kill is not None:
+            kill(reason)
+        r.health.breaker.trip(self._now_ms, reason, permanent=True)
 
     # -- the execution protocol, routed ---------------------------------------
     def submit_batch(
@@ -424,7 +604,20 @@ class ClusterBackend(ExecutionBackend):
     ) -> BatchHandle:
         replica = self.route(name)
         depth = replica.inflight_rows + int(batch.shape[0])
-        handle = replica.backend.submit_batch(name, batch, n_steps, sync=sync)
+        try:
+            handle = replica.backend.submit_batch(
+                name, batch, n_steps, sync=sync
+            )
+        except TransportError as e:
+            # Sync dispatch surfaces transport faults inline; the replica
+            # backend already reconciled its inflight accounting
+            # (_note_done ran before the raise), so only the breaker and
+            # the handle are left to produce here.  The loop treats the
+            # FailedBatchHandle like any other lost batch.
+            self.note_failure(
+                replica.replica_id, str(e), fatal=isinstance(e, ReplicaDied)
+            )
+            handle = FailedBatchHandle(name, int(batch.shape[0]), e)
         handle.replica = replica.replica_id
         handle.inflight_at_dispatch = depth
         return handle

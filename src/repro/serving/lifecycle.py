@@ -24,7 +24,10 @@ A request moves through explicit states::
   wall timestamps are recorded on the future.  Cancellation from here on
   cannot recall the batched execution, but the result is discarded at
   resolution (the measurement still folds into the live EWMA profiles —
-  the work really happened).
+  the work really happened).  A batch lost to a dead/failed replica sends
+  its unhedged rows *back* to QUEUED (``_requeue`` — the loop re-admits
+  them at the front of the admission queue), so replica failure loses no
+  request.
 * **RESOLVED** — hedged duplication resolved; :meth:`InferenceFuture.result`
   returns the :class:`CompletedRequest`.
 
@@ -145,6 +148,9 @@ class InferenceFuture:
         self._state_lock = threading.Lock()
         self._completion: Optional[CompletedRequest] = None
         self._cancel_requested = False
+        # How many times a replica failure sent this request back to
+        # QUEUED (lost-batch recovery); diagnostic, not a retry budget.
+        self.requeues = 0
 
     # -- inspection -----------------------------------------------------------
     @property
@@ -247,6 +253,30 @@ class InferenceFuture:
     def _mark_cancelled(self) -> None:
         self.state = RequestState.CANCELLED
         self._event.set()
+
+    def _requeue(self) -> bool:
+        """Send a SCHEDULED/EXECUTING request back to QUEUED — its batch
+        was lost to a replica failure and it holds no result.
+
+        A ``cancel()`` that raced the lost execution wins here (the
+        request will never produce a result to discard, so it cancels
+        now).  Returns True iff the request is QUEUED again and should
+        re-enter the admission queue.
+        """
+        with self._state_lock:
+            if self.done():
+                return False
+            if self._cancel_requested:
+                self._mark_cancelled()
+                return False
+            if self.state not in (
+                RequestState.SCHEDULED, RequestState.EXECUTING
+            ):
+                return False
+            self.state = RequestState.QUEUED
+            self.scheduled_ms = None
+            self.requeues += 1
+            return True
 
     def _mark_rejected(self) -> bool:
         """Admission-side terminal transition (overload shed).

@@ -45,6 +45,12 @@ import numpy as np
 from repro.core.sla import RequestMetrics, summarize
 from repro.serving.admission import AdmissionConfig, AdmissionQueue
 from repro.serving.backend import BatchHandle, ExecutionBackend, OnDeviceBackend
+from repro.serving.cluster import NoHealthyReplica
+from repro.serving.transport import (
+    FailedBatchHandle,
+    ReplicaDied,
+    TransportError,
+)
 from repro.serving.lifecycle import (
     CompletedRequest,
     InferenceFuture,
@@ -109,6 +115,11 @@ class TickStats:
     hedge_dispatched_before_remote_done: Optional[bool]
     n_shed: int = 0  # rejected by admission at this tick (shed policy)
     n_degraded: int = 0  # served on-device-only at this tick (degrade policy)
+    # Fault accounting: rows whose remote batch was lost to a replica
+    # failure this tick, and how many of those went back to admission
+    # (the rest resolved through their measured hedge duplicate).
+    n_lost: int = 0
+    n_requeued: int = 0
     # Rows dispatched per cluster replica this tick (empty: unclustered
     # backend — every remote row then counts as one replica's work).
     replica_rows: Dict[int, int] = dataclasses.field(default_factory=dict)
@@ -342,10 +353,25 @@ class ServingLoop:
             return None
         now_ms = take.now_ms
         self.now_ms = max(self.now_ms, now_ms)
+        # Feed the loop clock to a clustered backend: breaker cooldowns,
+        # drain state, and the hosted mask are all evaluated at tick time,
+        # so membership transitions are visible the same tick they happen.
+        advance = getattr(self.backend, "advance_clock", None)
+        if advance is not None:
+            advance(self.now_ms)
         # Atomic QUEUED -> SCHEDULED claim: a cancel() racing this tick from
         # another thread loses its slot here, never in a dispatched batch.
         batch = [f for f in take.chunk if f._try_schedule(now_ms)]
         degraded = [f for f in take.degraded if f._try_schedule(now_ms)]
+        # Whole-pool outage: when no variant has a routable replica (every
+        # hosting replica dead/draining), decide_batch has nothing to
+        # select — divert the entire chunk to the on-device degrade lane
+        # instead of crashing the tick.  Partial outages flow through
+        # decide_batch's eligibility masking as usual.
+        eligible = self._eligible_mask()
+        if batch and eligible is not None and not eligible.any():
+            degraded.extend(batch)
+            batch = []
         if not batch and not degraded:
             if take.shed:  # all-shed tick: surface the rejection accounting
                 return self._collect(
@@ -385,7 +411,7 @@ class ServingLoop:
             est = np.asarray([r.t_nw_est_ms for r in requests])
             decision = self.scheduler.decide_batch(
                 est + queue_wait + (loop_sla - slas),
-                eligible=self._eligible_mask(),
+                eligible=eligible,
             )
 
             # Dispatch every batch of the tick before waiting on any of
@@ -400,9 +426,20 @@ class ServingLoop:
                 name = self.scheduler.names[int(m)]
                 for part in self._fan_out(name, rows):
                     gbatch, steps = _pad_batch(requests, part)
-                    handle = self.backend.submit_batch(
-                        name, gbatch, steps, sync=sync
-                    )
+                    try:
+                        handle = self.backend.submit_batch(
+                            name, gbatch, steps, sync=sync
+                        )
+                    except NoHealthyReplica as e:
+                        # The eligible mask was computed at the top of the
+                        # tick; a same-tick health transition (e.g. the
+                        # sole hosting replica's half-open probe already
+                        # claimed) can still empty the routable set here.
+                        # The rows are handled like any lost batch at
+                        # collection (hedge failover or requeue).
+                        handle = FailedBatchHandle(
+                            name, int(gbatch.shape[0]), e
+                        )
                     groups.append((int(m), part, handle))
                     for i in part:
                         row_handles[i] = handle
@@ -498,27 +535,71 @@ class ServingLoop:
                 break  # nothing schedulable (e.g. all raced to cancel)
         return results
 
+    # -- replica health feedback ----------------------------------------------
+    def _note_replica(
+        self, replica: Optional[int], ok: bool, error: Optional[Exception] = None
+    ) -> None:
+        """Report a routed batch's outcome to a clustered backend's health
+        layer (inert on plain backends and unrouted handles)."""
+        if replica is None:
+            return
+        if ok:
+            note = getattr(self.backend, "note_success", None)
+            if note is not None:
+                note(replica)
+        else:
+            note = getattr(self.backend, "note_failure", None)
+            if note is not None:
+                note(replica, str(error), fatal=isinstance(error, ReplicaDied))
+
     # -- collection / resolution ---------------------------------------------
     def _collect(self, tick: _InflightTick) -> TickResult:
         requests, decision = tick.requests, tick.decision
         n = len(requests)
         exec_ms = np.empty(n)
+        lost = np.zeros(n, dtype=bool)  # rows whose remote batch was lost
         gen_tokens: List[Optional[np.ndarray]] = [None] * n
         remote_wall_sum = 0.0
         for m, rows, handle in tick.groups:
-            out, wall_ms = handle.wait()
+            try:
+                out, wall_ms = handle.wait()
+            except (TransportError, NoHealthyReplica) as e:
+                # The batch never produced tokens: a dead/failed replica
+                # (or a routing hole that opened mid-tick).  exec=inf makes
+                # the vectorized race resolution treat the remote leg as
+                # never arriving — hedged rows fail over to their measured
+                # duplicate; unhedged rows are requeued below.  Replica
+                # accounting was already reconciled by the transport
+                # (inflight rows drained on failure), so only the breaker
+                # needs the report.
+                lost[rows] = True
+                exec_ms[rows] = np.inf
+                self._note_replica(handle.replica, ok=False, error=e)
+                continue
             remote_wall_sum += wall_ms
             exec_ms[rows] = wall_ms
             for row, i in enumerate(rows):
                 gen_tokens[i] = out[row, : requests[i].n_steps]
+            self._note_replica(handle.replica, ok=True)
 
         completions: List[CompletedRequest] = []
         t_sla_live: List[float] = []  # per live completion, for summarize
         measured = tick.hedge_handle is not None
         hedge_wall: Optional[float] = None
         names = self.scheduler.names
+        requeue: List[InferenceFuture] = []
         if n:
-            self.scheduler.observe_batch(decision.model_index, exec_ms)
+            # Lost batches have no honest wall time: fold only surviving
+            # rows into the live profiles (the no-failure path keeps the
+            # exact pre-fault call, preserving the rng/EWMA stream the
+            # byte-identity regression pins).
+            if lost.any():
+                if not lost.all():
+                    self.scheduler.observe_batch(
+                        decision.model_index[~lost], exec_ms[~lost]
+                    )
+            else:
+                self.scheduler.observe_batch(decision.model_index, exec_ms)
 
             remote_ms = (
                 tick.queue_wait
@@ -549,7 +630,15 @@ class ServingLoop:
             )
 
             for i, f in enumerate(tick.futures):
-                done_walls = {"remote": tick.row_handles[i].done_wall_ms}
+                if lost[i] and not (measured and decision.hedged[i]):
+                    # No tokens exist for this row anywhere (its hedge, if
+                    # any, was only a simulated sample) — back through
+                    # admission for a later tick on a surviving replica.
+                    requeue.append(f)
+                    continue
+                done_walls = {}
+                if tick.row_handles[i].done_wall_ms is not None:
+                    done_walls["remote"] = tick.row_handles[i].done_wall_ms
                 if measured and decision.hedged[i]:
                     done_walls["ondevice"] = tick.hedge_handle.done_wall_ms
                 f.tier_done_wall_ms.update(done_walls)
@@ -578,6 +667,7 @@ class ServingLoop:
                     ),
                     race_resolution=(
                         "unhedged" if not decision.hedged[i]
+                        else "remote_failed" if lost[i]
                         else ("remote_won" if used_remote[i] else "ondevice_won")
                     ),
                     replica=tick.row_handles[i].replica,
@@ -595,6 +685,18 @@ class ServingLoop:
         completions, t_sla_live = self._collect_degraded(
             tick, completions, t_sla_live
         )
+
+        # Lost-batch recovery: the rows go back to the *front* of the
+        # admission queue (they already invested queue wait) and are
+        # rescheduled by a later tick — conservation holds because a
+        # requeued request is backlog again, not a resolution.  A racing
+        # cancel() wins inside _requeue (the row cancels instead).
+        n_requeued = 0
+        if requeue:
+            back = [f for f in requeue if f._requeue()]
+            if back:
+                self.admission.requeue(back)
+            n_requeued = len(back)
 
         metrics = None
         if completions or tick.n_shed:
@@ -629,7 +731,13 @@ class ServingLoop:
                 )
 
         dispatch_stamps = [h.dispatch_wall_ms for _, _, h in tick.groups]
-        done_stamps = [h.done_wall_ms for _, _, h in tick.groups]
+        # A lost batch never finished — its handle has no done stamp.
+        group_done = [
+            h.done_wall_ms
+            for _, _, h in tick.groups
+            if h.done_wall_ms is not None
+        ]
+        done_stamps = list(group_done)
         for h in (tick.hedge_handle, tick.degrade_handle):
             if h is not None:
                 dispatch_stamps.append(h.dispatch_wall_ms)
@@ -648,13 +756,14 @@ class ServingLoop:
                 else 0.0
             ),
             hedge_dispatched_before_remote_done=(
-                tick.hedge_handle.dispatch_wall_ms
-                < max(h.done_wall_ms for _, _, h in tick.groups)
-                if tick.hedge_handle is not None and tick.groups
+                tick.hedge_handle.dispatch_wall_ms < max(group_done)
+                if tick.hedge_handle is not None and group_done
                 else None
             ),
             n_shed=tick.n_shed,
             n_degraded=len(tick.degraded_futures),
+            n_lost=int(lost.sum()),
+            n_requeued=n_requeued,
             replica_rows=replica_rows,
         )
         return TickResult(completions=completions, metrics=metrics, stats=stats)

@@ -1,0 +1,60 @@
+"""Process-worker entry point for :mod:`repro.serving.transport`.
+
+Lives in its own module so a spawned child imports *only* this file plus
+whatever the pickled backend factory pulls in — a stub factory keeps the
+child completely jax-free, which is what makes process-transport tests
+cheap enough for tier-1 CI.
+
+Protocol (one duplex :class:`multiprocessing.connection.Connection`):
+
+parent → child messages (tuples, first element is the op):
+
+* ``("register", variant)`` — register one variant on the child backend.
+* ``("submit", seq, name, batch, n_steps)`` — run one batch.
+* ``("stop",)`` — exit the loop.
+
+child → parent messages:
+
+* ``("result", seq, out, wall_ms)`` — batch ``seq`` finished.
+* ``("error", seq, repr_str)`` — batch ``seq`` raised; the exception is
+  flattened to its ``repr`` (arbitrary exceptions may not pickle).
+
+The child never shares memory with the parent: every batch crosses the
+pipe as a pickled ndarray — the real message boundary the cluster's
+fault model is built on.
+"""
+from __future__ import annotations
+
+
+def worker_main(conn, factory) -> None:
+    """Run a backend worker: build the backend, serve the message loop."""
+    try:
+        backend = factory()
+    except BaseException as e:  # surface construction failure, then die
+        try:
+            conn.send(("error", -1, f"worker backend construction: {e!r}"))
+        finally:
+            conn.close()
+        return
+    try:
+        while True:
+            msg = conn.recv()
+            op = msg[0]
+            if op == "stop":
+                break
+            if op == "register":
+                backend.register(msg[1])
+                continue
+            if op == "submit":
+                seq, name, batch, n_steps = msg[1], msg[2], msg[3], msg[4]
+                try:
+                    out, wall_ms = backend.run_batch(name, batch, n_steps)
+                    conn.send(("result", seq, out, float(wall_ms)))
+                except BaseException as e:
+                    conn.send(("error", seq, repr(e)))
+                continue
+            raise ValueError(f"unknown transport op {op!r}")
+    except (EOFError, OSError):
+        pass  # parent went away: nothing left to serve
+    finally:
+        conn.close()

@@ -11,7 +11,9 @@ import numpy as np
 from repro.core.registry import ModelProfile, ModelRegistry
 from repro.serving.backend import ExecutionBackend, Variant
 from repro.serving.cluster import ClusterBackend
+from repro.serving.health import BreakerConfig
 from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
+from repro.serving.transport import ProcessTransportBackend
 
 STUB_NAMES = ["stub-a", "stub-b"]
 
@@ -73,6 +75,34 @@ def stub_cluster(
     for name, quality in zip(STUB_NAMES, (40.0, 80.0)):
         if slices is None or any(name in s for s in slices):
             cluster.register(Variant(name, None, None, quality))
+    return cluster
+
+
+def stub_fault_cluster(
+    n_replicas: int,
+    delay_s: float = 0.0,
+    *,
+    router: str = "round_robin",
+    seed: int = 0,
+    breaker: BreakerConfig = None,
+) -> ClusterBackend:
+    """Like :func:`stub_cluster`, but every replica rides an inline
+    :class:`ProcessTransportBackend` (kill / inject_failures fault surface)
+    and the pool carries circuit breakers — the harness for membership and
+    fault-tolerance tests, deterministic under ``dispatch="sync"``.
+    """
+    cluster = ClusterBackend(
+        [
+            ProcessTransportBackend(
+                lambda: StubRemoteBackend(delay_s), mode="inline"
+            )
+            for _ in range(n_replicas)
+        ],
+        router=router, seed=seed,
+        breaker=breaker if breaker is not None else BreakerConfig(),
+    )
+    for name, quality in zip(STUB_NAMES, (40.0, 80.0)):
+        cluster.register(Variant(name, None, None, quality))
     return cluster
 
 

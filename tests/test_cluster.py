@@ -2,24 +2,36 @@
 per-replica accounting, the replicas=1 compatibility pin, and goodput
 scaling under overload (the PR's acceptance bar).
 """
+import math
+
 import numpy as np
 import pytest
 
 from hypothesis_compat import given, settings, st
 
 from repro.core.sla import summarize
+from repro.serving.admission import AdmissionConfig
 from repro.serving.backend import OnDeviceBackend
 from repro.serving.cluster import (
     ClusterBackend,
+    NoHealthyReplica,
     Replica,
     make_router,
     shard_slices,
 )
+from repro.serving.health import BreakerConfig
 from repro.serving.lifecycle import QueuedRequest, RequestState
 from repro.serving.loadgen import LoadTrace
 from repro.serving.loop import ServingLoop
+from repro.serving.transport import FailedBatchHandle
 
-from loop_stubs import STUB_NAMES, StubHedgeBackend, stub_cluster, stub_scheduler
+from loop_stubs import (
+    STUB_NAMES,
+    StubHedgeBackend,
+    stub_cluster,
+    stub_fault_cluster,
+    stub_scheduler,
+)
 
 GEN = 2
 
@@ -56,6 +68,24 @@ def test_round_robin_cycles_the_eligible_set():
     # Partial eligibility keeps cycling over what is eligible.
     picks = [router.pick(reps[1:]).replica_id for _ in range(4)]
     assert set(picks) == {1, 2}
+
+
+def test_round_robin_stays_fair_under_dynamic_membership():
+    """Regression: the old global-counter rotation (``counter % len``)
+    skewed the moment the eligible set changed size between picks; the
+    identity-keyed rotation stays fair under shrink and grow."""
+    router = make_router("round_robin")
+    reps = _pool([(0,), (0,), (0,)])
+    assert [router.pick(reps).replica_id for _ in range(3)] == [0, 1, 2]
+    # Shrink: replica 1 leaves mid-rotation — the survivors alternate
+    # strictly (no survivor is repeatedly skipped).
+    survivors = [reps[0], reps[2]]
+    picks = [router.pick(survivors).replica_id for _ in range(6)]
+    assert picks == [0, 2, 0, 2, 0, 2]
+    # Grow: replica 1 rejoins — the rotation folds it back in, and a full
+    # window over the restored set is exactly fair.
+    picks = [router.pick(reps).replica_id for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
 
 
 def test_least_inflight_picks_the_minimum_deterministic():
@@ -185,6 +215,17 @@ def test_power_of_two_tail_lands_between_round_robin_and_jsq(seed):
 def test_make_router_rejects_unknown():
     with pytest.raises(ValueError, match="router must be one of"):
         make_router("weighted-magic")
+
+
+@pytest.mark.parametrize(
+    "router", ["round_robin", "least_inflight", "power_of_two"]
+)
+def test_routers_raise_typed_error_on_empty_eligible_set(router):
+    """Regression: an empty eligible set used to surface as a bare
+    IndexError / ZeroDivisionError from inside the policy — it must be the
+    typed NoHealthyReplica the loop's degrade path catches."""
+    with pytest.raises(NoHealthyReplica):
+        make_router(router).pick([])
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +377,210 @@ def test_sharded_slices_constrain_selection_and_execution():
     assert {c.model_name for c in res.completions} == {"stub-a"}
     for replica in cluster.replicas:
         assert set(replica.backend.batch_names) <= {"stub-a"}
+
+
+# ---------------------------------------------------------------------------
+# Dynamic membership: breakers, drain, kill/rejoin, lost-batch recovery.
+# ---------------------------------------------------------------------------
+def test_breaker_opens_and_membership_updates_the_same_tick():
+    cluster = stub_fault_cluster(
+        2, breaker=BreakerConfig(failure_threshold=1, cooldown_ms=100.0)
+    )
+    cluster.advance_clock(10.0)
+    assert cluster.hosted_mask(STUB_NAMES).all()
+    cluster.note_failure(0, "exploded", fatal=True)
+    snap = cluster.snapshot()[0]
+    assert snap.health == "open" and snap.reason == "exploded"
+    # Same tick: replica 0 left the routable set; the mask stays up only
+    # because replica 1 still hosts everything.
+    assert cluster.fan_out("stub-a") == 1
+    assert {cluster.route("stub-a").replica_id for _ in range(4)} == {1}
+    assert cluster.hosted_mask(STUB_NAMES).all()
+    cluster.note_failure(1, "exploded too", fatal=True)
+    # Whole pool dark — the mask reflects it the same tick, and routing
+    # raises the typed operational error naming each replica's state.
+    assert not cluster.hosted_mask(STUB_NAMES).any()
+    with pytest.raises(NoHealthyReplica, match="exploded"):
+        cluster.route("stub-a")
+    # Placement errors stay distinct from operational outages.
+    with pytest.raises(ValueError, match="no replica hosts"):
+        cluster.route("outsider")
+
+
+def test_half_open_probe_single_slot_then_close_or_reopen():
+    cluster = stub_fault_cluster(
+        2, breaker=BreakerConfig(failure_threshold=1, cooldown_ms=100.0)
+    )
+    cluster.advance_clock(0.0)
+    cluster.note_failure(0, "flaky", fatal=True)
+    cluster.note_failure(1, "flaky", fatal=True)
+    cluster.advance_clock(150.0)  # both cooldowns elapsed -> half-open
+    a = cluster.route("stub-a")
+    b = cluster.route("stub-a")
+    assert {a.replica_id, b.replica_id} == {0, 1}
+    assert cluster.snapshot()[0].health == "half_open"
+    # Each half-open breaker admits exactly one probe: both slots are now
+    # claimed, so a third route finds nobody.
+    with pytest.raises(NoHealthyReplica):
+        cluster.route("stub-a")
+    # Probe outcomes drive the lifecycle: success closes, failure re-opens
+    # with the backed-off cooldown.
+    cluster.note_success(a.replica_id)
+    cluster.note_failure(b.replica_id, "still flaky")
+    snaps = cluster.snapshot()
+    assert snaps[a.replica_id].health == "closed"
+    assert snaps[b.replica_id].health == "open"
+    assert snaps[b.replica_id].open_until_ms == 150.0 + 200.0
+    assert {
+        cluster.route("stub-a").replica_id for _ in range(3)
+    } == {a.replica_id}
+
+
+def test_killed_replica_is_never_routed_and_rejoin_restarts_it():
+    cluster = stub_fault_cluster(2)
+    cluster.advance_clock(0.0)
+    cluster.kill_replica(0, reason="chaos kill")
+    assert not cluster.replicas[0].backend.alive
+    snap = cluster.snapshot()[0]
+    assert snap.health == "open"
+    assert snap.reason == "chaos kill"
+    assert snap.open_until_ms == math.inf
+    # A permanent trip never half-opens: even far in the future the
+    # breaker stays open and routing avoids the replica.
+    cluster.advance_clock(1e12)
+    assert {cluster.route("stub-a").replica_id for _ in range(6)} == {1}
+    cluster.rejoin(0)
+    assert cluster.replicas[0].backend.alive  # transport restarted
+    assert cluster.snapshot()[0].health == "closed"
+    assert {cluster.route("stub-a").replica_id for _ in range(4)} == {0, 1}
+
+
+def test_drain_stops_routing_inflight_finishes_rejoin_restores():
+    cluster = stub_fault_cluster(2, delay_s=0.01)
+    cluster.advance_clock(0.0)
+    h = cluster.submit_batch("stub-a", np.zeros((2, 4), np.int32), GEN, sync=False)
+    assert h.replica == 0
+    cluster.drain(0)
+    assert cluster.snapshot()[0].draining
+    # Nothing new routes to the draining replica...
+    assert {cluster.route("stub-a").replica_id for _ in range(4)} == {1}
+    # ...but its in-flight batch completes normally (drain is graceful).
+    out, wall_ms = h.wait(timeout=5.0)
+    assert out.shape[0] == 2 and wall_ms > 0.0
+    assert cluster.replicas[0].inflight_rows == 0
+    cluster.rejoin(0)
+    assert not cluster.snapshot()[0].draining
+    assert {cluster.route("stub-a").replica_id for _ in range(4)} == {0, 1}
+
+
+def test_failed_batch_reconciles_accounting_and_routing_recovers():
+    """Satellite regression: a failed batch's rows must leave the
+    replica's inflight count (and its EWMA must stay unpoisoned) so the
+    load-aware routers treat the recovered replica on par — no phantom
+    inflight permanently deprioritizing it."""
+    cluster = stub_fault_cluster(
+        2, router="least_inflight",
+        breaker=BreakerConfig(failure_threshold=1, cooldown_ms=100.0),
+    )
+    cluster.advance_clock(0.0)
+    cluster.replicas[0].backend.inject_failures(1)
+    h = cluster.submit_batch("stub-a", np.zeros((4, 4), np.int32), GEN, sync=True)
+    assert isinstance(h, FailedBatchHandle)
+    assert h.replica == 0
+    # The failed rows drained out of the inflight accounting...
+    assert cluster.replicas[0].inflight_rows == 0
+    assert cluster.replicas[0].ewma_wall_ms is None  # no bogus wall time
+    # ...and the breaker tripped at dispatch (threshold 1).
+    assert cluster.snapshot()[0].health == "open"
+    # Cooldown elapses; the probe succeeds; post-recovery both replicas
+    # share work again.
+    cluster.advance_clock(200.0)
+    served = []
+    for _ in range(8):
+        g = cluster.submit_batch(
+            "stub-a", np.zeros((2, 4), np.int32), GEN, sync=True
+        )
+        g.wait()
+        cluster.note_success(g.replica)
+        served.append(g.replica)
+    assert set(served) == {0, 1}
+    assert abs(served.count(0) - served.count(1)) <= 2
+    assert all(r.inflight_rows == 0 for r in cluster.replicas)
+
+
+def test_lost_batch_requeues_and_resolves_after_recovery():
+    """Tentpole behavior: rows on a batch a replica failure loses go back
+    through admission and resolve on a surviving replica — zero lost
+    requests, conservation intact."""
+    cluster = stub_fault_cluster(
+        2, router="least_inflight",
+        breaker=BreakerConfig(failure_threshold=1, cooldown_ms=1e6),
+    )
+    cluster.replicas[0].backend.inject_failures(50)
+    sched = stub_scheduler(t_sla_ms=1_000.0)
+    loop = ServingLoop(sched, cluster, dispatch="sync")
+    futures = [loop.submit(_request(i)) for i in range(8)]
+    r1 = loop.tick(now_ms=0.0)
+    assert r1.stats.n_lost > 0
+    assert r1.stats.n_requeued == r1.stats.n_lost  # no hedge tier: all back
+    assert len(r1.completions) == 8 - r1.stats.n_lost
+    assert loop.pending == r1.stats.n_requeued  # back in admission, front
+    r2 = loop.tick(now_ms=100.0)
+    assert r2.stats.n_lost == 0
+    assert len(r2.completions) == r1.stats.n_requeued
+    assert {c.replica for c in r2.completions} == {1}  # survivor served them
+    assert all(f.state is RequestState.RESOLVED for f in futures)
+    assert sum(1 for f in futures if f.requeues) == r1.stats.n_requeued
+    assert all(r.inflight_rows == 0 for r in cluster.replicas)
+
+
+def test_hedged_rows_fail_over_to_the_measured_duplicate():
+    """With a real hedge tier, a lost remote batch is not a lost request:
+    the hedged rows resolve through their measured on-device duplicate
+    (race_resolution='remote_failed') instead of requeueing."""
+    cluster = stub_fault_cluster(
+        1, breaker=BreakerConfig(failure_threshold=1, cooldown_ms=1e6)
+    )
+    cluster.replicas[0].backend.inject_failures(10)
+    hedge = StubHedgeBackend(0.0)
+    sched = stub_scheduler(t_sla_ms=1_000.0)
+    loop = ServingLoop(sched, cluster, hedge, dispatch="sync")
+    futures = [loop.submit(_request(i)) for i in range(4)]
+    res = loop.tick(now_ms=0.0)
+    assert res.stats.n_lost == 4
+    assert res.stats.n_requeued == 0
+    assert len(res.completions) == 4
+    for c in res.completions:
+        assert c.race_resolution == "remote_failed"
+        assert not c.used_remote
+        assert c.hedged and c.hedge_measured
+        assert np.isfinite(c.latency_ms)
+    assert all(f.state is RequestState.RESOLVED for f in futures)
+
+
+def test_whole_pool_outage_diverts_the_chunk_to_the_degrade_lane():
+    cluster = stub_fault_cluster(2)
+    hedge = StubHedgeBackend(0.0)
+    sched = stub_scheduler(t_sla_ms=1_000.0)
+    loop = ServingLoop(sched, cluster, hedge, dispatch="sync")
+    cluster.kill_replica(0, reason="rack down")
+    cluster.kill_replica(1, reason="rack down")
+    futures = [loop.submit(_request(i)) for i in range(5)]
+    res = loop.tick(now_ms=0.0)
+    # decide_batch never sees an all-False eligibility mask: the whole
+    # chunk is served by the on-device tier instead of crashing the tick.
+    assert res.stats.n_degraded == 5
+    assert res.stats.n_lost == 0
+    assert len(res.completions) == 5
+    assert {c.race_resolution for c in res.completions} == {"degraded"}
+    assert {c.model_name for c in res.completions} == {hedge.hedge_name}
+    assert all(f.state is RequestState.RESOLVED for f in futures)
+    # Rejoin brings the pool back: the next tick serves remotely again.
+    cluster.rejoin(0)
+    loop.submit(_request(99, arrival_ms=10.0))
+    res2 = loop.tick(now_ms=10.0)
+    assert res2.stats.n_degraded == 0
+    assert res2.completions[0].replica == 0
 
 
 def _overload_trace(n, window_ms, per_window):
@@ -527,3 +772,54 @@ def test_four_replica_overload_soak_no_starvation(router):
     )
     for replica in cluster.replicas:
         assert replica.inflight_rows == 0
+
+
+@pytest.mark.stress
+def test_kill_rejoin_soak_under_overload_conserves_every_request():
+    """Fault-injection soak: kill one of three replicas mid-2x-overload,
+    inject transient faults on a survivor, rejoin the dead replica — and
+    every submitted request still reaches exactly one terminal state
+    (resolved + rejected == submitted, zero lost), the requeue path really
+    fired, and the rejoined replica serves again."""
+    n, window_ms, service_ms = 600, 100.0, 2.0
+    trace = _overload_trace(n, window_ms, per_window=30)
+    cluster = stub_fault_cluster(
+        3, router="least_inflight",
+        breaker=BreakerConfig(failure_threshold=2, cooldown_ms=200.0),
+    )
+    sched = stub_scheduler(t_sla_ms=2_000.0, profile_ewma=0.0)
+    loop = ServingLoop(
+        sched, cluster, dispatch="sync",
+        admission=AdmissionConfig(policy="shed", max_pending=64, max_chunk=32),
+    )
+    kill_at, rejoin_at = 400.0, 900.0
+    fault = {"killed": False, "rejoined": False}
+
+    def on_tick(t, res):
+        if not fault["killed"] and t >= kill_at:
+            cluster.kill_replica(0, reason="soak chaos")
+            cluster.replicas[1].backend.inject_failures(6)
+            fault["killed"] = True
+        if not fault["rejoined"] and t >= rejoin_at:
+            cluster.rejoin(0)
+            fault["rejoined"] = True
+
+    done, metrics = loop.drain_trace(
+        trace, window_ms,
+        tokens_for=lambda i: np.zeros(4, np.int32), n_steps=GEN,
+        on_tick=on_tick,
+        service_model=lambda res: service_ms * res.stats.max_replica_rows,
+    )
+    assert fault["killed"] and fault["rejoined"]
+    # Conservation under faults: every request resolved or rejected, none
+    # lost or double-resolved.
+    assert len(done) + loop.admission.n_rejected == n
+    assert len({c.rid for c in done}) == len(done)
+    assert loop.admission.n_requeued > 0  # losses recovered via requeue
+    # The rejoined replica serves post-rejoin arrivals again.
+    assert any(
+        c.replica == 0 and trace.arrival_ms[c.rid] > rejoin_at for c in done
+    )
+    for replica in cluster.replicas:
+        assert replica.inflight_rows == 0
+    assert metrics is not None and metrics.goodput > 0.0

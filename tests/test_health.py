@@ -1,0 +1,195 @@
+"""Circuit-breaker lifecycle unit tests (repro.serving.health).
+
+The breaker is pure loop-clock state — no processes, no threads — so the
+full closed -> open -> half_open -> closed lifecycle is tested
+deterministically here; the cluster/loop integration rides in
+tests/test_cluster.py.
+"""
+import math
+
+import pytest
+
+from repro.serving.health import BreakerConfig, CircuitBreaker, ReplicaHealth
+
+
+def make(threshold=3, cooldown=100.0, backoff=2.0, max_cooldown=400.0):
+    return CircuitBreaker(
+        BreakerConfig(
+            failure_threshold=threshold,
+            cooldown_ms=cooldown,
+            backoff=backoff,
+            max_cooldown_ms=max_cooldown,
+        )
+    )
+
+
+# -- config validation ---------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {"failure_threshold": 0},
+        {"cooldown_ms": 0.0},
+        {"cooldown_ms": -5.0},
+        {"backoff": 0.5},
+    ],
+)
+def test_config_rejects_bad_values(kw):
+    with pytest.raises(ValueError):
+        BreakerConfig(**kw)
+
+
+# -- closed state --------------------------------------------------------------
+
+
+def test_starts_closed_and_routable():
+    b = make()
+    assert b.state == "closed"
+    assert b.healthy
+    assert b.reason is None
+    assert b.routable(0.0)
+
+
+def test_subthreshold_failures_stay_closed():
+    b = make(threshold=3)
+    b.on_failure(0.0, "err")
+    b.on_failure(1.0, "err")
+    assert b.state == "closed"
+    assert b.consecutive_failures == 2
+    assert b.routable(2.0)
+
+
+def test_success_resets_the_failure_streak():
+    b = make(threshold=3)
+    b.on_failure(0.0, "err")
+    b.on_failure(1.0, "err")
+    b.on_success(2.0)
+    assert b.consecutive_failures == 0
+    # Two more failures still don't reach the threshold of 3.
+    b.on_failure(3.0, "err")
+    b.on_failure(4.0, "err")
+    assert b.state == "closed"
+
+
+# -- tripping open -------------------------------------------------------------
+
+
+def test_consecutive_failures_trip_at_threshold_with_reason():
+    b = make(threshold=3, cooldown=100.0)
+    for t in range(3):
+        b.on_failure(float(t), "oom in decode")
+    assert b.state == "open"
+    assert b.reason == "oom in decode"
+    assert b.open_until_ms == 2.0 + 100.0
+    assert not b.routable(50.0)
+
+
+def test_fatal_failure_trips_immediately():
+    b = make(threshold=3)
+    b.on_failure(10.0, "worker process died", fatal=True)
+    assert b.state == "open"
+    assert b.reason == "worker process died"
+    assert not b.routable(10.0)
+
+
+# -- cooldown -> half-open probe ----------------------------------------------
+
+
+def test_open_blocks_until_cooldown_then_half_opens():
+    b = make(cooldown=100.0)
+    b.trip(0.0, "down")
+    assert not b.routable(99.9)
+    assert b.state == "open"
+    assert b.routable(100.0)
+    assert b.state == "half_open"
+
+
+def test_half_open_admits_exactly_one_probe():
+    b = make(cooldown=100.0)
+    b.trip(0.0, "down")
+    assert b.routable(150.0)  # transitions to half_open
+    # Pure eligibility checks never claim the probe slot...
+    assert b.routable(150.0)
+    assert b.routable(151.0)
+    # ...only an actual dispatch does.
+    b.on_dispatch(151.0)
+    assert not b.routable(152.0)
+
+
+def test_probe_success_closes_and_resets_backoff():
+    b = make(cooldown=100.0, backoff=2.0)
+    b.trip(0.0, "down")
+    assert b.routable(100.0)
+    b.on_dispatch(100.0)
+    b.on_success(120.0)
+    assert b.state == "closed"
+    assert b.reason is None
+    assert b.trips == 0
+    # The next trip starts from the base cooldown again.
+    b.trip(200.0, "down again")
+    assert b.open_until_ms == 200.0 + 100.0
+
+
+def test_probe_failure_reopens_with_backed_off_cooldown():
+    b = make(threshold=3, cooldown=100.0, backoff=2.0)
+    b.trip(0.0, "down")
+    assert b.routable(100.0)
+    b.on_dispatch(100.0)
+    # A single probe failure re-opens (no threshold accumulation).
+    b.on_failure(110.0, "still down")
+    assert b.state == "open"
+    assert b.open_until_ms == 110.0 + 200.0  # cooldown * backoff**1
+
+
+def test_cooldown_backoff_is_capped():
+    b = make(cooldown=100.0, backoff=2.0, max_cooldown=250.0)
+    spans = []
+    for t in [0.0, 1000.0, 2000.0, 3000.0]:
+        b.trip(t, "flap")
+        spans.append(b.open_until_ms - t)
+    assert spans == [100.0, 200.0, 250.0, 250.0]
+
+
+# -- permanent trips (kill) ----------------------------------------------------
+
+
+def test_permanent_trip_never_half_opens():
+    b = make(cooldown=1.0)
+    b.trip(0.0, "killed", permanent=True)
+    assert b.permanently_open
+    assert b.open_until_ms == math.inf
+    assert not b.routable(1e12)
+    # Further failures don't disturb the permanent state.
+    b.on_failure(5.0, "late completion", fatal=True)
+    assert b.permanently_open
+
+
+def test_reset_recovers_a_permanently_open_breaker():
+    b = make()
+    b.trip(0.0, "killed", permanent=True)
+    b.reset()
+    assert b.state == "closed"
+    assert b.reason is None
+    assert b.trips == 0
+    assert b.routable(0.0)
+
+
+# -- drain flag (ReplicaHealth) ------------------------------------------------
+
+
+def test_draining_is_unroutable_regardless_of_breaker_state():
+    h = ReplicaHealth()
+    assert h.routable(0.0)
+    h.draining = True
+    assert not h.routable(0.0)
+    assert h.breaker.state == "closed"  # drain is not a failure
+    h.draining = False
+    assert h.routable(0.0)
+
+
+def test_draining_masks_even_a_half_open_probe():
+    h = ReplicaHealth(CircuitBreaker(BreakerConfig(cooldown_ms=10.0)))
+    h.breaker.trip(0.0, "down")
+    h.draining = True
+    assert not h.routable(50.0)

@@ -1,0 +1,68 @@
+"""Jax-free, picklable stub backends for transport-layer tests.
+
+A spawned transport worker unpickles its backend *factory* and imports
+whatever that factory's module imports — these stubs import only numpy
+and time, so process-transport tests skip the child-side jax import
+entirely (cheap enough for tier-1 CI).
+
+The worker protocol is duck-typed: it needs only ``register`` and
+``run_batch`` (``repro.serving.transport_worker``), so the stubs do not
+subclass :class:`repro.serving.backend.ExecutionBackend`.
+"""
+import time
+
+import numpy as np
+
+
+class StubVariant:
+    """Picklable variant stand-in (the transport only reads ``.name``)."""
+
+    def __init__(self, name: str, quality: float = 50.0):
+        self.name = name
+        self.quality = quality
+
+
+class StubWorkerBackend:
+    """Deterministic echo backend: token ``(i, j)`` is ``batch[i, 0] + j``,
+    so the parent can verify a batch crossed the boundary intact."""
+
+    def __init__(self, delay_s: float = 0.0):
+        self.variants = {}
+        self.delay_s = delay_s
+
+    def register(self, v):
+        self.variants[v.name] = v
+
+    def run_batch(self, name, batch, n_steps):
+        t0 = time.perf_counter()
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        base = np.asarray(batch)[:, :1].astype(np.int32)
+        out = base + np.arange(n_steps, dtype=np.int32)[None, :]
+        return out, (time.perf_counter() - t0) * 1e3
+
+    def generate(self, name, tokens, n_steps):
+        return self.run_batch(name, tokens, n_steps)
+
+
+class SlowWorkerBackend(StubWorkerBackend):
+    """Every batch takes 0.2s — long enough to kill a worker mid-batch."""
+
+    def __init__(self):
+        super().__init__(delay_s=0.2)
+
+
+class HangingWorkerBackend(StubWorkerBackend):
+    """Every batch wedges far past any test timeout (the timeout path)."""
+
+    def __init__(self):
+        super().__init__(delay_s=60.0)
+
+
+class ExplodingWorkerBackend(StubWorkerBackend):
+    """Raises on every batch of the variant named ``"boom"``."""
+
+    def run_batch(self, name, batch, n_steps):
+        if name == "boom":
+            raise ValueError("synthetic execution failure")
+        return super().run_batch(name, batch, n_steps)
