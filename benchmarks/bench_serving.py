@@ -19,7 +19,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, timed, write_results
 from repro.core import residential_trace, university_trace
 from repro.core.duplication import HedgePolicy
 from repro.serving.profiles import ONDEVICE_TIER, lm_zoo_registry
@@ -545,7 +545,132 @@ def _cluster_fault(
     )
 
 
-def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False):
+def _continuous_batching(
+    *, n_requests: int, sla_ms: float = 400.0, seed: int = 0
+) -> int:
+    """Continuous-batching tier (PR 7 tentpole): TTFT + recompile rows.
+
+    One remote variant on a :class:`ContinuousBatchingBackend` (fixed-shape
+    prefill/decode entry points over a block-paged slot cache).  Three rows:
+
+    * ``join_ttft`` — a request joining the persistent decode batch
+      mid-flight gets its first token in a fraction of one full batch's
+      service time (the whole-batch tier's floor: a joiner waits for the
+      batch to finish).
+    * ``overload_ttft`` — the same claim under a sustained 2x overload
+      driven through the stepped serving loop: TTFT p99 of every served
+      request stays under 0.5x one full-batch service time (the PR's
+      acceptance bar).
+    * ``recompiles`` — the zero-post-warmup-recompile invariant: the jit
+      cache count after all traffic equals the count right after warmup.
+
+    Returns the post-warmup compile-count growth (0 = invariant holds) for
+    the ``--check-compiles`` CI gate.
+    """
+    import jax
+
+    from repro.configs import reduced
+    from repro.configs.mdinference_zoo import ServingGeometry
+    from repro.core.network import LognormalNetwork
+    from repro.models import transformer as T
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.backend import OnDeviceBackend
+    from repro.serving.engine import ServingEngine, Variant
+    from repro.serving.loadgen import OverloadArrivals, make_trace
+
+    prompt, gen, window_ms = 8, 8, 100.0
+    service_ms = 6.0
+    capacity_rps = 1e3 / service_ms
+    geo = ServingGeometry(
+        max_len=prompt + gen + 4, prompt_width=prompt, bs_ladder=(1, 2, 4, 8),
+        n_slots=8, page_size=8, max_steps=8,
+    )
+
+    hedge = OnDeviceBackend.from_zoo(max_len=prompt + gen + 4)
+    ondevice = hedge.measure_profile(prompt_len=prompt, gen_tokens=gen, trials=2)
+    engine = ServingEngine(hedge_backend=hedge, continuous=True, geometry=geo)
+    cfg = reduced(
+        "gemma-2b", d_model=64, n_layers=2, n_heads=2, n_kv_heads=1, head_dim=32
+    )
+    engine.register(
+        Variant("remote", cfg, T.init_params(cfg, jax.random.key(seed)), 80.0)
+    )
+    backend = engine.backend
+    registry = engine.measure_profiles(prompt_len=prompt, gen_tokens=gen, trials=2)
+    backend.warmup()
+    compiles_after_warmup = backend.compile_count
+    # Pre-warm the hedge tier at every pow2 batch shape a tick can produce:
+    # its first inline compile otherwise burns real SLA budget mid-race.
+    for N in (1, 2, 4, 8):
+        hedge.run_batch(hedge.hedge_name, np.zeros((N, prompt), np.int32), gen)
+
+    # -- join_ttft: mid-flight join vs one full-batch service time ----------
+    rng = np.random.default_rng(seed)
+    full = rng.integers(0, 256, (geo.n_slots, prompt)).astype(np.int32)
+    backend.generate("remote", full, gen)  # absorb host-side first-call cost
+    _, full_ms = backend.generate("remote", full, gen)
+    h1 = backend.submit_batch("remote", full[: geo.n_slots - 1], gen, sync=False)
+    backend.pump()  # the persistent batch is now mid-decode...
+    backend.pump()
+    h2 = backend.submit_batch("remote", full[-1:], gen, sync=False)
+    join_ttft = float(h2.ttft_wall_ms[0])  # first token already emitted
+    h1.wait()
+    h2.wait()
+    emit(
+        "serving/continuous/join_ttft",
+        join_ttft * 1e3,
+        f"mid-flight join ttft={join_ttft:.2f}ms vs "
+        f"full_batch={full_ms:.2f}ms ratio={join_ttft / full_ms:.3f} "
+        f"(target <0.5: a joiner no longer waits for the batch)",
+    )
+
+    # -- overload_ttft: TTFT p99 under sustained 2x overload ----------------
+    sched = MDInferenceScheduler(
+        registry, ondevice, SchedulerConfig(t_sla_ms=sla_ms, seed=seed)
+    )
+    loop = engine.make_loop(
+        sched, admission=AdmissionConfig(max_chunk=geo.n_slots)
+    )
+    overload = OverloadArrivals(
+        rate_rps=capacity_rps, overload_factor=2.0,
+        overload_start=0.0, overload_stop=1.0,
+    )
+    trace = make_trace(
+        n_requests, overload, LognormalNetwork(80.0, 0.6), seed=seed
+    )
+    prompts = rng.integers(0, 256, (n_requests, prompt))
+    t0 = time.perf_counter()
+    done, metrics = loop.drain_trace(
+        trace, window_ms, tokens_for=lambda i: prompts[i], n_steps=gen,
+        service_model=lambda res: service_ms * res.stats.n_requests,
+    )
+    us = (time.perf_counter() - t0) * 1e6
+    ttfts = np.asarray([c.ttft_ms for c in done if c.ttft_ms is not None])
+    p99 = float(np.percentile(ttfts, 99))
+    emit(
+        "serving/continuous/overload_ttft",
+        us / max(len(done), 1),
+        f"ttft_p99={p99:.2f}ms vs full_batch={full_ms:.2f}ms "
+        f"ratio={p99 / full_ms:.3f} (target <0.5 under 2x overload) "
+        f"joined={len(ttfts)}/{len(done)} "
+        f"recycled={backend.recycled_total}",
+    )
+
+    # -- recompiles: the fixed-shape invariant ------------------------------
+    backend.check_conservation()
+    growth = backend.compile_count - compiles_after_warmup
+    emit(
+        "serving/continuous/recompiles",
+        0.0,
+        f"compile_count={backend.compile_count} "
+        f"post_warmup_growth={growth} (must be 0) "
+        f"joined={backend.joined_total} recycled={backend.recycled_total} "
+        f"conservation=ok",
+    )
+    return growth
+
+
+def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False) -> int:
     reg = lm_zoo_registry(chips=8)
     for p in reg:
         emit(f"serving/zoo/{p.name}", p.mu_ms * 1e3, f"quality={p.accuracy}")
@@ -623,6 +748,15 @@ def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False):
     # and conservation holds (zero lost non-shed requests).
     _cluster_fault(n_requests=240 if smoke else 600, sync=sync)
 
+    # Cross-tick continuous batching (PR 7 tentpole): mid-flight joins get
+    # their first token in a fraction of one full-batch service time, even
+    # under 2x overload, with zero post-warmup recompiles.  Stepped dispatch
+    # is thread-free, so the rows are deterministic with or without --sync.
+    compile_growth = _continuous_batching(n_requests=48 if smoke else 160)
+
+    write_results("serving")
+    return compile_growth
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -631,5 +765,12 @@ if __name__ == "__main__":
     ap.add_argument("--sync", action="store_true",
                     help="serialized-dispatch fallback: no worker threads, "
                     "deterministic rows (used by CI)")
+    ap.add_argument("--check-compiles", action="store_true",
+                    help="exit nonzero on any post-warmup recompile of the "
+                    "continuous tier's fixed-shape entry points (CI gate)")
     args = ap.parse_args()
-    run(smoke=args.smoke, sync=args.sync)
+    growth = run(smoke=args.smoke, sync=args.sync)
+    if args.check_compiles and growth != 0:
+        raise SystemExit(
+            f"continuous tier recompiled after warmup (growth={growth})"
+        )

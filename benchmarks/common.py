@@ -1,11 +1,54 @@
-"""Shared benchmark plumbing: CSV emission in ``name,us_per_call,derived``."""
+"""Shared benchmark plumbing: CSV emission in ``name,us_per_call,derived``.
+
+Besides the CSV line on stdout, every :func:`emit` call accumulates a
+structured row; :func:`write_results` flushes them as
+``results/BENCH_<bench>.json`` with a stable schema::
+
+    {"schema_version": 1, "bench": "serving",
+     "rows": [{"name": ..., "us_per_call": ..., "derived": ...}, ...]}
+
+so CI and downstream tooling can diff benchmark output without parsing
+stdout.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
+from typing import Dict, List
+
+SCHEMA_VERSION = 1
+
+# Rows accumulated by emit() since the last write_results()/reset_results().
+RESULTS: List[Dict] = []
 
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+    RESULTS.append(
+        {"name": name, "us_per_call": float(us_per_call), "derived": derived}
+    )
+
+
+def reset_results():
+    RESULTS.clear()
+
+
+def write_results(bench: str, out_dir: str = "results") -> str:
+    """Write accumulated rows to ``<out_dir>/BENCH_<bench>.json`` and clear
+    the accumulator.  Returns the path written."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "bench": bench,
+        "rows": list(RESULTS),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    reset_results()
+    return path
 
 
 def timed(fn, *args, repeats: int = 3, **kwargs):

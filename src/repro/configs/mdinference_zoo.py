@@ -22,6 +22,8 @@ __all__ = [
     "NASNET_FICTIONAL",
     "HedgeVariantSpec",
     "ONDEVICE_HEDGE",
+    "ServingGeometry",
+    "SERVING_GEOMETRY",
     "paper_zoo",
     "ablation_zoo",
 ]
@@ -86,3 +88,64 @@ class HedgeVariantSpec:
 
 
 ONDEVICE_HEDGE = HedgeVariantSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingGeometry:
+    """Single source of truth for the serving tiers' cache geometry.
+
+    Every shape the execution tiers compile against derives from here, so
+    the batch-size ladder, the paged-cache page pool, and the dense ring
+    caches cannot drift apart:
+
+    * ``max_len`` — the dense tiers' (:class:`repro.serving.backend.JitBackend`
+      / :class:`~repro.serving.backend.OnDeviceBackend`) ring-cache length;
+      the historical hardcoded 256.
+    * ``prompt_width`` — the continuous tier's *fixed* prefill width.  All
+      prompts are right-padded to exactly this many tokens, so one prefill
+      executable per ladder batch size covers every request shape.
+    * ``bs_ladder`` — the power-of-two prefill batch sizes that get a
+      pre-compiled ``prefill_bs{N}`` entry point each.
+    * ``n_slots`` — width of the persistent decode batch (the single
+      fixed-shape ``decode`` executable).
+    * ``page_size`` / ``n_pages`` — the block-paged KV cache: page 0 is the
+      reserved trash page inactive rows write into; ``None`` sizes the pool
+      so every slot can hold a full request
+      (``1 + n_slots * ceil((prompt_width + max_steps) / page_size)``).
+    * ``max_steps`` — per-request decode-step cap on the continuous tier.
+    """
+
+    max_len: int = 256
+    prompt_width: int = 32
+    bs_ladder: tuple[int, ...] = (1, 2, 4, 8)
+    n_slots: int = 8
+    page_size: int = 8
+    n_pages: int | None = None
+    max_steps: int = 32
+
+    def __post_init__(self):
+        if any(n & (n - 1) for n in self.bs_ladder) or not self.bs_ladder:
+            raise ValueError(f"bs_ladder must be powers of two: {self.bs_ladder}")
+        if tuple(sorted(self.bs_ladder)) != tuple(self.bs_ladder):
+            raise ValueError(f"bs_ladder must be sorted: {self.bs_ladder}")
+        if self.prompt_width % self.page_size:
+            raise ValueError(
+                f"prompt_width ({self.prompt_width}) must be a multiple of "
+                f"page_size ({self.page_size})"
+            )
+
+    @property
+    def pages_per_slot(self) -> int:
+        """Worst-case pages one slot can reserve (full prompt + max steps)."""
+        need = self.prompt_width + self.max_steps
+        return -(-need // self.page_size)
+
+    @property
+    def total_pages(self) -> int:
+        """Physical page-pool size: the trash page + every slot full."""
+        if self.n_pages is not None:
+            return self.n_pages
+        return 1 + self.n_slots * self.pages_per_slot
+
+
+SERVING_GEOMETRY = ServingGeometry()

@@ -6,11 +6,13 @@ import jax.numpy as jnp
 
 from repro.models.attention import attention_reference as _attn_ref
 from repro.models.attention import decode_attention as _decode_ref
+from repro.models.attention import paged_decode_attention as _paged_decode_ref
 from repro.models.layers import rms_norm as _rms_ref
 
 __all__ = [
     "flash_attention_ref",
     "decode_attention_ref",
+    "decode_attention_paged_ref",
     "rglru_scan_ref",
     "rms_norm_ref",
 ]
@@ -37,6 +39,22 @@ def decode_attention_ref(q, k_cache, v_cache, slot_pos, pos, *, window=0, scale=
         k_cache.transpose(0, 2, 1, 3),
         v_cache.transpose(0, 2, 1, 3),
         slot_pos,
+        pos,
+        window=window,
+        scale=scale,
+    )
+    return out.reshape(B, NKV, G, D)
+
+
+def decode_attention_paged_ref(q, k_pool, v_pool, page_tables, pos, *,
+                               window=0, scale=None):
+    """q: (B, NKV, G, D); pools: (P, NKV, page, D) — kernel layout."""
+    B, NKV, G, D = q.shape
+    out = _paged_decode_ref(
+        q.reshape(B, 1, NKV * G, D),
+        k_pool.transpose(0, 2, 1, 3),
+        v_pool.transpose(0, 2, 1, 3),
+        page_tables,
         pos,
         window=window,
         scale=scale,

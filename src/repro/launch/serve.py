@@ -73,12 +73,29 @@ def build_engine(
     max_len: int, seed: int = 0, measured_hedge: bool = True,
     dispatch: str = "async", replicas: int = 1, router: str = "round_robin",
     shard_zoo: bool = False, transport: str = "none",
+    geometry=None,
 ) -> ServingEngine:
     hedge = (
         OnDeviceBackend.from_zoo(max_len=max_len, seed=seed)
         if measured_hedge
         else None
     )
+    if geometry is not None:
+        # Continuous-batching remote tier: fixed-shape compiled
+        # prefill/decode entries over a block-paged slot cache; requests
+        # join the persistent decode batch at step boundaries.
+        engine = ServingEngine(
+            max_len=max_len, hedge_backend=hedge, dispatch=dispatch,
+            continuous=True, geometry=geometry,
+        )
+        for name, arch, width, layers, quality in TIERS:
+            cfg = reduced(
+                arch, d_model=width, n_layers=layers,
+                n_heads=4, n_kv_heads=2, head_dim=width // 4,
+            )
+            params = T.init_params(cfg, jax.random.key(seed))
+            engine.register(Variant(name, cfg, params, quality))
+        return engine
     # With --replicas > 1 (or --shard-zoo / --transport) the remote tier
     # becomes a replicated cluster behind the same execution protocol; the
     # hedge tier stays the device-side singleton outside the pool.
@@ -159,10 +176,22 @@ def main(argv=None):
         "or on-device profile samples (sampled)",
     )
     ap.add_argument(
-        "--dispatch", default="async", choices=["async", "sync"],
-        help="dispatch the tiers' batches concurrently (async) or "
-        "serialized (sync, the deterministic fallback)",
+        "--dispatch", default="async", choices=["async", "sync", "stepped"],
+        help="dispatch the tiers' batches concurrently (async), "
+        "serialized (sync, the deterministic fallback), or stepped "
+        "(continuous-batching decode clock; implied by --continuous)",
     )
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve the remote tier with cross-tick continuous "
+                    "batching: fixed-shape compiled prefill/decode entry "
+                    "points (no post-warmup recompiles) over a block-paged "
+                    "slot cache; requests join the persistent decode batch "
+                    "at step boundaries and slots recycle on early "
+                    "resolution")
+    ap.add_argument("--bs-ladder", default="1,2,4,8", metavar="N,N,...",
+                    help="prefill batch-size ladder for --continuous: "
+                    "sorted powers of two; submissions decompose onto "
+                    "these pre-compiled shapes (default 1,2,4,8)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="remote-tier replica count: >1 serves through a "
                     "ClusterBackend pool with load-aware routing")
@@ -207,13 +236,45 @@ def main(argv=None):
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
 
+    geometry = None
+    dispatch = args.dispatch
+    if args.continuous:
+        if args.replicas > 1 or args.shard_zoo or args.transport != "none":
+            ap.error(
+                "--continuous replaces the remote tier with the "
+                "continuous-batching backend; it cannot combine with "
+                "--replicas/--shard-zoo/--transport"
+            )
+        from repro.configs.mdinference_zoo import ServingGeometry
+
+        try:
+            ladder = tuple(int(x) for x in args.bs_ladder.split(","))
+        except ValueError:
+            ap.error(f"--bs-ladder must be comma-separated ints, "
+                     f"got {args.bs_ladder!r}")
+        page = 8
+        prompt_width = -(-args.prompt // page) * page  # round up to pages
+        try:
+            geometry = ServingGeometry(
+                max_len=args.prompt + args.gen + 8,
+                prompt_width=prompt_width,
+                bs_ladder=ladder,
+                n_slots=max(ladder),
+                page_size=page,
+                max_steps=args.gen,
+            )
+        except ValueError as e:
+            ap.error(f"--bs-ladder: {e}")
+        if dispatch == "async":
+            dispatch = "stepped"  # the continuous tier's native clock
+
     measured = args.hedge == "measured"
     print("building + profiling tiers (real execution)...")
     engine = build_engine(
         max_len=args.prompt + args.gen + 8, seed=args.seed,
-        measured_hedge=measured, dispatch=args.dispatch,
+        measured_hedge=measured, dispatch=dispatch,
         replicas=args.replicas, router=args.router, shard_zoo=args.shard_zoo,
-        transport=args.transport,
+        transport=args.transport, geometry=geometry,
     )
     cluster = engine.backend if isinstance(engine.backend, ClusterBackend) else None
     if args.kill_replica_at is not None and cluster is None:
@@ -241,6 +302,27 @@ def main(argv=None):
     else:
         ondevice = registry[int(np.argmin(registry.mu))]
         print(f"  hedge tier (sampled profile): {ondevice.name}")
+
+    compiles_after_warmup = 0
+    if args.continuous:
+        engine.backend.warmup()
+        compiles_after_warmup = engine.backend.compile_count
+        print(
+            f"continuous tier: ladder={geometry.bs_ladder} "
+            f"n_slots={geometry.n_slots} page_size={geometry.page_size} "
+            f"compiled executables={compiles_after_warmup} (fixed from here)"
+        )
+        if measured:
+            # Pre-warm the hedge tier at every pow2 tick shape it can see:
+            # its first inline compile otherwise burns real wall-clock SLA
+            # budget mid-race and spuriously releases hedged slots.
+            N = 1
+            while N <= geometry.n_slots:
+                engine.hedge_backend.run_batch(
+                    engine.hedge_backend.hedge_name,
+                    np.zeros((N, args.prompt), np.int32), args.gen,
+                )
+                N *= 2
 
     sched = MDInferenceScheduler(
         registry, ondevice, SchedulerConfig(t_sla_ms=args.sla, seed=args.seed)
@@ -384,7 +466,7 @@ def main(argv=None):
         )
     print(
         f"\nserved {len(completions)} requests in {time.time()-t_start:.1f}s wall "
-        f"(offered {trace.offered_rps:.1f} rps, dispatch={args.dispatch})\n"
+        f"(offered {trace.offered_rps:.1f} rps, dispatch={dispatch})\n"
         f"aggregate quality : {metrics.aggregate_accuracy:.2f}\n"
         f"SLA attainment    : {np.mean(lats <= args.sla)*100:.1f}%  "
         f"(duplication bounds post-dispatch latency at the SLA; only queue "
@@ -398,6 +480,23 @@ def main(argv=None):
         f"(time-to-schedule mean {metrics.mean_time_to_schedule_ms:.0f}ms)\n"
         f"p50/p99 latency   : {np.percentile(lats,50):.0f}/{np.percentile(lats,99):.0f} ms"
     )
+    if args.continuous:
+        growth = engine.backend.compile_count - compiles_after_warmup
+        ttfts = np.asarray(
+            [c.ttft_ms for c in completions if c.ttft_ms is not None]
+        )
+        ttft_note = (
+            f"ttft p50/p99={np.percentile(ttfts, 50):.1f}/"
+            f"{np.percentile(ttfts, 99):.1f}ms "
+            if ttfts.size
+            else ""
+        )
+        engine.backend.check_conservation()
+        print(
+            f"continuous tier   : joined={engine.backend.joined_total} "
+            f"recycled={engine.backend.recycled_total} {ttft_note}"
+            f"post-warmup recompiles={growth} (conservation ok)"
+        )
     return 0
 
 

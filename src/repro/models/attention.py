@@ -28,7 +28,12 @@ import jax.numpy as jnp
 
 from repro.distributed.api import constrain
 
-__all__ = ["flash_attention", "attention_reference", "decode_attention"]
+__all__ = [
+    "flash_attention",
+    "attention_reference",
+    "decode_attention",
+    "paged_decode_attention",
+]
 
 _NEG_INF = -1e30
 
@@ -313,3 +318,41 @@ def decode_attention(q, k_cache, v_cache, slot_pos, pos, *, window: int = 0, sca
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache)
     return out.reshape(B, 1, NQ, HD).astype(q.dtype)
+
+
+def paged_decode_attention(
+    q, k_pool, v_pool, page_tables, pos, *, window: int = 0, scale=None
+):
+    """Single-step attention over a block-paged KV pool.
+
+    The continuous-batching layout: instead of one contiguous cache per
+    row, each row owns a *page table* into a shared physical pool.  Pages
+    are append-only — the entry at a row's dense index ``i`` (page
+    ``i // page``, offset ``i % page``) holds exactly absolute position
+    ``i`` — so validity is just ``i <= pos`` and no stored slot-position
+    array is needed.  Table entries past a row's reservation point at the
+    trash page (0); their dense indices always exceed ``pos``, so the
+    causal mask keeps them unread.
+
+    Args:
+      q: (B, 1, NQ, HD) query for the new token.
+      k_pool, v_pool: (P, page, NKV, HD) physical page pools.
+      page_tables: (B, NB) int32 page ids per row.
+      pos: (B,) absolute position of each row's query token.
+      window: sliding window (0 = unlimited).
+
+    This is the runtime (pure-jnp) path; the Pallas TPU substrate with the
+    same table-indexed layout is ``repro.kernels.decode_attention.
+    decode_attention_paged_fwd``.
+    """
+    P, page, NKV, HD = k_pool.shape
+    B, NB = page_tables.shape
+    S = NB * page
+    flat = page_tables[:, :, None] * page + jnp.arange(page)[None, None, :]
+    flat = flat.reshape(B, S)  # (B, S) indices into the flattened pool
+    k_dense = k_pool.reshape(P * page, NKV, HD)[flat]  # (B, S, NKV, HD)
+    v_dense = v_pool.reshape(P * page, NKV, HD)[flat]
+    slot_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return decode_attention(
+        q, k_dense, v_dense, slot_pos, pos, window=window, scale=scale
+    )

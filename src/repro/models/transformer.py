@@ -18,7 +18,11 @@ import numpy as np
 
 from repro.distributed.api import constrain
 from repro.models import layers, moe, rglru, xlstm
-from repro.models.attention import decode_attention, flash_attention
+from repro.models.attention import (
+    decode_attention,
+    flash_attention,
+    paged_decode_attention,
+)
 from repro.models.config import ModelConfig
 
 __all__ = [
@@ -28,7 +32,13 @@ __all__ = [
     "loss_fn",
     "init_cache",
     "prefill",
+    "prefill_ragged",
     "decode_step",
+    "init_paged_cache",
+    "graft_prefill",
+    "graft_prefill_batch",
+    "paged_decode_step",
+    "supports_paged_decode",
     "SeqContext",
 ]
 
@@ -185,6 +195,10 @@ class SeqContext:
     positions: jax.Array  # (B, S) int32 absolute positions
     prefix_len: Optional[jax.Array] = None  # (B,) prefix-LM boundary
     decode: bool = False
+    # Block-paged decode (continuous batching): per-row page tables into a
+    # shared physical KV pool.  None => the dense ring-buffer cache path.
+    page_tables: Optional[jax.Array] = None  # (B, NB) int32 page ids
+    page_size: int = 0
 
 
 def _norm(cfg, w, x):
@@ -243,6 +257,29 @@ def _attention(cfg, p, x, ctx: SeqContext, kind: str, cache):
             B, S, nkv, hd
         )
         pos = ctx.positions[:, 0]  # (B,)
+        if ctx.page_tables is not None:
+            # Block-paged decode (continuous batching): rows advance at
+            # *independent* positions, each writing into its own page-table
+            # slot of the shared pool.  The per-row scatter is fine here —
+            # this path serves the single-host continuous tier, where the
+            # pool is unsharded (the lockstep dynamic-update-slice below
+            # exists for the seq-sharded multi-pod caches).  Inactive rows
+            # carry pos=0 and an all-trash table, so their writes land in
+            # the reserved trash page.
+            page = ctx.page_size
+            P = cache["kp"].shape[0]
+            tbl = ctx.page_tables  # (B, NB)
+            flat_idx = (
+                tbl[jnp.arange(B), pos // page] * page + pos % page
+            )  # (B,)
+            kf = cache["kp"].reshape(P * page, nkv, hd).at[flat_idx].set(k[:, 0])
+            vf = cache["vp"].reshape(P * page, nkv, hd).at[flat_idx].set(v[:, 0])
+            kp = kf.reshape(P, page, nkv, hd)
+            vp = vf.reshape(P, page, nkv, hd)
+            out = paged_decode_attention(q, kp, vp, tbl, pos, window=window)
+            new_cache = {"kp": kp, "vp": vp}
+            out = constrain(out.reshape(B, S, nq * hd), "batch", "seq", "heads")
+            return out @ p["wo"], new_cache
         # Aligned decoding: all rows advance in lockstep (continuous batching
         # buckets by position at the engine layer), so the ring-buffer write
         # is one dynamic-update-slice at a shared slot — a per-row scatter
@@ -557,11 +594,13 @@ def _run_stack(cfg, params, x, ctx: SeqContext, cache=None, collect_cache=False)
     return x, new_cache, aux
 
 
-def forward_hidden(cfg, params, batch_inputs, cache=None, decode=False, positions=None):
+def forward_hidden(cfg, params, batch_inputs, cache=None, decode=False, positions=None,
+                   page_tables=None, page_size=0):
     x, pos, prefix_len, _ = _embed_inputs(cfg, params, batch_inputs)
     if positions is not None:
         pos = positions
-    ctx = SeqContext(positions=pos, prefix_len=prefix_len, decode=decode)
+    ctx = SeqContext(positions=pos, prefix_len=prefix_len, decode=decode,
+                     page_tables=page_tables, page_size=page_size)
     x = constrain(x, "batch", "seq_act" if not decode else "seq", None)
     x, new_cache, aux = _run_stack(cfg, params, x, ctx, cache=cache)
     x = _norm(cfg, params["final_norm"], x)
@@ -641,3 +680,196 @@ def decode_step(cfg, params, cache, token, pos):
     )
     logits = _unembed(cfg, params, x)[:, 0]
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Block-paged decode (continuous batching).
+# ---------------------------------------------------------------------------
+def supports_paged_decode(cfg: ModelConfig) -> bool:
+    """Whether the paged continuous-batching path can serve this config.
+
+    Requires an attention-only causal stack without KV-cache quantization:
+    recurrent/xLSTM states are not paged, and the paged layout stores
+    full-precision K/V (the continuous tier's pools are small).
+    """
+    kinds = tuple(cfg.pattern) + tuple(cfg.epilogue)
+    return (
+        cfg.causal
+        and not cfg.kv_cache_quant
+        and all(k in ("attn", "local", "moe") for k in kinds)
+    )
+
+
+def prefill_ragged(cfg, params, batch_inputs, lengths, max_len: int):
+    """Prefill a right-padded batch with per-row prompt lengths.
+
+    Fixed-shape companion to :func:`prefill`: ``tokens`` is always
+    ``(B, max_len)`` wide (right-padded), ``lengths`` gives each row's real
+    prompt length, and the returned logits are gathered at each row's last
+    *real* position.  Causal masking makes right-padding inert — position
+    ``L-1`` never attends positions ``>= L`` — so the logits equal the
+    unpadded prefill's.  Cache entries past a row's length hold pad-token
+    garbage; the paged graft relies on the append-only mask (and subsequent
+    decode writes) to keep it unread.
+    """
+    tokens = batch_inputs["tokens"]
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len)
+    x, cache, _ = forward_hidden(cfg, params, batch_inputs, cache=cache)
+    idx = jnp.clip(lengths - 1, 0, S - 1)
+    x_last = x[jnp.arange(B), idx][:, None]  # (B, 1, D)
+    logits = _unembed(cfg, params, x_last)[:, 0]
+    return cache, logits
+
+
+def _paged_block_cache(cfg, kind, n_pages, page_size, dtype):
+    if kind not in ("attn", "moe", "local"):
+        raise ValueError(
+            f"paged decode supports attention blocks only, got {kind!r}"
+        )
+    return {
+        "kp": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "vp": jnp.zeros((n_pages, page_size, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int):
+    """Physical KV page pools for every attention layer (no batch dim —
+    rows share the pool through their page tables)."""
+    if not supports_paged_decode(cfg):
+        raise ValueError(
+            f"config {cfg.name!r} cannot use the paged decode path "
+            "(needs a causal attention-only stack without kv quant)"
+        )
+    dtype = jnp.dtype(cfg.dtype)
+    periods = tuple(
+        _stack_cache(
+            _paged_block_cache(cfg, k, n_pages, page_size, dtype), cfg.n_periods
+        )
+        for k in cfg.pattern
+    )
+    epilogue = tuple(
+        _paged_block_cache(cfg, k, n_pages, page_size, dtype)
+        for k in cfg.epilogue
+    )
+    return {"periods": periods, "epilogue": epilogue}
+
+
+def graft_prefill(cfg, paged_cache, prefill_cache, row, page_table, page_size: int):
+    """Copy one prefilled row's KV state into its slot's pages.
+
+    ``prefill_cache`` comes from :func:`prefill_ragged` over a cache of
+    exactly the prompt width ``W`` (positions ``0..W-1``, no ring wrap, so
+    dense index == absolute position).  All ``W`` positions are scattered
+    through the page table: positions past the row's reservation land in
+    the trash page, positions between the row's real length and ``W`` are
+    pad garbage that decode overwrites in place before the mask ever
+    exposes them.  Fixed shapes throughout — one compile per prefill batch
+    size.
+    """
+    idx = jnp.arange(prefill_cache_width(prefill_cache))
+    flat_idx = page_table[idx // page_size] * page_size + idx % page_size
+
+    def graft_leaves(pool, pre):
+        # pool: (*lead, P, page, NKV, HD); pre: (*lead, B, W, NKV, HD)
+        def one(pool_leaf, pre_leaf):
+            P, page = pool_leaf.shape[-4], pool_leaf.shape[-3]
+            nkv, hd = pool_leaf.shape[-2], pool_leaf.shape[-1]
+            lead = pool_leaf.shape[:-4]
+            src = jnp.take(pre_leaf, row, axis=len(lead))  # (*lead, W, NKV, HD)
+            flat = pool_leaf.reshape(*lead, P * page, nkv, hd)
+            if lead:
+                flat = flat.at[:, flat_idx].set(src)
+            else:
+                flat = flat.at[flat_idx].set(src)
+            return flat.reshape(*lead, P, page, nkv, hd)
+
+        return one(pool, pre)
+
+    new_periods = tuple(
+        {
+            "kp": graft_leaves(pc["kp"], pf["k"]),
+            "vp": graft_leaves(pc["vp"], pf["v"]),
+        }
+        for pc, pf in zip(paged_cache["periods"], prefill_cache["periods"])
+    )
+    new_epilogue = tuple(
+        {
+            "kp": graft_leaves(pc["kp"], pf["k"]),
+            "vp": graft_leaves(pc["vp"], pf["v"]),
+        }
+        for pc, pf in zip(paged_cache["epilogue"], prefill_cache["epilogue"])
+    )
+    return {"periods": new_periods, "epilogue": new_epilogue}
+
+
+def graft_prefill_batch(cfg, paged_cache, prefill_cache, page_tables,
+                        page_size: int):
+    """Copy *every* prefilled row's KV state into its slot's pages at once.
+
+    Batched companion to :func:`graft_prefill`: ``page_tables`` is
+    ``(B, NB)`` int32 — one table per prefill row — and all ``B * W``
+    positions scatter in a single operation, so joining a chunk costs one
+    dispatch instead of one per row.  Padded ladder rows carry an all-trash
+    table: their writes collapse into the reserved trash page (overlapping
+    writes there are harmless — nothing masked-in ever reads it).
+    """
+    idx = jnp.arange(prefill_cache_width(prefill_cache))
+    flat_idx = (
+        page_tables[:, idx // page_size] * page_size + idx % page_size
+    ).reshape(-1)  # (B*W,) flat pool positions
+
+    def graft_leaves(pool_leaf, pre_leaf):
+        # pool: (*lead, P, page, NKV, HD); pre: (*lead, B, W, NKV, HD)
+        P, page = pool_leaf.shape[-4], pool_leaf.shape[-3]
+        nkv, hd = pool_leaf.shape[-2], pool_leaf.shape[-1]
+        lead = pool_leaf.shape[:-4]
+        src = pre_leaf.reshape(*lead, -1, nkv, hd)  # (*lead, B*W, NKV, HD)
+        flat = pool_leaf.reshape(*lead, P * page, nkv, hd)
+        if lead:
+            flat = flat.at[:, flat_idx].set(src)
+        else:
+            flat = flat.at[flat_idx].set(src)
+        return flat.reshape(*lead, P, page, nkv, hd)
+
+    new_periods = tuple(
+        {
+            "kp": graft_leaves(pc["kp"], pf["k"]),
+            "vp": graft_leaves(pc["vp"], pf["v"]),
+        }
+        for pc, pf in zip(paged_cache["periods"], prefill_cache["periods"])
+    )
+    new_epilogue = tuple(
+        {
+            "kp": graft_leaves(pc["kp"], pf["k"]),
+            "vp": graft_leaves(pc["vp"], pf["v"]),
+        }
+        for pc, pf in zip(paged_cache["epilogue"], prefill_cache["epilogue"])
+    )
+    return {"periods": new_periods, "epilogue": new_epilogue}
+
+
+def prefill_cache_width(prefill_cache) -> int:
+    """Sequence width of a dense prefill cache (its ring length)."""
+    for group in (prefill_cache["periods"], prefill_cache["epilogue"]):
+        for layer in group:
+            if "k" in layer:
+                return layer["k"].shape[-3]
+    raise ValueError("prefill cache has no attention layers")
+
+
+def paged_decode_step(cfg, params, paged_cache, page_tables, token, pos,
+                      page_size: int):
+    """One decode step over the shared page pool.
+
+    token/pos: (B,) int32 — per-row positions (rows need *not* be in
+    lockstep; that is the point).  ``page_tables``: (B, NB) int32.
+    Inactive rows should carry pos=0 and an all-trash table.
+    """
+    inputs = {"tokens": token[:, None]}
+    x, new_cache, _ = forward_hidden(
+        cfg, params, inputs, cache=paged_cache, decode=True,
+        positions=pos[:, None], page_tables=page_tables, page_size=page_size,
+    )
+    logits = _unembed(cfg, params, x)[:, 0]
+    return logits, new_cache

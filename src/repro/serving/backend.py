@@ -28,10 +28,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.mdinference_zoo import ONDEVICE_HEDGE, HedgeVariantSpec
+from repro.configs.mdinference_zoo import (
+    ONDEVICE_HEDGE,
+    SERVING_GEOMETRY,
+    HedgeVariantSpec,
+    ServingGeometry,
+)
 from repro.core.registry import ModelProfile
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.block_cache import BlockPagedSlotCache, NoFreeSlot
 
 __all__ = [
     "Variant",
@@ -39,6 +45,7 @@ __all__ = [
     "ExecutionBackend",
     "JitBackend",
     "OnDeviceBackend",
+    "ContinuousBatchingBackend",
     "build_hedge_variant",
 ]
 
@@ -287,11 +294,16 @@ class ExecutionBackend:
 
 
 class JitBackend(ExecutionBackend):
-    """Per-variant jitted prefill/decode executables (the remote tier)."""
+    """Per-variant jitted prefill/decode executables (the remote tier).
 
-    def __init__(self, max_len: int = 256):
+    ``max_len`` defaults to :data:`~repro.configs.mdinference_zoo.SERVING_GEOMETRY`
+    — the zoo recipe is the single source of truth for cache geometry across
+    all tiers (the historical hardcoded 256 lives there now).
+    """
+
+    def __init__(self, max_len: Optional[int] = None):
         super().__init__()
-        self.max_len = max_len
+        self.max_len = SERVING_GEOMETRY.max_len if max_len is None else max_len
         self._prefill = {}
         self._decode = {}
 
@@ -348,7 +360,7 @@ class OnDeviceBackend(JitBackend):
     :meth:`repro.serving.scheduler.MDInferenceScheduler.resolve_chunk`.
     """
 
-    def __init__(self, variant: Variant, max_len: int = 256):
+    def __init__(self, variant: Variant, max_len: Optional[int] = None):
         super().__init__(max_len)
         super().register(variant)
         self.hedge_name = variant.name
@@ -356,7 +368,7 @@ class OnDeviceBackend(JitBackend):
     @classmethod
     def from_zoo(
         cls,
-        max_len: int = 256,
+        max_len: Optional[int] = None,
         seed: int = 0,
         spec: HedgeVariantSpec = ONDEVICE_HEDGE,
     ) -> "OnDeviceBackend":
@@ -391,3 +403,416 @@ class OnDeviceBackend(JitBackend):
         return super().measure_profile(
             self.hedge_name if name is None else name, *args, **kwargs
         )
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching.
+# ---------------------------------------------------------------------------
+class _ContinuousBatchHandle(BatchHandle):
+    """Handle over rows living inside the persistent decode batch.
+
+    Rows complete *individually* — each occupies a slot of the continuous
+    batch until it emits ``n_steps`` tokens (or is released early via
+    :meth:`release_rows`: hedge win / cancel).  :meth:`poll` is passive;
+    :meth:`wait` pumps the backend's decode loop until every row is done.
+
+    ``ttft_wall_ms[i]`` is row *i*'s time-to-first-token: prefill + graft
+    latency from submit, stamped the moment its first token exists — the
+    quantity continuous batching exists to shrink (a joining request no
+    longer waits for the in-flight batch to finish).
+    """
+
+    def __init__(self, backend, name: str, n_rows: int, n_steps: int):
+        super().__init__(name, n_rows)
+        self._backend = backend
+        self.n_steps = n_steps
+        self.row_slots: list = [None] * n_rows  # slot index while in-flight
+        self.emitted: list = [[] for _ in range(n_rows)]
+        self.done_rows = [False] * n_rows
+        self.released_rows: Dict[int, str] = {}  # row -> release reason
+        self.ttft_wall_ms: list = [None] * n_rows
+        self._wall_ms: Optional[float] = None
+
+    @property
+    def all_done(self) -> bool:
+        return all(self.done_rows)
+
+    def poll(self) -> bool:
+        return self.all_done
+
+    def result(self) -> np.ndarray:
+        out = np.zeros((self.n_rows, self.n_steps), dtype=np.int32)
+        for i, toks in enumerate(self.emitted):
+            if toks:
+                out[i, : len(toks)] = toks[: self.n_steps]
+        return out
+
+    def wait(self, timeout=None):
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while not self.all_done:
+            if deadline is not None and time.perf_counter() > deadline:
+                raise TimeoutError(
+                    f"continuous batch on {self.name!r} unfinished "
+                    f"after {timeout}s"
+                )
+            if not self._backend.pump(self.name):
+                raise RuntimeError(
+                    f"continuous batch on {self.name!r} stalled: "
+                    "no active slots but rows incomplete"
+                )
+        assert self._wall_ms is not None
+        return self.result(), self._wall_ms
+
+    def release_rows(self, rows, reason: str) -> None:
+        """Free the slots of still-running rows early (hedge win / cancel).
+
+        The freed pages return to the pool immediately — the next join
+        reuses them.  Released rows keep whatever tokens they emitted."""
+        self._backend._release_handle_rows(self, rows, reason)
+
+
+@dataclasses.dataclass
+class _SlotRuntime:
+    """Host-side state of one occupied decode slot."""
+
+    handle: _ContinuousBatchHandle
+    row: int  # row index within the handle
+    tok: int  # last emitted token (next decode input)
+    pos: int  # its absolute position (== tokens fed so far)
+
+
+class _ContinuousEngine:
+    """Per-variant compiled entry points + slot bookkeeping."""
+
+    def __init__(self, variant: Variant, geometry: ServingGeometry):
+        cfg = variant.cfg
+        if not T.supports_paged_decode(cfg):
+            raise ValueError(
+                f"variant {variant.name!r} cannot run on the continuous "
+                "tier (needs a causal attention-only stack without kv "
+                "quantization)"
+            )
+        self.variant = variant
+        self.geometry = geometry
+        g = geometry
+        self.cache_mgr = BlockPagedSlotCache(
+            g.n_slots, g.total_pages, g.page_size, g.pages_per_slot
+        )
+        self.pool = T.init_paged_cache(cfg, g.total_pages, g.page_size)
+        self.slot_rt: Dict[int, _SlotRuntime] = {}
+        self.warmed = False
+
+        # The fixed-shape entry points.  ``prefill`` is one jit object whose
+        # cache holds exactly one entry per ladder batch size after warmup;
+        # ``decode`` is a single (n_slots)-shaped executable.  No request
+        # shape outside the ladder ever reaches XLA.
+        @jax.jit
+        def prefill_fn(params, tokens, lengths):
+            cache, logits = T.prefill_ragged(
+                cfg, params, {"tokens": tokens}, lengths,
+                max_len=g.prompt_width,
+            )
+            return cache, jnp.argmax(logits, -1).astype(jnp.int32)
+
+        @jax.jit
+        def graft_fn(pool, prefill_cache, tables):
+            # Batched: all rows of the chunk graft in one dispatch (one
+            # compile per ladder batch size, like prefill).  Padded rows
+            # carry an all-trash table.
+            return T.graft_prefill_batch(
+                cfg, pool, prefill_cache, tables, g.page_size
+            )
+
+        @jax.jit
+        def decode_fn(params, pool, tables, token, pos):
+            logits, pool = T.paged_decode_step(
+                cfg, params, pool, tables, token, pos, g.page_size
+            )
+            return jnp.argmax(logits, -1).astype(jnp.int32), pool
+
+        self.prefill_fn = prefill_fn
+        self.graft_fn = graft_fn
+        self.decode_fn = decode_fn
+
+    @property
+    def compile_count(self) -> int:
+        return sum(
+            fn._cache_size()
+            for fn in (self.prefill_fn, self.graft_fn, self.decode_fn)
+        )
+
+
+class ContinuousBatchingBackend(ExecutionBackend):
+    """Cross-tick continuous batching behind fixed-shape compiled entries.
+
+    The phase split: **prefill** runs out-of-band at submit time on one of
+    the pre-compiled per-batch-size entry points (``bs_ladder`` powers of
+    two, partial chunks padded with masked rows), the resulting KV state is
+    **grafted** into a free slot of the block-paged pool, and the request
+    then rides the single persistent fixed-shape **decode** executable —
+    joining the in-flight batch at the next step boundary instead of
+    waiting for it to finish.  Slots recycle the moment a row resolves
+    (``n_steps`` reached, hedge win, cancel), so the decode batch composition
+    changes every step while its *shape* never does: after :meth:`warmup`,
+    zero recompiles (assert via :attr:`compile_count`).
+
+    Dispatch modes: ``submit_batch(sync=True)`` drives the engine inline to
+    completion; ``sync=False`` is **stepped** — prefill + graft happen at
+    submit (stamping per-row TTFT), decode advances one step per
+    :meth:`pump` call.  No worker threads: deterministic under CI, and the
+    serving loop's ``poll()`` becomes the step clock.
+    """
+
+    # The serving loop skips its power-of-two row padding: submissions are
+    # decomposed onto the bs ladder here, so loop-side padding would just
+    # burn decode slots on phantom rows.
+    pads_internally = True
+
+    def __init__(self, geometry: ServingGeometry = SERVING_GEOMETRY):
+        super().__init__()
+        self.geometry = geometry
+        self._engines: Dict[str, _ContinuousEngine] = {}
+
+    # -- registration / warmup ------------------------------------------------
+    def register(self, v: Variant) -> None:
+        self.variants[v.name] = v
+        self._engines[v.name] = _ContinuousEngine(v, self.geometry)
+
+    def warmup(self, name: Optional[str] = None) -> None:
+        """Compile every fixed-shape entry point (idempotent).
+
+        One prefill + graft per ladder batch size, one decode step.  After
+        this, :attr:`compile_count` must never grow — the regression gate
+        CI asserts."""
+        names = [name] if name is not None else list(self._engines)
+        for nm in names:
+            eng = self._engines[nm]
+            if eng.warmed:
+                continue
+            g = self.geometry
+            params = eng.variant.params
+            for N in g.bs_ladder:
+                toks = jnp.zeros((N, g.prompt_width), jnp.int32)
+                lens = jnp.full((N,), g.prompt_width, jnp.int32)
+                pcache, _ = eng.prefill_fn(params, toks, lens)
+                # Graft through all-trash tables: every write lands in the
+                # reserved trash page, so live slots are untouched.
+                trash_tables = jnp.zeros((N, g.pages_per_slot), jnp.int32)
+                eng.pool = eng.graft_fn(eng.pool, pcache, trash_tables)
+            tables = jnp.zeros(
+                (g.n_slots, g.pages_per_slot), jnp.int32
+            )
+            token = jnp.zeros((g.n_slots,), jnp.int32)
+            pos = jnp.zeros((g.n_slots,), jnp.int32)
+            _, eng.pool = eng.decode_fn(params, eng.pool, tables, token, pos)
+            jax.block_until_ready(eng.pool)
+            eng.warmed = True
+
+    @property
+    def compile_count(self) -> int:
+        """Total XLA executables across every fixed-shape entry point.
+
+        Constant after :meth:`warmup` — the 'zero post-warmup recompiles'
+        counter the bench and CI gate assert on."""
+        return sum(e.compile_count for e in self._engines.values())
+
+    @property
+    def joined_total(self) -> int:
+        """Requests grafted into the continuous batch (lifetime)."""
+        return sum(e.cache_mgr.grafted_total for e in self._engines.values())
+
+    @property
+    def recycled_total(self) -> int:
+        """Slots freed back to the pool (lifetime, all release reasons)."""
+        return sum(e.cache_mgr.freed_total for e in self._engines.values())
+
+    def slot_stats(self, name: str) -> Dict[str, int]:
+        return self._engines[name].cache_mgr.stats()
+
+    def check_conservation(self) -> None:
+        for eng in self._engines.values():
+            eng.cache_mgr.check_conservation()
+
+    # -- submission -----------------------------------------------------------
+    def _ladder_chunks(self, n: int):
+        """Decompose ``n`` rows into ladder batch sizes (largest-first).
+
+        Remainders below the smallest rung are padded up to it with masked
+        rows — never a new shape."""
+        ladder = self.geometry.bs_ladder
+        out = []
+        left = n
+        while left > 0:
+            fit = [N for N in ladder if N <= left]
+            N = max(fit) if fit else ladder[0]
+            out.append((N, min(N, left)))  # (padded size, real rows)
+            left -= min(N, left)
+        return out
+
+    def _acquire_slot(self, eng: _ContinuousEngine, prompt_len: int,
+                      n_steps: int):
+        """Claim a slot + pages, pumping the decode loop until one frees."""
+        while True:
+            try:
+                return eng.cache_mgr.begin_prefill(prompt_len, n_steps)
+            except NoFreeSlot:
+                if not eng.slot_rt:
+                    raise  # nothing in flight can ever free capacity
+                self._pump_engine(eng)
+
+    def submit_batch(self, name, batch, n_steps, *, sync: bool = False):
+        """Join ``batch`` rows into the continuous decode batch.
+
+        ``sync=True`` runs the engine inline until every row completes.
+        ``sync=False`` ('stepped'): prefill + graft happen now — TTFT is
+        paid immediately, not at batch end — and decode advances via
+        :meth:`pump` (the serving loop's ``poll()`` drives it)."""
+        g = self.geometry
+        eng = self._engines[name]
+        batch = np.asarray(batch, dtype=np.int32)
+        B, S = batch.shape
+        if S > g.prompt_width:
+            raise ValueError(
+                f"prompt width {S} exceeds ServingGeometry.prompt_width "
+                f"({g.prompt_width})"
+            )
+        n_steps = int(n_steps)
+        if n_steps > g.max_steps:
+            raise ValueError(
+                f"n_steps {n_steps} exceeds ServingGeometry.max_steps "
+                f"({g.max_steps})"
+            )
+        self.warmup(name)
+        self._note_dispatch(B)
+        handle = _ContinuousBatchHandle(self, name, B, max(n_steps, 0))
+        if n_steps <= 0:
+            for i in range(B):
+                handle.done_rows[i] = True
+            self._finalize_handle(handle)
+            return handle
+
+        params = eng.variant.params
+        wide = np.zeros((B, g.prompt_width), dtype=np.int32)
+        wide[:, :S] = batch
+        row0 = 0
+        for N, n_real in self._ladder_chunks(B):
+            chunk = np.zeros((N, g.prompt_width), dtype=np.int32)
+            chunk[:n_real] = wide[row0 : row0 + n_real]
+            lengths = np.full((N,), S, dtype=np.int32)
+            slots = [
+                self._acquire_slot(eng, S, n_steps) for _ in range(n_real)
+            ]
+            pcache, first = eng.prefill_fn(
+                params, jnp.asarray(chunk), jnp.asarray(lengths)
+            )
+            first = np.asarray(first)
+            # One batched graft for the whole chunk: real rows through
+            # their slots' tables, padded rows through all-trash tables.
+            tables = np.zeros((N, g.pages_per_slot), dtype=np.int32)
+            for r, slot in enumerate(slots):
+                tables[r] = eng.cache_mgr.page_table(slot.index)
+            eng.pool = eng.graft_fn(eng.pool, pcache, jnp.asarray(tables))
+            for r, slot in enumerate(slots):
+                row = row0 + r
+                eng.cache_mgr.commit_graft(slot.index)
+                tok = int(first[r])
+                handle.emitted[row].append(tok)
+                handle.ttft_wall_ms[row] = (
+                    time.perf_counter() * 1e3 - handle.dispatch_wall_ms
+                )
+                if n_steps == 1:
+                    eng.slot_rt[slot.index] = _SlotRuntime(handle, row, tok, S)
+                    self._retire_slot(eng, slot.index, "resolved")
+                else:
+                    handle.row_slots[row] = slot.index
+                    eng.slot_rt[slot.index] = _SlotRuntime(handle, row, tok, S)
+            row0 += n_real
+        if sync:
+            handle.wait()
+        return handle
+
+    # -- the decode loop ------------------------------------------------------
+    def pump(self, name: Optional[str] = None) -> bool:
+        """Advance the persistent decode batch one step boundary.
+
+        Returns True if any engine had active slots to step.  This is the
+        continuous tier's clock: the serving loop calls it from ``poll()``,
+        and :meth:`_ContinuousBatchHandle.wait` spins it."""
+        engines = (
+            [self._engines[name]] if name is not None
+            else list(self._engines.values())
+        )
+        advanced = False
+        for eng in engines:
+            advanced |= self._pump_engine(eng)
+        return advanced
+
+    def _pump_engine(self, eng: _ContinuousEngine) -> bool:
+        if not eng.slot_rt:
+            return False
+        g = self.geometry
+        token = np.zeros((g.n_slots,), dtype=np.int32)
+        pos = np.zeros((g.n_slots,), dtype=np.int32)
+        for s, rt in eng.slot_rt.items():
+            token[s] = rt.tok
+            pos[s] = rt.pos
+        tables = eng.cache_mgr.page_tables()
+        next_tok, eng.pool = eng.decode_fn(
+            eng.variant.params,
+            eng.pool,
+            jnp.asarray(tables),
+            jnp.asarray(token),
+            jnp.asarray(pos),
+        )
+        next_tok = np.asarray(next_tok)
+        for s in list(eng.slot_rt):
+            rt = eng.slot_rt[s]
+            rt.tok = int(next_tok[s])
+            rt.pos += 1
+            rt.handle.emitted[rt.row].append(rt.tok)
+            if len(rt.handle.emitted[rt.row]) >= rt.handle.n_steps:
+                self._retire_slot(eng, s, "resolved")
+        return True
+
+    # -- retirement / early release -------------------------------------------
+    def _retire_slot(self, eng: _ContinuousEngine, slot: int,
+                     reason: str) -> None:
+        rt = eng.slot_rt.pop(slot)
+        eng.cache_mgr.release(slot, reason)
+        rt.handle.row_slots[rt.row] = None
+        rt.handle.done_rows[rt.row] = True
+        if rt.handle.all_done:
+            self._finalize_handle(rt.handle)
+
+    def _release_handle_rows(self, handle: _ContinuousBatchHandle, rows,
+                             reason: str) -> None:
+        eng = self._engines[handle.name]
+        for row in rows:
+            if handle.done_rows[row]:
+                continue
+            slot = handle.row_slots[row]
+            handle.released_rows[row] = reason
+            if slot is not None:
+                self._retire_slot(eng, slot, reason)
+            else:
+                handle.done_rows[row] = True
+                if handle.all_done:
+                    self._finalize_handle(handle)
+
+    def _finalize_handle(self, handle: _ContinuousBatchHandle) -> None:
+        if handle._wall_ms is not None:
+            return
+        handle.done_wall_ms = time.perf_counter() * 1e3
+        handle._wall_ms = handle.done_wall_ms - handle.dispatch_wall_ms
+        self._note_done(handle.n_rows, handle._wall_ms)
+
+    # -- ExecutionBackend protocol --------------------------------------------
+    def generate(self, name, tokens, n_steps):
+        handle = self.submit_batch(name, tokens, n_steps, sync=True)
+        return handle.result(), handle._wall_ms
+
+    def run_batch(self, name, batch, n_steps):
+        # Fixed-shape entries make the base per-(shape, n_steps) warm-once
+        # bookkeeping unnecessary: one warmup covers every request shape.
+        self.warmup(name)
+        return self.generate(name, batch, n_steps)

@@ -38,15 +38,33 @@ __all__ = ["Variant", "ServingEngine", "QueuedRequest", "CompletedRequest"]
 class ServingEngine:
     def __init__(
         self,
-        max_len: int = 256,
+        max_len: Optional[int] = None,
         backend: Optional[ExecutionBackend] = None,
         hedge_backend: Optional[OnDeviceBackend] = None,
         dispatch: str = "sync",
+        continuous: bool = False,
+        geometry=None,
     ):
         # The engine is the *compatibility* surface, so it defaults to the
         # serialized reference behavior legacy callers measured against;
         # the new API (ServingLoop) defaults to async dispatch.
-        self.backend = backend if backend is not None else JitBackend(max_len)
+        # ``continuous=True`` swaps the remote tier for the
+        # continuous-batching backend (fixed-shape compiled entries,
+        # block-paged slot cache) and defaults dispatch to "stepped";
+        # ``geometry`` (a ServingGeometry) then sizes its ladder and pool.
+        if backend is None:
+            if continuous:
+                from repro.configs.mdinference_zoo import SERVING_GEOMETRY
+                from repro.serving.backend import ContinuousBatchingBackend
+
+                backend = ContinuousBatchingBackend(
+                    SERVING_GEOMETRY if geometry is None else geometry
+                )
+                if dispatch == "sync":
+                    dispatch = "stepped"
+            else:
+                backend = JitBackend(max_len)
+        self.backend = backend
         self.hedge_backend = hedge_backend
         self.dispatch = dispatch
 

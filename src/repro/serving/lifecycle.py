@@ -114,6 +114,11 @@ class CompletedRequest:
     # queue depth in rows, this batch included, at dispatch.
     replica: Optional[int] = None
     replica_inflight: Optional[int] = None
+    # Continuous-batching tier: wall time from dispatch to this row's first
+    # token (prefill + graft into the persistent decode batch).  None on
+    # the classic whole-batch tiers, where no first token exists before
+    # batch end.
+    ttft_ms: Optional[float] = None
 
 
 class InferenceFuture:

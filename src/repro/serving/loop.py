@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -65,10 +66,15 @@ __all__ = ["ServingLoop", "TickResult", "TickStats"]
 _DEGRADE_EXEC_FLOOR_MS = 0.1  # matches the scheduler's sampled-exec floor
 
 
-def _pad_batch(requests, rows_idx) -> Tuple[np.ndarray, int]:
-    """Right-pad a group's prompts into one (pow2-rows, width) batch."""
+def _pad_batch(requests, rows_idx, pad_rows: bool = True) -> Tuple[np.ndarray, int]:
+    """Right-pad a group's prompts into one (pow2-rows, width) batch.
+
+    ``pad_rows=False`` skips the power-of-two row padding — the
+    continuous-batching backend decomposes row counts onto its own ladder
+    internally, so loop-side padding would just burn decode slots."""
     width = max(len(requests[i].tokens) for i in rows_idx)
-    batch = np.zeros((pad_to_pow2(len(rows_idx)), width), dtype=np.int32)
+    n_rows = pad_to_pow2(len(rows_idx)) if pad_rows else len(rows_idx)
+    batch = np.zeros((n_rows, width), dtype=np.int32)
     for row, i in enumerate(rows_idx):
         t = np.asarray(requests[i].tokens, dtype=np.int32)
         batch[row, : len(t)] = t
@@ -123,6 +129,14 @@ class TickStats:
     # Rows dispatched per cluster replica this tick (empty: unclustered
     # backend — every remote row then counts as one replica's work).
     replica_rows: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # Continuous-batching accounting (zero on classic whole-batch tiers):
+    # requests grafted into the persistent decode batch since the last
+    # collection, slots recycled back to the pool since the last
+    # collection, and the backend's *absolute* compiled-executable count —
+    # constant after warmup is the zero-recompile invariant CI gates on.
+    n_joined: int = 0
+    n_recycled: int = 0
+    compile_count: int = 0
 
     @property
     def serialized_wall_ms(self) -> float:
@@ -217,13 +231,20 @@ class ServingLoop:
         dispatch: str = "async",
         admission: Optional[AdmissionConfig | AdmissionQueue] = None,
     ):
-        if dispatch not in ("async", "sync"):
-            raise ValueError(f"dispatch must be 'async' or 'sync', got {dispatch!r}")
+        if dispatch not in ("async", "sync", "stepped"):
+            raise ValueError(
+                "dispatch must be 'async', 'sync' or 'stepped', "
+                f"got {dispatch!r}"
+            )
         self.scheduler = scheduler
         self.backend = backend
         self.hedge_backend = hedge_backend
         self.dispatch = dispatch
         self.now_ms = 0.0
+        # Continuous-batching counters seen at the last collection (for the
+        # per-tick n_joined / n_recycled deltas in TickStats).
+        self._joined_seen = getattr(backend, "joined_total", 0)
+        self._recycled_seen = getattr(backend, "recycled_total", 0)
         if admission is None:
             admission = AdmissionConfig()
         self.admission = (
@@ -384,7 +405,13 @@ class ServingLoop:
                     )
                 )
             return None
+        # Dispatch modes: "sync" runs everything inline; "async" overlaps
+        # tiers on worker threads; "stepped" is the continuous-batching
+        # mode — remote rows join the persistent decode batch (prefill +
+        # graft at submit, decode advanced by poll()'s pump), thread-free
+        # and deterministic, while the hedge tier stays inline.
         sync = self.dispatch == "sync"
+        hedge_sync = self.dispatch in ("sync", "stepped")
 
         decision = None
         t_sla: object = self.scheduler.cfg.t_sla_ms
@@ -421,11 +448,12 @@ class ServingLoop:
             # across its hosting replicas (one routed sub-batch per
             # replica the group can spread over), so several replicas run
             # concurrently within one tick.
+            pad_rows = not getattr(self.backend, "pads_internally", False)
             for m in np.unique(decision.model_index):
                 rows = np.flatnonzero(decision.model_index == m)
                 name = self.scheduler.names[int(m)]
                 for part in self._fan_out(name, rows):
-                    gbatch, steps = _pad_batch(requests, part)
+                    gbatch, steps = _pad_batch(requests, part, pad_rows=pad_rows)
                     try:
                         handle = self.backend.submit_batch(
                             name, gbatch, steps, sync=sync
@@ -448,7 +476,7 @@ class ServingLoop:
             if self.hedge_backend is not None and hedged_rows.size > 0:
                 hbatch, hsteps = _pad_batch(requests, hedged_rows)
                 hedge_handle = self.hedge_backend.submit_hedge(
-                    hbatch, hsteps, sync=sync
+                    hbatch, hsteps, sync=hedge_sync
                 )
 
         # Overload-degraded rows: the on-device tier alone answers — no
@@ -464,7 +492,7 @@ class ServingLoop:
             if self.hedge_backend is not None:
                 dbatch, dsteps = _pad_batch(dreqs, range(len(dreqs)))
                 degrade_handle = self.hedge_backend.submit_hedge(
-                    dbatch, dsteps, sync=sync
+                    dbatch, dsteps, sync=hedge_sync
                 )
 
         for i, f in enumerate(batch):
@@ -503,14 +531,63 @@ class ServingLoop:
     def poll(self) -> List[TickResult]:
         """Resolve every in-flight tick whose batches all finished.
 
-        Never blocks: ticks with unfinished batches stay in flight.
+        Never blocks.  On a continuous-batching backend this is also the
+        decode clock: each poll advances the persistent decode batch one
+        step boundary (``pump``), then releases the slots of hedged rows
+        whose race the duplicate has already won — their pages go back to
+        the pool *now*, not at batch end.
         """
+        pump = getattr(self.backend, "pump", None)
+        if pump is not None:
+            pump()
+        for t in self._inflight:
+            self._release_hedge_wins(t)
         # Evaluate poll() once per tick: a batch finishing between two
         # evaluations must land in exactly one of the two lists.
         ready = {id(t): t.poll() for t in self._inflight}
         done = [t for t in self._inflight if ready[id(t)]]
         self._inflight = [t for t in self._inflight if not ready[id(t)]]
         return [self._collect(t) for t in done]
+
+    def _release_hedge_wins(self, tick: _InflightTick) -> None:
+        """Recycle slots of hedged rows whose race is already decided.
+
+        Once the on-device duplicate has finished, a hedged row still
+        decoding remotely whose elapsed wall time has exhausted its SLA
+        budget (``t_sla - queue_wait - t_nw``) can never resolve remote-won
+        — the duplication rule (:func:`repro.core.duplication.resolve_duplication`)
+        will pick the duplicate regardless of when the remote leg lands.
+        Releasing the slot *now* frees its pages for the next join instead
+        of carrying a dead row to ``n_steps``.  Inert on handles without
+        per-row release (the classic whole-batch tiers)."""
+        if tick.hedge_handle is None or not tick.hedge_handle.poll():
+            return
+        if tick.decision is None:
+            return
+        now_wall = time.perf_counter() * 1e3
+        for _, rows, handle in tick.groups:
+            release = getattr(handle, "release_rows", None)
+            if release is None:
+                continue
+            elapsed = now_wall - handle.dispatch_wall_ms
+            stale = []
+            for row, i in enumerate(rows):
+                if not tick.decision.hedged[i] or handle.done_rows[row]:
+                    continue
+                sla_i = (
+                    float(tick.t_sla)
+                    if np.isscalar(tick.t_sla)
+                    else float(np.asarray(tick.t_sla)[i])
+                )
+                budget = (
+                    sla_i
+                    - tick.queue_wait[i]
+                    - tick.requests[i].t_nw_actual_ms
+                )
+                if elapsed > budget:
+                    stale.append(row)
+            if stale:
+                release(stale, "hedge_win")
 
     def drain(self) -> List[TickResult]:
         """Block until every in-flight tick resolves; returns their results."""
@@ -558,6 +635,11 @@ class ServingLoop:
         n = len(requests)
         exec_ms = np.empty(n)
         lost = np.zeros(n, dtype=bool)  # rows whose remote batch was lost
+        # Continuous-batching bookkeeping: rows released early from the
+        # persistent decode batch (hedge win / cancel — their slot was
+        # recycled before n_steps), and per-row time-to-first-token.
+        released = np.zeros(n, dtype=bool)
+        ttft = np.full(n, np.nan)
         gen_tokens: List[Optional[np.ndarray]] = [None] * n
         remote_wall_sum = 0.0
         for m, rows, handle in tick.groups:
@@ -578,8 +660,18 @@ class ServingLoop:
                 continue
             remote_wall_sum += wall_ms
             exec_ms[rows] = wall_ms
+            rel = getattr(handle, "released_rows", None)
+            row_ttft = getattr(handle, "ttft_wall_ms", None)
             for row, i in enumerate(rows):
                 gen_tokens[i] = out[row, : requests[i].n_steps]
+                if row_ttft is not None and row_ttft[row] is not None:
+                    ttft[i] = row_ttft[row]
+                if rel and row in rel:
+                    # The slot was recycled before n_steps: the remote leg
+                    # never produced a full answer.  exec=inf routes the
+                    # race to the duplicate without marking the row lost.
+                    released[i] = True
+                    exec_ms[i] = np.inf
             self._note_replica(handle.replica, ok=True)
 
         completions: List[CompletedRequest] = []
@@ -589,17 +681,23 @@ class ServingLoop:
         names = self.scheduler.names
         requeue: List[InferenceFuture] = []
         if n:
-            # Lost batches have no honest wall time: fold only surviving
-            # rows into the live profiles (the no-failure path keeps the
-            # exact pre-fault call, preserving the rng/EWMA stream the
-            # byte-identity regression pins).
-            if lost.any():
-                if not lost.all():
+            # Lost batches and early-released rows have no honest wall
+            # time: fold only surviving rows into the live profiles (the
+            # no-failure path keeps the exact pre-fault call, preserving
+            # the rng/EWMA stream the byte-identity regression pins).
+            dead = lost | released
+            if dead.any():
+                if not dead.all():
                     self.scheduler.observe_batch(
-                        decision.model_index[~lost], exec_ms[~lost]
+                        decision.model_index[~dead], exec_ms[~dead]
                     )
             else:
                 self.scheduler.observe_batch(decision.model_index, exec_ms)
+            joined = ~np.isnan(ttft)
+            if joined.any():
+                self.scheduler.observe_join(
+                    decision.model_index[joined], ttft[joined]
+                )
 
             remote_ms = (
                 tick.queue_wait
@@ -672,6 +770,7 @@ class ServingLoop:
                     ),
                     replica=tick.row_handles[i].replica,
                     replica_inflight=tick.row_handles[i].inflight_at_dispatch,
+                    ttft_ms=None if np.isnan(ttft[i]) else float(ttft[i]),
                 )
                 f._mark_resolved(c)
                 if f.state is RequestState.RESOLVED:
@@ -723,6 +822,18 @@ class ServingLoop:
                 replica_inflight=_replica_inflight_array(completions),
             )
 
+        # Continuous-batching deltas since the last collection (global to
+        # the backend, so overlapping stepped ticks never double-count).
+        n_joined = n_recycled = 0
+        joined_now = getattr(self.backend, "joined_total", None)
+        if joined_now is not None:
+            n_joined = int(joined_now - self._joined_seen)
+            self._joined_seen = joined_now
+        recycled_now = getattr(self.backend, "recycled_total", None)
+        if recycled_now is not None:
+            n_recycled = int(recycled_now - self._recycled_seen)
+            self._recycled_seen = recycled_now
+
         replica_rows: Dict[int, int] = {}
         for _, rows, handle in tick.groups:
             if handle.replica is not None:
@@ -765,6 +876,9 @@ class ServingLoop:
             n_lost=int(lost.sum()),
             n_requeued=n_requeued,
             replica_rows=replica_rows,
+            n_joined=n_joined,
+            n_recycled=n_recycled,
+            compile_count=int(getattr(self.backend, "compile_count", 0)),
         )
         return TickResult(completions=completions, metrics=metrics, stats=stats)
 

@@ -180,6 +180,15 @@ class MDInferenceScheduler:
         self.accuracy = registry.accuracy.astype(np.float64).copy()
         self.names = registry.names
         self._policy = _jitted_policy(cfg.algorithm, cfg.utility_power)
+        # Mid-flight join accounting (continuous-batching tier): per-model
+        # EWMA of time-to-first-token for requests grafted into the
+        # persistent decode batch.  Purely observational — selection stays
+        # a function of the execution profiles — but it is the signal a
+        # future admission policy would gate joins on, and the bench
+        # reports it alongside the latency rows.
+        self.join_ttft_mu = np.full(len(self.names), np.nan)
+        self._join_var = np.zeros(len(self.names))
+        self.join_count = np.zeros(len(self.names), dtype=np.int64)
         self._log: list[dict] = []
 
     # -- batched decision path ----------------------------------------------
@@ -324,6 +333,27 @@ class MDInferenceScheduler:
             np.atleast_1d(np.asarray(exec_ms, dtype=np.float64)),
         )
         self.ondevice_sigma = float(np.sqrt(self._ondevice_var))
+
+    def observe_join(self, model_index: np.ndarray, ttft_ms: np.ndarray):
+        """Fold mid-flight continuous-batching joins into the TTFT profile.
+
+        ``ttft_ms`` is each joined request's measured prefill-to-first-token
+        wall time (stamped by the continuous backend at graft).  Same
+        per-model replay-in-order EWMA as :meth:`observe_batch`."""
+        if self.cfg.profile_ewma <= 0:
+            return
+        model_index = np.atleast_1d(np.asarray(model_index))
+        ttft_ms = np.atleast_1d(np.asarray(ttft_ms, dtype=np.float64))
+        for m in np.unique(model_index):
+            xs = ttft_ms[model_index == m]
+            mu = self.join_ttft_mu[m]
+            if np.isnan(mu):  # first observation seeds the EWMA
+                mu, self._join_var[m] = float(xs[0]), 0.0
+                xs = xs[1:]
+            self.join_ttft_mu[m], self._join_var[m] = self._ewma_fold(
+                mu, self._join_var[m], xs
+            )
+            self.join_count[m] += int((model_index == m).sum())
 
     # -- outcome resolution ---------------------------------------------------
     def resolve_chunk(

@@ -230,3 +230,74 @@ def test_flash_fwd_lse_matches_logsumexp():
     s = jnp.where(mask[None, None], s, -1e30)
     expect = jax.nn.logsumexp(s, axis=-1)
     np.testing.assert_allclose(lse, expect, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (the continuous-batching substrate).
+# ---------------------------------------------------------------------------
+BS_LADDER = (1, 2, 4, 8)
+
+
+def _paged_case(key, B, NKV=2, G=2, D=32, page=8, NB=3, dtype=jnp.float32):
+    """One pool + per-row page tables; page 0 is the reserved trash page."""
+    P = 1 + B * NB
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (B, NKV, G, D), dtype)
+    kp = rand(ks[1], (P, NKV, page, D), dtype)
+    vp = rand(ks[2], (P, NKV, page, D), dtype)
+    tables = (1 + jnp.arange(B * NB, dtype=jnp.int32)).reshape(B, NB)
+    pos = (3 + 5 * jnp.arange(B, dtype=jnp.int32)) % (NB * page)
+    return q, kp, vp, tables, pos
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B", BS_LADDER)
+def test_paged_decode_every_ladder_size(B, dtype):
+    from repro.kernels.decode_attention import decode_attention_paged_fwd
+
+    q, kp, vp, tables, pos = _paged_case(jax.random.key(B), B, dtype=dtype)
+    out = decode_attention_paged_fwd(q, kp, vp, tables, pos, interpret=True)
+    expect = ref.decode_attention_paged_ref(q, kp, vp, tables, pos)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), atol=ATOL[dtype]
+    )
+
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_paged_decode_windowed(window):
+    from repro.kernels.decode_attention import decode_attention_paged_fwd
+
+    q, kp, vp, tables, pos = _paged_case(jax.random.key(17), 4)
+    out = decode_attention_paged_fwd(
+        q, kp, vp, tables, pos, window=window, interpret=True
+    )
+    expect = ref.decode_attention_paged_ref(
+        q, kp, vp, tables, pos, window=window
+    )
+    np.testing.assert_allclose(out, expect, atol=2e-5)
+
+
+@pytest.mark.parametrize("n_real", [1, 3, 5, 7])
+def test_paged_decode_masked_rows_inert(n_real):
+    """Padded partial batches: inactive rows (pos=0, all-trash table) must
+    not perturb real-row outputs — bitwise — and must not produce NaN."""
+    from repro.kernels.decode_attention import decode_attention_paged_fwd
+
+    B = 8  # the padded ladder shape every partial chunk rides in
+    q, kp, vp, tables, pos = _paged_case(jax.random.key(n_real), B)
+    # Rows >= n_real are masked: all-trash tables, position 0.
+    tables = tables.at[n_real:].set(0)
+    pos = pos.at[n_real:].set(0)
+    padded = decode_attention_paged_fwd(q, kp, vp, tables, pos, interpret=True)
+    assert not bool(jnp.isnan(padded).any())
+    # The same real rows as their own (smaller) batch: exact equality.
+    alone = decode_attention_paged_fwd(
+        q[:n_real], kp, vp, tables[:n_real], pos[:n_real], interpret=True
+    )
+    np.testing.assert_array_equal(
+        np.asarray(padded[:n_real]), np.asarray(alone)
+    )
+    expect = ref.decode_attention_paged_ref(
+        q[:n_real], kp, vp, tables[:n_real], pos[:n_real]
+    )
+    np.testing.assert_allclose(padded[:n_real], expect, atol=2e-5)
