@@ -306,6 +306,108 @@ def _admission_comparison(
         )
 
 
+def _tenancy_comparison(
+    *, n_requests: int, sla_ms: float = 250.0, seed: int = 0, sync: bool = False
+):
+    """Multi-tenant QoS lanes vs shared FIFO under a batch-tenant flood.
+
+    An interactive tenant at 0.4x capacity shares the server with a batch
+    tenant flooding 4x capacity (the PR-8 adversarial input), against the
+    service-coupled loop clock.  Three rows:
+
+    * ``baseline`` — the interactive stream alone, uncongested: the
+      reference interactive p99.
+    * ``fifo_flood`` — both tenants through the single shared FIFO (tags
+      recorded, no lanes): the flood queues ahead of interactive requests
+      and destroys their p99.
+    * ``lanes_flood`` — weighted-fair tenant lanes (interactive weight 4 /
+      batch weight 1, strict interactive-over-batch priority, batch lane
+      capped at 32 pending): interactive p99 stays within 1.1x of the
+      uncongested baseline (the PR's acceptance bar); the flood is
+      absorbed by the batch lane's shed_rate instead.
+    """
+    import jax
+
+    from repro.configs import reduced
+    from repro.core.network import LognormalNetwork
+    from repro.models import transformer as T
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.backend import OnDeviceBackend
+    from repro.serving.engine import ServingEngine, Variant
+    from repro.serving.loadgen import (
+        MixedTenantArrivals,
+        PoissonArrivals,
+        make_trace,
+    )
+    from repro.serving.tenancy import TenantConfig
+
+    prompt, gen, window_ms = 8, 2, 100.0
+    service_ms = 6.0
+    capacity_rps = 1e3 / service_ms
+    dispatch = "sync" if sync else "async"
+
+    hedge = OnDeviceBackend.from_zoo(max_len=prompt + gen + 4)
+    ondevice = hedge.measure_profile(prompt_len=prompt, gen_tokens=gen, trials=2)
+    engine = ServingEngine(
+        max_len=prompt + gen + 4, hedge_backend=hedge, dispatch=dispatch
+    )
+    cfg = reduced(
+        "gemma-2b", d_model=64, n_layers=2, n_heads=2, n_kv_heads=1, head_dim=32
+    )
+    engine.register(
+        Variant("remote", cfg, T.init_params(cfg, jax.random.key(seed)), 80.0)
+    )
+    registry = engine.measure_profiles(prompt_len=prompt, gen_tokens=gen, trials=2)
+
+    flood = MixedTenantArrivals(
+        interactive_rps=0.4 * capacity_rps, batch_rps=4.0 * capacity_rps
+    )
+    lanes = (
+        TenantConfig("interactive", weight=4.0),
+        TenantConfig("batch", weight=1.0, priority="batch", max_pending=32),
+    )
+    bounded = dict(max_pending=32, max_chunk=16)
+    rows = (
+        ("baseline", PoissonArrivals(0.4 * capacity_rps),
+         max(n_requests // 2, 60), AdmissionConfig(policy="shed", **bounded)),
+        ("fifo_flood", flood, n_requests,
+         AdmissionConfig(policy="shed", **bounded)),
+        ("lanes_flood", flood, n_requests,
+         AdmissionConfig(policy="shed", max_chunk=16, tenants=lanes)),
+    )
+    baseline_p99 = None
+    for name, arrivals, n, admission in rows:
+        trace = make_trace(n, arrivals, LognormalNetwork(80.0, 0.6), seed=seed)
+        prompts = np.random.default_rng(seed).integers(0, 256, (n, prompt))
+        sched = MDInferenceScheduler(
+            registry, ondevice, SchedulerConfig(t_sla_ms=sla_ms, seed=seed)
+        )
+        loop = engine.make_loop(sched, admission=admission)
+        t0 = time.perf_counter()
+        done, metrics = loop.drain_trace(
+            trace, window_ms, tokens_for=lambda i: prompts[i], n_steps=gen,
+            service_model=lambda res: service_ms * res.stats.n_requests,
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        row = metrics.tenant_rows.get("interactive")
+        int_p99 = metrics.p99_latency_ms if row is None else row.p99_latency_ms
+        if baseline_p99 is None:
+            baseline_p99 = int_p99
+        sheds = " ".join(
+            f"{t}_shed={r.shed_rate*100:.1f}%"
+            for t, r in sorted(metrics.tenant_rows.items())
+        )
+        emit(
+            f"serving/tenancy/{name}",
+            us / max(len(done), 1),
+            f"interactive_p99={int_p99:.1f}ms "
+            f"vs_baseline={int_p99 / baseline_p99:.2f}x "
+            + (sheds + " " if sheds else "")
+            + f"goodput={metrics.goodput*100:.2f}% "
+            f"served={metrics.n_requests}/{n}",
+        )
+
+
 def _cluster_scaling(
     *, n_requests: int, sla_ms: float = 250.0, seed: int = 0, sync: bool = False
 ):
@@ -621,7 +723,7 @@ def _continuous_batching(
         join_ttft * 1e3,
         f"mid-flight join ttft={join_ttft:.2f}ms vs "
         f"full_batch={full_ms:.2f}ms ratio={join_ttft / full_ms:.3f} "
-        f"(target <0.5: a joiner no longer waits for the batch)",
+        "(target <0.5: a joiner no longer waits for the batch)",
     )
 
     # -- overload_ttft: TTFT p99 under sustained 2x overload ----------------
@@ -665,7 +767,7 @@ def _continuous_batching(
         f"compile_count={backend.compile_count} "
         f"post_warmup_growth={growth} (must be 0) "
         f"joined={backend.joined_total} recycled={backend.recycled_total} "
-        f"conservation=ok",
+        "conservation=ok",
     )
     return growth
 
@@ -737,6 +839,12 @@ def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False) -> int
     # Bounded admission under 2x overload (PR 4 tentpole): shed keeps p99
     # within 1.5x of the uncongested baseline, unbounded diverges.
     _admission_comparison(n_requests=240 if smoke else 600, sync=sync)
+
+    # Multi-tenant QoS lanes (PR 8 tentpole): a batch tenant floods 4x
+    # capacity; weighted-fair lanes keep the interactive tenant's p99
+    # within 1.1x of its uncongested baseline while the shared FIFO lets
+    # the flood destroy it.
+    _tenancy_comparison(n_requests=240 if smoke else 600, sync=sync)
 
     # Replicated execution cluster (PR 5 tentpole): the same 2x overload
     # served by 1/2/4 pooled replicas under least_inflight routing —

@@ -10,7 +10,6 @@ Two parts:
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import reduced

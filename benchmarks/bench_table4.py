@@ -10,7 +10,6 @@ Plus: zero SLA violations, >40-pt gain over the on-device-only baseline.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.configs.mdinference_zoo import paper_zoo

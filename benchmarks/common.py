@@ -8,7 +8,9 @@ structured row; :func:`write_results` flushes them as
      "rows": [{"name": ..., "us_per_call": ..., "derived": ...}, ...]}
 
 so CI and downstream tooling can diff benchmark output without parsing
-stdout.
+stdout.  Re-running a *subset* of a bench merges by row ``name`` into the
+existing file instead of overwriting it, so partial runs (``--smoke``, a
+single family) never erase the other families' rows.
 """
 from __future__ import annotations
 
@@ -34,15 +36,44 @@ def reset_results():
     RESULTS.clear()
 
 
+def _merge_rows(existing: List[Dict], fresh: List[Dict]) -> List[Dict]:
+    """Merge by row ``name``: fresh rows replace same-named existing rows
+    in place (keeping the file's row order stable across partial re-runs);
+    new names append in emission order."""
+    fresh_by_name = {row["name"]: row for row in fresh}
+    merged = [fresh_by_name.pop(row["name"], row) for row in existing]
+    merged.extend(row for row in fresh if row["name"] in fresh_by_name)
+    return merged
+
+
 def write_results(bench: str, out_dir: str = "results") -> str:
     """Write accumulated rows to ``<out_dir>/BENCH_<bench>.json`` and clear
-    the accumulator.  Returns the path written."""
+    the accumulator.  Returns the path written.
+
+    If the file already exists with the same schema and bench name, rows
+    merge by ``name`` (fresh rows win) rather than clobbering the file —
+    a partial run updates only the rows it produced.
+    """
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    rows = list(RESULTS)
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+        except (OSError, ValueError):
+            prev = None
+        if (
+            isinstance(prev, dict)
+            and prev.get("schema_version") == SCHEMA_VERSION
+            and prev.get("bench") == bench
+            and isinstance(prev.get("rows"), list)
+        ):
+            rows = _merge_rows(prev["rows"], rows)
     payload = {
         "schema_version": SCHEMA_VERSION,
         "bench": bench,
-        "rows": list(RESULTS),
+        "rows": rows,
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)

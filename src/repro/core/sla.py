@@ -6,7 +6,11 @@ from typing import Dict
 
 import numpy as np
 
-__all__ = ["ReplicaRow", "RequestMetrics", "summarize"]
+__all__ = ["ReplicaRow", "TenantRow", "RequestMetrics", "summarize"]
+
+# Lane name charged for untagged requests under tenancy — mirrors
+# repro.serving.tenancy.DEFAULT_TENANT (core must not import serving).
+_DEFAULT_TENANT = "default"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -17,6 +21,19 @@ class ReplicaRow:
     goodput_share: float  # fraction of all SLA-attained completions
     utilization: float  # rows served / rows on the busiest replica
     p99_inflight: float  # p99 queue depth (rows) at dispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantRow:
+    """Per-tenant aggregates for a multi-tenant admission stage."""
+
+    priority: str  # dominant priority class of the tenant's served rows
+    share: float  # fraction of completions this tenant received
+    shed_rate: float  # tenant rejects / tenant submits (served + rejected)
+    goodput: float  # SLA-attained served / tenant submits
+    p99_latency_ms: float
+    n_requests: int = 0
+    n_rejected: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +69,16 @@ class RequestMetrics:
     replica_rows: Dict[int, ReplicaRow] = dataclasses.field(
         default_factory=dict
     )
+    # Per-tenant rows (multi-tenant admission): lane name -> share /
+    # shed_rate / goodput / p99 split.  Empty when the serving front runs
+    # the single-class FIFO (no tenants configured, no tagged requests).
+    tenant_rows: Dict[str, TenantRow] = dataclasses.field(
+        default_factory=dict
+    )
+    # p99 latency split by priority class ("interactive" / "batch") —
+    # per-class isolation, not averages, is what holds tail latency.
+    # Populated only alongside tenant_rows.
+    priority_p99: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def row(self) -> str:
         return (
@@ -76,6 +103,9 @@ def summarize(
     n_rejected: int = 0,
     replica: np.ndarray | None = None,
     replica_inflight: np.ndarray | None = None,
+    tenant: np.ndarray | None = None,
+    priority: np.ndarray | None = None,
+    rejected_tenants: Dict[str, int] | None = None,
 ) -> RequestMetrics:
     """Build :class:`RequestMetrics` from per-request outcomes.
 
@@ -97,6 +127,15 @@ def summarize(
     ``replica_inflight`` (the replica's queue depth at dispatch) feed the
     per-replica ``replica_rows`` aggregates; both optional and safe on
     empty batches.
+
+    ``tenant`` (per-request lane names, ``None`` entries charged to the
+    implicit ``"default"`` lane), ``priority`` (per-request
+    ``"interactive"`` / ``"batch"`` class strings), and
+    ``rejected_tenants`` (lane name -> rejects this summary covers) feed
+    ``tenant_rows`` and ``priority_p99``.  Both stay empty unless some
+    request actually carried a tenant tag or a tenant was charged a
+    reject — an untenanted front produces metrics identical to the
+    pre-tenancy ones.
     """
     accuracy_used = np.asarray(accuracy_used, dtype=np.float64)
     latency_ms = np.asarray(latency_ms, dtype=np.float64)
@@ -150,6 +189,69 @@ def summarize(
                     ),
                 )
 
+    tenant_rows: Dict[str, TenantRow] = {}
+    priority_p99: Dict[str, float] = {}
+    rejected_tenants = rejected_tenants or {}
+    tenancy_active = bool(rejected_tenants) or (
+        tenant is not None and any(t is not None for t in tenant)
+    )
+    if tenancy_active:
+        names_arr = np.asarray(
+            [
+                _DEFAULT_TENANT if t is None else str(t)
+                for t in (
+                    tenant if tenant is not None else [None] * n
+                )
+            ],
+            dtype=object,
+        )
+        prio_arr = (
+            None
+            if priority is None
+            else np.asarray([str(p) for p in priority], dtype=object)
+        )
+        lane_names = sorted(
+            set(names_arr.tolist()) | set(rejected_tenants)
+        )
+        for lane in lane_names:
+            mask = names_arr == lane if n else np.zeros(0, dtype=bool)
+            served = int(mask.sum())
+            rejects = int(rejected_tenants.get(lane, 0))
+            lane_submitted = served + rejects
+            lane_attained = (
+                int((attained_mask & mask).sum()) if served else 0
+            )
+            if served and prio_arr is not None:
+                classes, counts_c = np.unique(
+                    prio_arr[mask], return_counts=True
+                )
+                dominant = str(classes[int(np.argmax(counts_c))])
+            else:
+                dominant = "interactive"
+            tenant_rows[lane] = TenantRow(
+                priority=dominant,
+                share=served / n if n else 0.0,
+                shed_rate=(
+                    rejects / lane_submitted if lane_submitted else 0.0
+                ),
+                goodput=(
+                    lane_attained / lane_submitted if lane_submitted else 0.0
+                ),
+                p99_latency_ms=(
+                    float(np.percentile(latency_ms[mask], 99))
+                    if served
+                    else 0.0
+                ),
+                n_requests=served,
+                n_rejected=rejects,
+            )
+        if prio_arr is not None and n:
+            for cls in np.unique(prio_arr):
+                cmask = prio_arr == cls
+                priority_p99[str(cls)] = float(
+                    np.percentile(latency_ms[cmask], 99)
+                )
+
     return RequestMetrics(
         n_requests=n,
         aggregate_accuracy=float(accuracy_used.mean()) if n else 0.0,
@@ -193,4 +295,6 @@ def summarize(
         shed_rate=(float(n_rejected) / submitted if submitted else 0.0),
         goodput=(attained * n / submitted if submitted else 0.0),
         replica_rows=replica_rows,
+        tenant_rows=tenant_rows,
+        priority_p99=priority_p99,
     )

@@ -28,6 +28,14 @@ rejection, ``degrade`` on-device-only service).  ``--overload 2
 --service-ms 5`` drives a sustained 2x overload against a service-coupled
 clock — the adversarial input that makes the policies differ.
 
+Multi-tenant QoS: ``--tenants 'interactive:4,batch:1:batch:32'`` splits
+admission into deficit-weighted-fair per-tenant lanes (strict
+interactive-over-batch priority, per-lane capacity) and drives a tagged
+two-lane traffic mix — the batch flood is absorbed by its own lane's shed
+rate instead of the interactive tenant's p99.  ``--stream`` (with
+``--continuous``) demonstrates token streaming: one request consumed chunk
+by chunk as the persistent decode batch emits tokens.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --requests 50 --sla 2000
 """
@@ -50,11 +58,13 @@ from repro.serving.transport import ProcessTransportBackend
 from repro.serving.engine import ServingEngine, Variant
 from repro.serving.loadgen import (
     BurstyArrivals,
+    MixedTenantArrivals,
     OverloadArrivals,
     PoissonArrivals,
     make_trace,
 )
 from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
+from repro.serving.tenancy import parse_tenant_spec
 
 TIERS = (
     # (name, arch family, width, layers, quality-proxy)
@@ -225,13 +235,41 @@ def main(argv=None):
                     metavar="MS",
                     help="bring the killed replica back at this loop-clock "
                     "time (breaker reset + transport restart)")
+    ap.add_argument("--tenants", default=None, metavar="SPEC",
+                    help="multi-tenant QoS lanes: "
+                    "'name[:weight[:class[:max_pending]]],...' (class is "
+                    "interactive|batch), e.g. "
+                    "'interactive:4,batch:1:batch:32'.  Admission drains "
+                    "the lanes deficit-weighted-fair with strict "
+                    "interactive-over-batch priority; the trace becomes a "
+                    "tagged two-lane mix (interactive at --rate, a batch "
+                    "flood at 4x --rate, or --overload x when higher)")
+    ap.add_argument("--stream", action="store_true",
+                    help="demonstrate token streaming before the trace: "
+                    "submit one request and print each StreamChunk as the "
+                    "continuous tier's decode steps emit it (requires "
+                    "--continuous)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if args.overload_policy != "unbounded" and args.max_pending is None:
+    tenants = None
+    if args.tenants:
+        try:
+            tenants = parse_tenant_spec(args.tenants)
+        except ValueError as e:
+            ap.error(f"--tenants: {e}")
+    tenant_bounded = any(t.max_pending is not None for t in tenants or ())
+    if (
+        args.overload_policy != "unbounded"
+        and args.max_pending is None
+        and not tenant_bounded
+    ):
         ap.error(
             f"--overload-policy {args.overload_policy} requires "
-            "--max-pending (the capacity whose overflow it governs)"
+            "--max-pending (the capacity whose overflow it governs) or a "
+            "--tenants spec with a per-lane max_pending"
         )
+    if args.stream and not args.continuous:
+        ap.error("--stream requires --continuous (the streaming decode tier)")
 
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
@@ -331,7 +369,25 @@ def main(argv=None):
         network = LognormalNetwork(args.net_mean, args.net_cv)
     else:
         network = NAMED_TRACES[args.network]()
-    if args.overload > 0:
+    if tenants is not None:
+        # Tagged two-lane mix: the first interactive-class tenant gets a
+        # Poisson lane at the base rate; the first batch-class tenant (or
+        # the last tenant) floods at 4x (or the --overload factor).
+        interactive = next(
+            (t.name for t in tenants if t.priority == "interactive"),
+            tenants[0].name,
+        )
+        batch = next(
+            (t.name for t in tenants if t.priority == "batch"),
+            tenants[-1].name,
+        )
+        arrivals = MixedTenantArrivals(
+            interactive_rps=args.rate,
+            batch_rps=args.rate * max(args.overload, 4.0),
+            interactive_tenant=interactive,
+            batch_tenant=batch,
+        )
+    elif args.overload > 0:
         arrivals = OverloadArrivals(args.rate, overload_factor=args.overload)
     elif args.bursty:
         arrivals = BurstyArrivals(args.rate)
@@ -353,7 +409,35 @@ def main(argv=None):
         max_pending=args.max_pending,
         max_chunk=args.max_chunk,
         policy=policy,
+        tenants=tenants,
     )
+
+    if args.stream:
+        # One request through its own loop (so the demo's completion does
+        # not pollute the trace metrics), consumed chunk by chunk as the
+        # decode steps emit tokens.
+        from repro.serving.client import InferenceClient
+
+        demo_loop = engine.make_loop(sched)
+        fut = InferenceClient(demo_loop).submit(
+            prompts[0], args.gen, sla=args.sla
+        )
+        print("streaming demo: tokens as the decode steps emit them")
+        first_wall = None
+        for chunk in fut.stream():
+            if first_wall is None:
+                first_wall = chunk.wall_ms
+            print(
+                f"  chunk[{chunk.index}] token={chunk.token:5d} "
+                f"+{chunk.wall_ms - first_wall:7.2f}ms"
+            )
+        c = fut.result()
+        ttft = "n/a" if c.ttft_ms is None else f"{c.ttft_ms:.2f}ms"
+        print(
+            f"  resolved: {len(fut.chunks)} chunks ttft={ttft} "
+            f"exec={c.exec_ms:.1f}ms"
+        )
+
     loop = engine.make_loop(sched, admission=admission)
     # Server service time covers the remote-scheduled rows only: the
     # degrade lane executes on the device, so it costs the device — not
@@ -454,6 +538,18 @@ def main(argv=None):
             f"max_pending={args.max_pending} shed_rate={metrics.shed_rate*100:.1f}% "
             f"goodput={metrics.goodput*100:.1f}%\n"
         )
+    tenancy_note = ""
+    if metrics.tenant_rows:
+        lanes = "\n".join(
+            f"  lane {name:12s} [{row.priority:11s}] "
+            f"share={row.share*100:5.1f}% shed={row.shed_rate*100:5.1f}% "
+            f"goodput={row.goodput*100:5.1f}% p99={row.p99_latency_ms:7.1f}ms"
+            for name, row in sorted(metrics.tenant_rows.items())
+        )
+        p99s = " ".join(
+            f"{cls}={v:.0f}ms" for cls, v in sorted(metrics.priority_p99.items())
+        )
+        tenancy_note = f"tenancy           : class p99 {p99s}\n{lanes}\n"
     cluster_note = ""
     if metrics.replica_rows:
         shares = " ".join(
@@ -475,6 +571,7 @@ def main(argv=None):
         f"[{hedge_note}]\n"
         f"race resolution   : {races}\n"
         f"{admission_note}"
+        f"{tenancy_note}"
         f"{cluster_note}"
         f"queue wait        : mean {waits.mean():.0f}ms  max {waits.max():.0f}ms  "
         f"(time-to-schedule mean {metrics.mean_time_to_schedule_ms:.0f}ms)\n"

@@ -43,9 +43,10 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.serving.lifecycle import InferenceFuture, RequestState
+from repro.serving.tenancy import TenantConfig, TenantLanes
 
 __all__ = [
     "OVERLOAD_POLICIES",
@@ -97,16 +98,32 @@ class AdmissionConfig:
     max_inflight_ticks: Optional[int] = None  # wait=False dispatch gate
     policy: str = "unbounded"  # what happens at max_pending capacity
     shed_headroom_ms: float = 0.0  # extra margin in the shed predicate
+    # Multi-tenant QoS: per-tenant lanes drained strict-priority +
+    # deficit-weighted-fair (None — the default — keeps the single-class
+    # FIFO path, byte-identical to the pre-tenancy queue).
+    tenants: Optional[Tuple[TenantConfig, ...]] = None
 
     def __post_init__(self):
         if self.policy not in OVERLOAD_POLICIES:
             raise ValueError(
                 f"policy must be one of {OVERLOAD_POLICIES}, got {self.policy!r}"
             )
-        if self.policy != "unbounded" and self.max_pending is None:
+        if self.tenants is not None:
+            object.__setattr__(self, "tenants", tuple(self.tenants))
+            for t in self.tenants:
+                if not isinstance(t, TenantConfig):
+                    raise TypeError(f"tenants must be TenantConfig, got {t!r}")
+        tenant_bounded = self.tenants is not None and any(
+            t.max_pending is not None for t in self.tenants
+        )
+        if (
+            self.policy != "unbounded"
+            and self.max_pending is None
+            and not tenant_bounded
+        ):
             raise ValueError(
                 f"policy {self.policy!r} requires max_pending (the capacity "
-                "whose overflow it governs)"
+                "whose overflow it governs) — globally or on some tenant"
             )
         for field in ("max_pending", "max_chunk", "max_inflight_ticks"):
             v = getattr(self, field)
@@ -148,10 +165,18 @@ class AdmissionQueue:
         self._admitted: Deque[InferenceFuture] = deque()
         self._overflow: Deque[InferenceFuture] = deque()  # block policy
         self._degraded: Deque[InferenceFuture] = deque()  # degrade policy
+        # Tenancy: per-tenant lanes replace the single admitted FIFO when
+        # the config names tenants (None keeps the FIFO path untouched).
+        self._lanes: Optional[TenantLanes] = (
+            None if cfg.tenants is None else TenantLanes(cfg.tenants)
+        )
         self.n_submitted = 0
         self.n_rejected = 0  # overflow-rejected + deadline-shed
         self.n_degraded = 0  # routed to the on-device-only lane
         self.n_requeued = 0  # lost-batch rows returned by the loop
+        # Per-tenant accounting (lane name -> count); empty without lanes.
+        self.tenant_submitted: Dict[str, int] = {}
+        self.tenant_rejected: Dict[str, int] = {}
 
     # -- bookkeeping -----------------------------------------------------------
     @staticmethod
@@ -162,6 +187,8 @@ class AdmissionQueue:
     def pending(self) -> int:
         """Admitted requests waiting for a tick (bounded by max_pending)."""
         with self._lock:
+            if self._lanes is not None:
+                return self._lanes.n_queued()
             return self._queued(self._admitted)
 
     @property
@@ -180,11 +207,23 @@ class AdmissionQueue:
     def backlog(self) -> int:
         """Everything still waiting for a tick, across all lanes."""
         with self._lock:
+            admitted = (
+                self._lanes.n_queued()
+                if self._lanes is not None
+                else self._queued(self._admitted)
+            )
             return (
-                self._queued(self._admitted)
+                admitted
                 + self._queued(self._overflow)
                 + self._queued(self._degraded)
             )
+
+    def tenant_pending(self, name: str) -> int:
+        """Queued requests in one tenant's lane (0 without tenancy)."""
+        with self._lock:
+            if self._lanes is None:
+                return 0
+            return self._lanes.n_queued(name)
 
     @staticmethod
     def _admit_stamp(future: InferenceFuture) -> None:
@@ -196,6 +235,8 @@ class AdmissionQueue:
         """Place one submitted future; returns its disposition:
         ``"admitted"`` | ``"blocked"`` | ``"degraded"`` | ``"rejected"``.
         """
+        if self._lanes is not None:
+            return self._offer_tenant(future)
         with self._lock:
             self.n_submitted += 1
             if not self.cfg.bounded:
@@ -222,8 +263,161 @@ class AdmissionQueue:
         if future._mark_rejected():
             with self._lock:
                 self.n_rejected += 1
+                self._charge_tenant_reject(future)
             return "rejected"
         return "cancelled"
+
+    def _charge_tenant_reject(self, future: InferenceFuture) -> None:
+        """Under self._lock: per-tenant reject accounting.
+
+        In lanes mode every reject is charged to its lane; in FIFO mode
+        only *tagged* requests are counted (an untagged single-class run
+        keeps its accounting — and metrics — exactly as before tenancy).
+        """
+        if self._lanes is not None:
+            name = self._lanes.name_of(future)
+        else:
+            name = future.request.tenant
+            if name is None:
+                return
+        self.tenant_rejected[name] = self.tenant_rejected.get(name, 0) + 1
+
+    # -- tenancy (cfg.tenants set) --------------------------------------------
+    def _over_capacity(self, lane) -> bool:
+        """Under self._lock: is this lane's next admit over capacity —
+        globally (max_pending across all lanes) or per-tenant?"""
+        if self.cfg.policy == "unbounded":
+            return False
+        if (
+            self.cfg.max_pending is not None
+            and self._lanes.n_queued() >= self.cfg.max_pending
+        ):
+            return True
+        return (
+            lane.cfg.max_pending is not None
+            and lane.n_queued >= lane.cfg.max_pending
+        )
+
+    def _offer_tenant(self, future: InferenceFuture) -> str:
+        """Lane-routing offer: the tenant's lane (and its bound) replaces
+        the single FIFO; the overload policies keep their meaning, applied
+        when either the global or the tenant's capacity is exceeded."""
+        with self._lock:
+            self.n_submitted += 1
+            lane = self._lanes.resolve(future)
+            name = lane.cfg.name
+            self.tenant_submitted[name] = (
+                self.tenant_submitted.get(name, 0) + 1
+            )
+            if not self._over_capacity(lane):
+                self._lanes.append(lane, future)
+                self._admit_stamp(future)
+                return "admitted"
+            if self.cfg.policy == "block":
+                self._overflow.append(future)
+                return "blocked"
+            if self.cfg.policy == "degrade":
+                self._degraded.append(future)
+                self._admit_stamp(future)
+                self.n_degraded += 1
+                return "degraded"
+        # shed — same outside-the-lock transition as the FIFO path.
+        if future._mark_rejected():
+            with self._lock:
+                self.n_rejected += 1
+                self._charge_tenant_reject(future)
+            return "rejected"
+        return "cancelled"
+
+    def _refill_lanes(self) -> None:
+        """Under self._lock: admit overflow-room futures whose lane has
+        capacity again (block policy).  Unlike the single-FIFO refill this
+        may skip over the head — one tenant's full lane must not block
+        another tenant's admission (no cross-tenant head-of-line)."""
+        if self.cfg.policy != "block" or not self._overflow:
+            return
+        kept: Deque[InferenceFuture] = deque()
+        while self._overflow:
+            f = self._overflow.popleft()
+            lane = self._lanes.resolve(f)
+            if not self._over_capacity(lane):
+                self._lanes.append(lane, f)
+                self._admit_stamp(f)
+            else:
+                kept.append(f)
+        self._overflow = kept
+
+    def _shed_lanes(
+        self,
+        now_ms: float,
+        default_sla_ms: float,
+        service_floor_ms: float,
+        ondevice_floor_ms: Optional[float],
+    ) -> List[InferenceFuture]:
+        """Under self._lock: collect SLA-unreachable requests across every
+        lane (same predicate as the FIFO shed) and drop them."""
+        shed = []
+        for f in self._lanes.all_queued():
+            r = f.request
+            wait = max(now_ms - r.arrival_ms, 0.0)
+            sla = default_sla_ms if r.sla_ms is None else r.sla_ms
+            if sla_unreachable(
+                wait, sla, r.t_nw_est_ms, service_floor_ms,
+                self.cfg.shed_headroom_ms, ondevice_floor_ms,
+            ):
+                shed.append(f)
+        self._lanes.discard(shed)
+        return shed
+
+    def _take_tenant(
+        self,
+        now_ms: Optional[float],
+        *,
+        default_sla_ms: float,
+        service_floor_ms: float,
+        ondevice_floor_ms: Optional[float],
+    ) -> AdmissionBatch:
+        """Tenancy-mode take: same phases as the FIFO take, but the chunk
+        comes from :meth:`TenantLanes.select` — strict interactive-over-
+        batch priority, deficit-weighted-fair within a class — and shed
+        rejections are charged to their tenant."""
+        shed: List[InferenceFuture] = []
+        lanes = self._lanes
+        with self._lock:
+            lanes.prune()
+            self._prune()  # overflow + degrade deques
+            self._refill_lanes()
+            if self.cfg.policy == "shed":
+                shed_now = now_ms
+                if shed_now is None:
+                    # The would-be chunk's latest arrival (a pure peek —
+                    # lane deficits don't advance).
+                    peek = lanes.select(self.cfg.max_chunk, commit=False)
+                    if peek:
+                        shed_now = max(f.request.arrival_ms for f in peek)
+                if shed_now is not None:
+                    shed = self._shed_lanes(
+                        float(shed_now), default_sla_ms, service_floor_ms,
+                        ondevice_floor_ms,
+                    )
+                    self._refill_lanes()
+            chunk = lanes.select(self.cfg.max_chunk)
+            self._refill_lanes()  # the chunk's slots free immediately
+            if chunk and now_ms is None:
+                now_ms = max(f.request.arrival_ms for f in chunk)
+            degraded = self._take_degraded()
+        shed = [f for f in shed if f._mark_rejected()]
+        if shed:
+            with self._lock:
+                self.n_rejected += len(shed)
+                for f in shed:
+                    self._charge_tenant_reject(f)
+        if now_ms is None and degraded:
+            now_ms = max(f.request.arrival_ms for f in degraded)
+        return AdmissionBatch(
+            chunk=chunk, degraded=degraded, shed=shed,
+            now_ms=0.0 if now_ms is None else float(now_ms),
+        )
 
     def requeue(self, futures: List[InferenceFuture]) -> None:
         """Return lost-batch futures to the *front* of the admitted queue.
@@ -239,7 +433,10 @@ class AdmissionQueue:
         """
         with self._lock:
             for f in reversed(futures):
-                self._admitted.appendleft(f)
+                if self._lanes is not None:
+                    self._lanes.append_front(f)
+                else:
+                    self._admitted.appendleft(f)
             self.n_requeued += len(futures)
 
     # -- tick side -------------------------------------------------------------
@@ -265,7 +462,18 @@ class AdmissionQueue:
 
         The returned futures are still QUEUED — the loop claims them with
         ``_try_schedule`` (so a racing ``cancel()`` keeps its guarantee).
+
+        With tenancy enabled (``cfg.tenants``) step 4's selection is the
+        strict-priority deficit-weighted-fair lane drain instead of the
+        FIFO prefix; everything else keeps its semantics.
         """
+        if self._lanes is not None:
+            return self._take_tenant(
+                now_ms,
+                default_sla_ms=default_sla_ms,
+                service_floor_ms=service_floor_ms,
+                ondevice_floor_ms=ondevice_floor_ms,
+            )
         shed: List[InferenceFuture] = []
         with self._lock:
             self._prune()
@@ -298,6 +506,8 @@ class AdmissionQueue:
         if shed:
             with self._lock:
                 self.n_rejected += len(shed)
+                for f in shed:
+                    self._charge_tenant_reject(f)
         if now_ms is None and degraded:
             now_ms = max(f.request.arrival_ms for f in degraded)
         return AdmissionBatch(

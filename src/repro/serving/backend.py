@@ -238,7 +238,13 @@ class ExecutionBackend:
         return self.generate(name, batch, n_steps)
 
     def submit_batch(
-        self, name: str, batch: np.ndarray, n_steps: int, *, sync: bool = False
+        self,
+        name: str,
+        batch: np.ndarray,
+        n_steps: int,
+        *,
+        sync: bool = False,
+        on_token=None,
     ) -> BatchHandle:
         """Dispatch a batch without waiting for it — the async protocol.
 
@@ -251,6 +257,12 @@ class ExecutionBackend:
 
         Either way the execution path is :meth:`run_batch`, so warm-up
         semantics and the measured wall time are identical across modes.
+
+        ``on_token(row, token, wall_ms)`` is the streaming channel: a
+        backend that decodes token-by-token calls it per emitted token
+        (before the batch completes).  Whole-batch tiers have no per-token
+        stream, so the base implementation ignores it; the serving loop
+        only passes it to backends advertising ``supports_streaming``.
         """
         n_rows = int(batch.shape[0])
         self._note_dispatch(n_rows)
@@ -432,6 +444,10 @@ class _ContinuousBatchHandle(BatchHandle):
         self.released_rows: Dict[int, str] = {}  # row -> release reason
         self.ttft_wall_ms: list = [None] * n_rows
         self._wall_ms: Optional[float] = None
+        # Streaming channel: called as on_token(row, token, wall_ms) the
+        # moment a token is appended to ``emitted`` — same wall stamp as
+        # the TTFT accounting, so chunk timestamps and ttft_ms agree.
+        self.on_token = None
 
     @property
     def all_done(self) -> bool:
@@ -567,6 +583,9 @@ class ContinuousBatchingBackend(ExecutionBackend):
     # decomposed onto the bs ladder here, so loop-side padding would just
     # burn decode slots on phantom rows.
     pads_internally = True
+    # Token-by-token decode: the loop may pass submit_batch an on_token
+    # callback, fired per emitted token before the row resolves.
+    supports_streaming = True
 
     def __init__(self, geometry: ServingGeometry = SERVING_GEOMETRY):
         super().__init__()
@@ -660,13 +679,20 @@ class ContinuousBatchingBackend(ExecutionBackend):
                     raise  # nothing in flight can ever free capacity
                 self._pump_engine(eng)
 
-    def submit_batch(self, name, batch, n_steps, *, sync: bool = False):
+    def submit_batch(
+        self, name, batch, n_steps, *, sync: bool = False, on_token=None
+    ):
         """Join ``batch`` rows into the continuous decode batch.
 
         ``sync=True`` runs the engine inline until every row completes.
         ``sync=False`` ('stepped'): prefill + graft happen now — TTFT is
         paid immediately, not at batch end — and decode advances via
-        :meth:`pump` (the serving loop's ``poll()`` drives it)."""
+        :meth:`pump` (the serving loop's ``poll()`` drives it).
+
+        ``on_token(row, token, wall_ms)`` fires per emitted token — the
+        first token at graft (the same wall stamp as ``ttft_wall_ms``),
+        every later token from the decode pump — always *before* the row
+        completes, under both dispatch modes."""
         g = self.geometry
         eng = self._engines[name]
         batch = np.asarray(batch, dtype=np.int32)
@@ -685,6 +711,7 @@ class ContinuousBatchingBackend(ExecutionBackend):
         self.warmup(name)
         self._note_dispatch(B)
         handle = _ContinuousBatchHandle(self, name, B, max(n_steps, 0))
+        handle.on_token = on_token
         if n_steps <= 0:
             for i in range(B):
                 handle.done_rows[i] = True
@@ -716,10 +743,13 @@ class ContinuousBatchingBackend(ExecutionBackend):
                 row = row0 + r
                 eng.cache_mgr.commit_graft(slot.index)
                 tok = int(first[r])
+                # One wall stamp for both the TTFT accounting and the
+                # streamed chunk: first_chunk.wall_ms - dispatch == ttft.
+                now_wall = time.perf_counter() * 1e3
                 handle.emitted[row].append(tok)
-                handle.ttft_wall_ms[row] = (
-                    time.perf_counter() * 1e3 - handle.dispatch_wall_ms
-                )
+                handle.ttft_wall_ms[row] = now_wall - handle.dispatch_wall_ms
+                if handle.on_token is not None:
+                    handle.on_token(row, tok, now_wall)
                 if n_steps == 1:
                     eng.slot_rt[slot.index] = _SlotRuntime(handle, row, tok, S)
                     self._retire_slot(eng, slot.index, "resolved")
@@ -765,11 +795,14 @@ class ContinuousBatchingBackend(ExecutionBackend):
             jnp.asarray(pos),
         )
         next_tok = np.asarray(next_tok)
+        now_wall = time.perf_counter() * 1e3
         for s in list(eng.slot_rt):
             rt = eng.slot_rt[s]
             rt.tok = int(next_tok[s])
             rt.pos += 1
             rt.handle.emitted[rt.row].append(rt.tok)
+            if rt.handle.on_token is not None:
+                rt.handle.on_token(rt.row, rt.tok, now_wall)
             if len(rt.handle.emitted[rt.row]) >= rt.handle.n_steps:
                 self._retire_slot(eng, s, "resolved")
         return True

@@ -55,6 +55,8 @@ class InferenceClient:
         t_nw_actual_ms: Optional[float] = None,
         arrival_ms: Optional[float] = None,
         wait_admission: bool = False,
+        tenant: Optional[str] = None,
+        priority: Optional[str] = None,
     ) -> InferenceFuture:
         """Submit one inference request to the loop's admission queue.
 
@@ -76,6 +78,11 @@ class InferenceClient:
             holds a real queue slot (or reached a terminal state).  A
             single-threaded caller never deadlocks — each tick frees
             capacity that re-admits the overflow FIFO.
+          tenant: tenancy lane name (None: the implicit "default" lane).
+            With a tenancy-enabled admission queue the tag selects the
+            request's weighted-fair lane and per-tenant capacity bound.
+          priority: "interactive" | "batch" — overrides the tenant lane's
+            configured priority class for this request (None: the lane's).
         """
         request = QueuedRequest(
             rid=self.loop.next_rid(),
@@ -89,6 +96,8 @@ class InferenceClient:
                 self.loop.now_ms if arrival_ms is None else arrival_ms
             ),
             sla_ms=None if sla is None else float(sla),
+            tenant=tenant,
+            priority=priority,
         )
         future = self.loop.submit(request)
         if wait_admission:

@@ -40,7 +40,8 @@ from __future__ import annotations
 import dataclasses
 import enum
 import threading
-from typing import Dict, Optional
+import time
+from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
@@ -51,6 +52,7 @@ __all__ = [
     "InferenceFuture",
     "QueuedRequest",
     "CompletedRequest",
+    "StreamChunk",
 ]
 
 
@@ -83,6 +85,11 @@ class QueuedRequest:
     t_nw_actual_ms: float
     arrival_ms: float = 0.0
     sla_ms: Optional[float] = None  # per-request SLA (None: the loop's)
+    # Tenancy: which admission lane the request rides (None: the implicit
+    # "default" lane) and its priority class — "interactive" | "batch"
+    # (None: the lane's configured class).
+    tenant: Optional[str] = None
+    priority: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -119,6 +126,26 @@ class CompletedRequest:
     # the classic whole-batch tiers, where no first token exists before
     # batch end.
     ttft_ms: Optional[float] = None
+    # Tenancy: the admission lane that served the request (None: untagged)
+    # and its effective priority class at admission.
+    tenant: Optional[str] = None
+    priority: str = "interactive"
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamChunk:
+    """One decode token pushed to a streaming consumer before resolution.
+
+    ``wall_ms`` is the absolute ``time.perf_counter()`` stamp (in ms) at
+    which the token was emitted by the backend — the same stamp the
+    continuous tier uses for its TTFT accounting, so for the first chunk
+    ``wall_ms - future.tier_dispatch_wall_ms["remote"]`` equals the
+    completion's ``ttft_ms``.
+    """
+
+    index: int  # position in the decode stream (0 = first token)
+    token: int
+    wall_ms: float
 
 
 class InferenceFuture:
@@ -145,8 +172,17 @@ class InferenceFuture:
         self.admitted_wall_ms: Optional[float] = None
         self.tier_dispatch_wall_ms: Dict[str, float] = {}
         self.tier_done_wall_ms: Dict[str, float] = {}
+        # Effective priority class: the request's explicit priority, else
+        # "interactive"; a tenancy-enabled admission queue re-stamps this
+        # with the tenant lane's configured class at offer time.
+        self.priority: str = (
+            "interactive" if request.priority is None else request.priority
+        )
         self._loop = loop
         self._event = threading.Event()
+        # Streaming channel: decode tokens pushed by the backend (via the
+        # loop's per-batch on_token callback) before resolution.
+        self._chunks: List[StreamChunk] = []
         # Guards the QUEUED -> SCHEDULED / QUEUED -> CANCELLED transition:
         # cancel() may race the loop's tick from another thread, and a
         # request whose cancel() returned True must never be dispatched.
@@ -161,6 +197,10 @@ class InferenceFuture:
     @property
     def rid(self) -> int:
         return self.request.rid
+
+    @property
+    def tenant(self) -> Optional[str]:
+        return self.request.tenant
 
     def done(self) -> bool:
         """True once the request is RESOLVED or CANCELLED (never blocks)."""
@@ -226,6 +266,84 @@ class InferenceFuture:
             )
         assert self._completion is not None
         return self._completion
+
+    # -- streaming ------------------------------------------------------------
+    def _push_chunk(self, token: int, wall_ms: float) -> None:
+        """Backend-side token emission (appended in decode order).
+
+        Called from the dispatching thread (sync / stepped modes) while the
+        future is still EXECUTING — list append is atomic under the GIL, so
+        a concurrently iterating :meth:`stream` sees a consistent prefix.
+        """
+        self._chunks.append(
+            StreamChunk(len(self._chunks), int(token), float(wall_ms))
+        )
+
+    @property
+    def chunks(self) -> List[StreamChunk]:
+        """Chunks streamed so far (decode order; grows until resolution)."""
+        return list(self._chunks)
+
+    def stream(self) -> Iterator[StreamChunk]:
+        """Yield :class:`StreamChunk` tokens as the backend emits them.
+
+        On a streaming-capable backend (the continuous-batching tier) every
+        decode token is pushed *before* the future resolves — under stepped
+        dispatch each ``poll()`` pump surfaces one more token, so a
+        cooperative consumer observes genuinely incremental delivery; under
+        sync dispatch the whole stream is pushed during the tick (still
+        before ``_mark_resolved``) and yielded in order right after.
+
+        Like ``result(timeout=None)``, the generator *drives* the attached
+        loop when progress stalls (tick un-dispatched work, poll in-flight
+        work), so a single-threaded consumer never deadlocks.  On backends
+        with no token channel the stream degrades gracefully: it yields the
+        completion's tokens as one burst stamped at consumption time.
+
+        Note: the stream is the *remote* decode stream.  A hedged row whose
+        duplicate wins the race may stream fewer tokens than ``n_steps``
+        (its slot is released early); ``result()`` remains the
+        authoritative answer.
+        """
+        i = 0
+        while True:
+            while i < len(self._chunks):
+                chunk = self._chunks[i]
+                i += 1
+                yield chunk
+            if self.done():
+                break
+            if self._loop is None:
+                # Externally driven (a server thread owns the loop): just
+                # wait for more chunks or resolution.
+                self._event.wait(0.001)
+                continue
+            if self.state is RequestState.QUEUED:
+                # Dispatch without collecting when the loop steps its
+                # backend (chunks then flow incrementally via poll); the
+                # whole-batch modes resolve us within the tick.
+                stepped = self._loop.dispatch == "stepped"
+                self._loop.tick(wait=not stepped)
+                if self.state is RequestState.QUEUED and not self.done():
+                    # Not taken this tick (inflight gate / backpressure).
+                    self._loop.poll()
+                    if (
+                        self.state is RequestState.QUEUED
+                        and not self._loop._inflight
+                    ):
+                        self._loop.flush()
+            else:
+                self._loop.poll()
+        if i == 0 and self.state is RequestState.RESOLVED:
+            # No token channel on the serving tier: degrade to one burst of
+            # the completion's tokens, stamped now.
+            now_ms = time.perf_counter() * 1e3
+            for tok in np.asarray(self._completion.tokens).ravel():
+                self._push_chunk(int(tok), now_ms)
+            while i < len(self._chunks):
+                chunk = self._chunks[i]
+                i += 1
+                yield chunk
 
     # -- loop-side transitions ------------------------------------------------
     def _try_schedule(self, now_ms: float) -> bool:

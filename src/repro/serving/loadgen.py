@@ -19,6 +19,10 @@ Arrival processes:
 * :class:`RampArrivals` — the rate ramps linearly from ``rate_start_rps``
   to ``rate_end_rps`` across the stream (capacity-crossing sweeps: find
   where a policy starts shedding).
+* :class:`MixedTenantArrivals` — two concurrent *tagged* lanes: an
+  interactive Poisson lane plus a batch flood lane, each request carrying
+  its tenant name (the adversarial input for the multi-tenant QoS lanes:
+  does the flood destroy the interactive tenant's p99?).
 
 Network times come from any :class:`repro.core.network.NetworkModel`; the
 named paper traces (university / residential / LTE) are exposed through
@@ -39,6 +43,7 @@ __all__ = [
     "BurstyArrivals",
     "OverloadArrivals",
     "RampArrivals",
+    "MixedTenantArrivals",
     "LoadTrace",
     "make_trace",
     "iter_windows",
@@ -159,12 +164,65 @@ class RampArrivals(ArrivalProcess):
 
 
 @dataclasses.dataclass(frozen=True)
+class MixedTenantArrivals(ArrivalProcess):
+    """Two concurrent tagged lanes: interactive Poisson + a batch flood.
+
+    Both lanes run over the same horizon; of ``n`` sampled requests, the
+    lanes get counts proportional to their rates (so the merged stream
+    realizes both offered rates simultaneously).  :meth:`sample_tagged`
+    returns ``(arrival_ms, tenant)`` with per-request tenant names —
+    :func:`make_trace` detects it and emits a tagged
+    :class:`LoadTrace` that :meth:`repro.serving.loop.ServingLoop.drain_trace`
+    forwards into each request's ``tenant`` field.
+    """
+
+    interactive_rps: float = 50.0
+    batch_rps: float = 200.0
+    interactive_tenant: str = "interactive"
+    batch_tenant: str = "batch"
+
+    def __post_init__(self):
+        if self.interactive_rps <= 0 or self.batch_rps <= 0:
+            raise ValueError(
+                "lane rates must be > 0, got "
+                f"{self.interactive_rps} / {self.batch_rps}"
+            )
+
+    def sample_tagged(self, rng, n):
+        """Sample ``(arrival_ms, tenant)`` — merged, arrival-sorted."""
+        if n == 0:
+            return np.zeros(0), np.zeros(0, dtype=object)
+        frac = self.interactive_rps / (self.interactive_rps + self.batch_rps)
+        n_int = int(round(n * frac))
+        if n >= 2:  # both lanes present whenever there is room for both
+            n_int = min(max(n_int, 1), n - 1)
+        n_bat = n - n_int
+        t_int = np.cumsum(
+            rng.exponential(1e3 / self.interactive_rps, size=n_int)
+        )
+        t_bat = np.cumsum(rng.exponential(1e3 / self.batch_rps, size=n_bat))
+        arrival = np.concatenate([t_int, t_bat])
+        tenant = np.asarray(
+            [self.interactive_tenant] * n_int + [self.batch_tenant] * n_bat,
+            dtype=object,
+        )
+        order = np.argsort(arrival, kind="stable")
+        return arrival[order], tenant[order]
+
+    def sample_arrivals_ms(self, rng, n):
+        return self.sample_tagged(rng, n)[0]
+
+
+@dataclasses.dataclass(frozen=True)
 class LoadTrace:
     """One generated request stream (arrival-ordered)."""
 
     arrival_ms: np.ndarray  # (R,) non-decreasing arrival timestamps
     t_nw_ms: np.ndarray  # (R,) actual round-trip network times
     t_nw_est_ms: np.ndarray  # (R,) server-side estimates of t_nw_ms
+    # (R,) per-request tenant names (object dtype), or None for an
+    # untagged single-class stream — the compatibility default.
+    tenant: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return len(self.arrival_ms)
@@ -188,13 +246,19 @@ def make_trace(
 ) -> LoadTrace:
     """Draw a request stream: arrivals x network times x estimates."""
     rng = np.random.default_rng(seed)
-    arrival_ms = arrivals.sample_arrivals_ms(rng, n)
+    tenant = None
+    sample_tagged = getattr(arrivals, "sample_tagged", None)
+    if sample_tagged is not None:
+        arrival_ms, tenant = sample_tagged(rng, n)
+    else:
+        arrival_ms = arrivals.sample_arrivals_ms(rng, n)
     t_nw = network.sample(rng, n)
     t_est = t_nw if estimator is None else estimator.estimate(rng, t_nw)
     return LoadTrace(
         arrival_ms=np.asarray(arrival_ms, dtype=np.float64),
         t_nw_ms=np.asarray(t_nw, dtype=np.float64),
         t_nw_est_ms=np.asarray(t_est, dtype=np.float64),
+        tenant=tenant,
     )
 
 

@@ -60,6 +60,7 @@ from repro.serving.lifecycle import (
 )
 from repro.serving.loadgen import LoadTrace, iter_windows
 from repro.serving.scheduler import pad_to_pow2
+from repro.serving.tenancy import DEFAULT_TENANT
 
 __all__ = ["ServingLoop", "TickResult", "TickStats"]
 
@@ -100,6 +101,48 @@ def _replica_inflight_array(completions) -> np.ndarray:
         ],
         dtype=np.int64,
     )
+
+
+def _tenant_array(completions) -> np.ndarray:
+    """Per-completion tenant lane names for summarize (None: untagged)."""
+    return np.asarray([c.tenant for c in completions], dtype=object)
+
+
+def _priority_array(completions) -> np.ndarray:
+    return np.asarray([c.priority for c in completions], dtype=object)
+
+
+def _make_stream_cb(batch: List[InferenceFuture], part: np.ndarray):
+    """Per-group token callback: backend row index -> that row's future.
+
+    The group's batch rows are exactly ``part``'s futures (streaming
+    backends pad internally, so no phantom rows exist); a guard keeps a
+    misbehaving backend from indexing past the group.
+    """
+    futures = [batch[int(i)] for i in part]
+
+    def on_token(row: int, token: int, wall_ms: float) -> None:
+        if 0 <= row < len(futures):
+            futures[row]._push_chunk(token, wall_ms)
+
+    return on_token
+
+
+def _rejected_tenant_counts(shed_info, default_lane: bool) -> Dict[str, int]:
+    """Fold per-shed (tenant, priority) pairs into lane -> reject counts.
+
+    Untagged sheds are charged to the implicit ``"default"`` lane only
+    when tenancy is configured (``default_lane``) — an untenanted,
+    untagged front keeps producing metrics with no tenant rows at all.
+    """
+    counts: Dict[str, int] = {}
+    for tenant, _ in shed_info:
+        if tenant is None:
+            if not default_lane:
+                continue
+            tenant = DEFAULT_TENANT
+        counts[tenant] = counts.get(tenant, 0) + 1
+    return counts
 
 
 @dataclasses.dataclass
@@ -191,6 +234,11 @@ class _InflightTick:
     )
     degrade_handle: Optional[BatchHandle] = None
     n_shed: int = 0
+    # (tenant lane, priority class) of each request shed at this tick —
+    # per-tenant rejection accounting for summarize.
+    shed_info: List[Tuple[Optional[str], str]] = dataclasses.field(
+        default_factory=list
+    )
 
     def poll(self) -> bool:
         handles = [h for _, _, h in self.groups]
@@ -402,6 +450,9 @@ class ServingLoop:
                         now_ms=now_ms, groups=[], row_handles=[],
                         hedged_rows=np.zeros(0, dtype=np.int64),
                         hedge_handle=None, n_shed=len(take.shed),
+                        shed_info=[
+                            (f.request.tenant, f.priority) for f in take.shed
+                        ],
                     )
                 )
             return None
@@ -449,14 +500,25 @@ class ServingLoop:
             # replica the group can spread over), so several replicas run
             # concurrently within one tick.
             pad_rows = not getattr(self.backend, "pads_internally", False)
+            streaming = getattr(self.backend, "supports_streaming", False)
             for m in np.unique(decision.model_index):
                 rows = np.flatnonzero(decision.model_index == m)
                 name = self.scheduler.names[int(m)]
                 for part in self._fan_out(name, rows):
                     gbatch, steps = _pad_batch(requests, part, pad_rows=pad_rows)
+                    # Streaming tier: route each backend row's emitted
+                    # tokens onto its future's chunk channel.  Only passed
+                    # to backends advertising supports_streaming, so the
+                    # cluster/transport submit_batch signatures are
+                    # untouched.
+                    kwargs = (
+                        {"on_token": _make_stream_cb(batch, part)}
+                        if streaming
+                        else {}
+                    )
                     try:
                         handle = self.backend.submit_batch(
-                            name, gbatch, steps, sync=sync
+                            name, gbatch, steps, sync=sync, **kwargs
                         )
                     except NoHealthyReplica as e:
                         # The eligible mask was computed at the top of the
@@ -522,6 +584,7 @@ class ServingLoop:
             degrade_queue_wait=degrade_queue_wait,
             degrade_handle=degrade_handle,
             n_shed=len(take.shed),
+            shed_info=[(f.request.tenant, f.priority) for f in take.shed],
         )
         if not wait:
             self._inflight.append(tick)
@@ -771,6 +834,8 @@ class ServingLoop:
                     replica=tick.row_handles[i].replica,
                     replica_inflight=tick.row_handles[i].inflight_at_dispatch,
                     ttft_ms=None if np.isnan(ttft[i]) else float(ttft[i]),
+                    tenant=requests[i].tenant,
+                    priority=f.priority,
                 )
                 f._mark_resolved(c)
                 if f.state is RequestState.RESOLVED:
@@ -820,6 +885,12 @@ class ServingLoop:
                 n_rejected=tick.n_shed,
                 replica=_replica_array(completions),
                 replica_inflight=_replica_inflight_array(completions),
+                tenant=_tenant_array(completions),
+                priority=_priority_array(completions),
+                rejected_tenants=_rejected_tenant_counts(
+                    tick.shed_info,
+                    default_lane=self.admission.cfg.tenants is not None,
+                ),
             )
 
         # Continuous-batching deltas since the last collection (global to
@@ -939,6 +1010,8 @@ class ServingLoop:
                 hedge_measured=tick.degrade_handle is not None,
                 time_to_schedule_ms=float(tick.now_ms - r.arrival_ms),
                 race_resolution="degraded",
+                tenant=r.tenant,
+                priority=f.priority,
             )
             f._mark_resolved(c)
             if f.state is RequestState.RESOLVED:
@@ -983,6 +1056,7 @@ class ServingLoop:
         """
         completions: List[CompletedRequest] = []
         rejected_before = self.admission.n_rejected
+        tenant_rejected_before = dict(self.admission.tenant_rejected)
         busy_until_ms = 0.0
         tick_ms = 0.0
 
@@ -1009,6 +1083,11 @@ class ServingLoop:
                         t_nw_est_ms=float(trace.t_nw_est_ms[i]),
                         t_nw_actual_ms=float(trace.t_nw_ms[i]),
                         arrival_ms=float(trace.arrival_ms[i]),
+                        tenant=(
+                            None
+                            if trace.tenant is None or trace.tenant[i] is None
+                            else str(trace.tenant[i])
+                        ),
                     )
                 )
             tick_ms = fire(
@@ -1041,5 +1120,12 @@ class ServingLoop:
                 n_rejected=n_rejected,
                 replica=_replica_array(completions),
                 replica_inflight=_replica_inflight_array(completions),
+                tenant=_tenant_array(completions),
+                priority=_priority_array(completions),
+                rejected_tenants={
+                    name: count - tenant_rejected_before.get(name, 0)
+                    for name, count in self.admission.tenant_rejected.items()
+                    if count - tenant_rejected_before.get(name, 0) > 0
+                },
             )
         return completions, metrics

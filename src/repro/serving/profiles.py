@@ -15,9 +15,7 @@ import json
 from pathlib import Path
 from typing import Optional
 
-import numpy as np
-
-from repro.configs.archs import ARCHS, get_config
+from repro.configs.archs import get_config
 from repro.core.registry import ModelProfile, ModelRegistry
 
 __all__ = ["V5E", "estimate_ms", "lm_zoo_registry", "ONDEVICE_TIER"]

@@ -364,9 +364,8 @@ def test_cancelled_blocked_future_frees_nothing_and_conserves():
 def test_unbounded_default_matches_explicit_unbounded_config():
     def serve(admission):
         loop = _loop(admission, t_sla_ms=1_000.0, seed=3)
-        fs = [
-            loop.submit(_request(i, arrival_ms=7.0 * i)) for i in range(12)
-        ]
+        for i in range(12):
+            loop.submit(_request(i, arrival_ms=7.0 * i))
         res = loop.tick(now_ms=100.0)
         assert len(res.completions) == 12  # one tick drains everything
         return [
@@ -531,6 +530,63 @@ def test_shed_floor_considers_the_network_free_hedge_path():
     res = loop.tick(now_ms=50.0)
     assert f.state is RequestState.RESOLVED
     assert res.stats.n_shed == 0 and len(res.completions) == 1
+
+
+# ---------------------------------------------------------------------------
+# Requeue (lost-batch recovery): front re-insert, honest wait, shed-on-late.
+# ---------------------------------------------------------------------------
+def test_requeue_reinserts_at_front_ahead_of_younger_arrivals():
+    q = AdmissionQueue(AdmissionConfig(max_chunk=4))
+    fs = [InferenceFuture(_request(i, arrival_ms=float(i))) for i in range(6)]
+    for f in fs:
+        q.offer(f)
+    batch = q.take(10.0, default_sla_ms=1e9)
+    assert [f.request.rid for f in batch.chunk] == [0, 1, 2, 3]
+    # Rows 0-1 lost to a replica fault: they re-enter at the head, in
+    # order, ahead of the younger arrivals still queued.
+    q.requeue(batch.chunk[:2])
+    assert q.n_requeued == 2
+    nxt = q.take(20.0, default_sla_ms=1e9)
+    assert [f.request.rid for f in nxt.chunk] == [0, 1, 4, 5]
+
+
+def test_requeue_bypasses_capacity_and_keeps_the_arrival_stamp():
+    cap = 4
+    q = AdmissionQueue(
+        AdmissionConfig(max_pending=cap, max_chunk=cap, policy="shed")
+    )
+    fs = [InferenceFuture(_request(i, arrival_ms=0.0)) for i in range(cap)]
+    for f in fs:
+        q.offer(f)
+    batch = q.take(50.0, default_sla_ms=1e9)
+    assert len(batch.chunk) == cap
+    # The freed capacity refills with younger arrivals...
+    for i in range(cap):
+        g = InferenceFuture(_request(10 + i, arrival_ms=60.0))
+        assert q.offer(g) == "admitted"
+    # ...then the dispatched batch is lost: requeue re-enters *above*
+    # max_pending (the rows already held slots once) with zero rejects.
+    q.requeue(batch.chunk)
+    assert q.pending == 2 * cap and q.n_rejected == 0
+    # Their arrival stamp is untouched: queue wait stays charged from the
+    # first admission, not the requeue (honest wait accounting).
+    assert all(f.request.arrival_ms == 0.0 for f in batch.chunk)
+    nxt = q.take(70.0, default_sla_ms=1e9)
+    assert [f.request.rid for f in nxt.chunk] == [0, 1, 2, 3]
+
+
+def test_requeued_past_sla_is_shed_not_redispatched():
+    q = AdmissionQueue(AdmissionConfig(max_pending=8, policy="shed"))
+    f = InferenceFuture(_request(0, arrival_ms=0.0))
+    assert q.offer(f) == "admitted"
+    assert q.take(10.0, default_sla_ms=1e9).chunk == [f]
+    q.requeue([f])
+    # By the next tick the wait — charged from the original arrival —
+    # has made the SLA unreachable: the row sheds instead of re-dispatching.
+    nxt = q.take(500.0, default_sla_ms=200.0, service_floor_ms=STUB_FLOOR_MS)
+    assert nxt.chunk == [] and nxt.shed == [f]
+    assert f.state is RequestState.REJECTED
+    assert q.n_rejected == 1
 
 
 # ---------------------------------------------------------------------------

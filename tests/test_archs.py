@@ -126,8 +126,9 @@ def test_param_axes_match_params():
         params = T.init_params(cfg, jax.random.key(0))
         axes = T.param_axes(cfg)
         pt = jax.tree.structure(params)
-        is_axes = lambda x: (isinstance(x, tuple) and len(x) > 0 and all(
-            isinstance(e, (str, type(None))) for e in x))
+        def is_axes(x):
+            return (isinstance(x, tuple) and len(x) > 0 and all(
+                isinstance(e, (str, type(None))) for e in x))
         at = jax.tree.structure(axes, is_leaf=is_axes)
         assert pt == at, arch
         # Every axes tuple matches its array rank.

@@ -1,16 +1,13 @@
 """Checkpointing: atomicity, pruning, async, resharding, fault tolerance."""
-import json
-import shutil
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import reduced
-from repro.training import OptimizerConfig, init_train_state
+from repro.training import init_train_state
 
 
 def tiny_state(seed=0):

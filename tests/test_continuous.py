@@ -275,3 +275,60 @@ def test_loop_stepped_tick_accounting(variant):
     mu = sched.join_ttft_mu[~np.isnan(sched.join_ttft_mu)]
     assert mu.size >= 1 and (mu > 0).all()
     engine.backend.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# Streaming: every decode token pushed before resolution, TTFT-stamped.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dispatch", ["stepped", "sync"])
+def test_stream_yields_every_decode_token_before_resolution(variant, dispatch):
+    from repro.core.duplication import HedgePolicy
+    from repro.serving.client import InferenceClient
+    from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
+
+    hedge = OnDeviceBackend.from_zoo(max_len=GEO.max_len)
+    engine = ServingEngine(
+        hedge_backend=hedge, continuous=True, geometry=GEO, dispatch=dispatch
+    )
+    engine.register(variant)
+    registry = engine.measure_profiles(
+        prompt_len=PROMPT, gen_tokens=GEN, trials=2
+    )
+    ondevice = hedge.measure_profile(
+        prompt_len=PROMPT, gen_tokens=GEN, trials=2
+    )
+    engine.backend.warmup()
+    # Selective hedging with a huge SLA: the duplicate never engages, so
+    # the remote decode stream deterministically runs to completion.
+    sched = MDInferenceScheduler(
+        registry, ondevice,
+        SchedulerConfig(
+            t_sla_ms=60_000.0, seed=0,
+            hedge=HedgePolicy(always=False, deadline_headroom_ms=0.0),
+        ),
+    )
+    loop = engine.make_loop(sched)
+    fut = InferenceClient(loop).submit(
+        _prompts(1, seed=9)[0], n_steps=GEN, t_nw_est_ms=10.0
+    )
+    chunks, done_at_yield = [], []
+    for chunk in fut.stream():
+        chunks.append(chunk)
+        done_at_yield.append(fut.done())
+    c = fut.result(timeout=0)  # already resolved when the stream ends
+    assert c.used_remote and not c.hedged
+    # Every decode token streamed, in order, with monotone emission stamps
+    # (distinct pushes, not the no-channel one-burst fallback).
+    assert [ch.index for ch in chunks] == list(range(GEN))
+    np.testing.assert_array_equal([ch.token for ch in chunks], c.tokens)
+    assert all(a.wall_ms <= b.wall_ms for a, b in zip(chunks, chunks[1:]))
+    # The first chunk shares the backend's TTFT stamp exactly.
+    assert c.ttft_ms is not None
+    assert chunks[0].wall_ms - fut.tier_dispatch_wall_ms["remote"] == (
+        pytest.approx(c.ttft_ms, abs=1e-6)
+    )
+    if dispatch == "stepped":
+        # Stepped polling surfaces tokens incrementally: the early tokens
+        # arrive while the request is still in flight.
+        assert not done_at_yield[0]
+    engine.backend.check_conservation()

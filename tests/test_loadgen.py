@@ -7,6 +7,7 @@ from repro.core.network import FixedCVNetwork
 from repro.serving.loadgen import (
     BurstyArrivals,
     LoadTrace,
+    MixedTenantArrivals,
     OverloadArrivals,
     PoissonArrivals,
     RampArrivals,
@@ -154,6 +155,60 @@ def test_ramp_arrivals_validation():
         RampArrivals(0.0, 100.0)
     with pytest.raises(ValueError):
         RampArrivals(100.0, -5.0)
+
+
+# ---------------------------------------------------------------------------
+# MixedTenantArrivals: tagged two-lane mix.
+# ---------------------------------------------------------------------------
+def test_mixed_tenant_arrivals_tagged_and_sorted():
+    mix = MixedTenantArrivals(interactive_rps=50.0, batch_rps=200.0)
+    arrival, tenant = mix.sample_tagged(np.random.default_rng(5), 1_000)
+    assert arrival.shape == tenant.shape == (1_000,)
+    assert np.all(np.diff(arrival) >= 0)  # merged stream is arrival-sorted
+    counts = {t: int(np.sum(tenant == t)) for t in ("interactive", "batch")}
+    assert counts["interactive"] + counts["batch"] == 1_000
+    # Lane counts are proportional to the rates (50:200 -> 1:4).
+    assert counts["interactive"] == pytest.approx(200, abs=2)
+    # Each lane realizes roughly its own offered rate over the horizon.
+    for name, rps in (("interactive", 50.0), ("batch", 200.0)):
+        lane = arrival[tenant == name]
+        assert np.mean(np.diff(lane)) == pytest.approx(1e3 / rps, rel=0.15)
+    # Determinism + the untagged protocol view.
+    a2, t2 = mix.sample_tagged(np.random.default_rng(5), 1_000)
+    np.testing.assert_array_equal(arrival, a2)
+    np.testing.assert_array_equal(tenant, t2)
+    np.testing.assert_array_equal(
+        mix.sample_arrivals_ms(np.random.default_rng(5), 1_000), arrival
+    )
+
+
+def test_mixed_tenant_arrivals_edges_and_validation():
+    mix = MixedTenantArrivals()
+    a, t = mix.sample_tagged(np.random.default_rng(0), 0)
+    assert len(a) == 0 and len(t) == 0
+    # n >= 2 always yields both lanes, however skewed the rates.
+    _, t = MixedTenantArrivals(
+        interactive_rps=0.001, batch_rps=1_000.0
+    ).sample_tagged(np.random.default_rng(0), 2)
+    assert set(t) == {"interactive", "batch"}
+    with pytest.raises(ValueError):
+        MixedTenantArrivals(interactive_rps=0.0)
+    with pytest.raises(ValueError):
+        MixedTenantArrivals(batch_rps=-1.0)
+
+
+def test_make_trace_carries_tenant_tags():
+    trace = make_trace(
+        200, MixedTenantArrivals(40.0, 160.0), FixedCVNetwork(20.0, 0.3),
+        seed=6,
+    )
+    assert trace.tenant is not None and len(trace.tenant) == 200
+    assert set(trace.tenant) == {"interactive", "batch"}
+    # Untagged processes keep the None default (the compat pin).
+    plain = make_trace(
+        50, PoissonArrivals(100.0), FixedCVNetwork(20.0, 0.3), seed=6
+    )
+    assert plain.tenant is None
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,4 @@
 """Roofline derivation units: HLO collective parsing, term combination."""
-import numpy as np
 import pytest
 
 from repro.launch import roofline as rf

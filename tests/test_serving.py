@@ -74,7 +74,6 @@ def test_hedge_policy_off_allows_violations():
             seed=1,
         ),
     )
-    rng = np.random.default_rng(0)
     t_nw = np.concatenate([np.full(50, 100.0), np.full(10, 400.0)])  # outages
     m = sched.run_trace(t_nw)
     assert m.sla_attainment < 1.0  # un-hedged outage requests violate

@@ -84,8 +84,9 @@ def test_cache_axes_structure_matches_cache():
         cfg = reduced(arch)
         cache = T.init_cache(cfg, 2, 16)
         axes = T.cache_axes(cfg)
-        is_axes = lambda x: (isinstance(x, tuple) and len(x) > 0 and all(
-            isinstance(e, (str, type(None))) for e in x))
+        def is_axes(x):
+            return (isinstance(x, tuple) and len(x) > 0 and all(
+                isinstance(e, (str, type(None))) for e in x))
         ct = jax.tree.structure(cache)
         at = jax.tree.structure(axes, is_leaf=is_axes)
         assert ct == at, arch

@@ -1,0 +1,432 @@
+"""Multi-tenant QoS: weighted-fair lanes, strict priority, streaming.
+
+The PR-8 contract, bottom-up:
+
+* ``TenantConfig`` / ``parse_tenant_spec`` validate their QoS fields.
+* ``TenantLanes.select`` is deficit round-robin by weight within a class —
+  long-run shares converge to the weights — with strict
+  interactive-over-batch priority between classes, and a single lane
+  degenerates to the plain FIFO prefix.
+* The admission queue routes by tag, bounds per-tenant capacity, and
+  charges shed/reject accounting to the right lane; ``tenants=None`` keeps
+  the single-class FIFO path byte-identical (``_lanes`` never exists).
+* ``RequestMetrics`` grows per-tenant rows and per-class p99 *only* when
+  tenancy is in play — untenanted metrics stay exactly as before.
+* ``InferenceFuture.stream()`` yields ``StreamChunk`` tokens; on a backend
+  with no token channel it degrades to one burst of the completion's
+  tokens (the continuous tier's true incremental stream is covered in
+  ``tests/test_continuous.py``).
+
+Driven through the sleep-tier stubs (``tests/loop_stubs.py``): no compiles,
+deterministic.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.admission import AdmissionConfig, AdmissionQueue
+from repro.serving.lifecycle import (
+    InferenceFuture,
+    QueuedRequest,
+    RequestState,
+)
+from repro.serving.loop import ServingLoop
+from repro.serving.tenancy import (
+    DEFAULT_TENANT,
+    TenantConfig,
+    TenantLanes,
+    parse_tenant_spec,
+)
+
+from loop_stubs import StubHedgeBackend, StubRemoteBackend, stub_scheduler
+
+
+def _request(rid, arrival_ms=0.0, tenant=None, priority=None, sla=None):
+    return QueuedRequest(
+        rid=rid,
+        tokens=np.zeros(4, np.int32),
+        n_steps=2,
+        t_nw_est_ms=10.0,
+        t_nw_actual_ms=10.0,
+        arrival_ms=float(arrival_ms),
+        sla_ms=sla,
+        tenant=tenant,
+        priority=priority,
+    )
+
+
+def _future(rid, tenant=None, **kw):
+    return InferenceFuture(_request(rid, tenant=tenant, **kw))
+
+
+def _lanes_with(tenants, fill):
+    """TenantLanes pre-filled via resolve/append: {tenant: n_requests}."""
+    lanes = TenantLanes(tenants)
+    rid = 0
+    for tenant, n in fill.items():
+        for _ in range(n):
+            f = _future(rid, tenant=tenant)
+            lanes.append(lanes.resolve(f), f)
+            rid += 1
+    return lanes
+
+
+def _loop(admission, *, t_sla_ms=1_000.0, **kw):
+    kw.setdefault("profile_ewma", 0.0)
+    return ServingLoop(
+        stub_scheduler(t_sla_ms=t_sla_ms, **kw),
+        StubRemoteBackend(0.0),
+        StubHedgeBackend(0.0),
+        dispatch="sync",
+        admission=admission,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Config validation + spec parsing.
+# ---------------------------------------------------------------------------
+def test_tenant_config_validation():
+    with pytest.raises(ValueError):
+        TenantConfig("")
+    with pytest.raises(ValueError):
+        TenantConfig("a", weight=0.0)
+    with pytest.raises(ValueError):
+        TenantConfig("a", priority="realtime")
+    with pytest.raises(ValueError):
+        TenantConfig("a", max_pending=0)
+    with pytest.raises(ValueError):
+        TenantConfig("a", burst_credit=-1.0)
+    with pytest.raises(ValueError):
+        TenantLanes([TenantConfig("a"), TenantConfig("a")])  # dup names
+    with pytest.raises(TypeError):
+        AdmissionConfig(tenants=("not-a-config",))
+    # A per-tenant bound satisfies a bounded policy's capacity requirement.
+    cfg = AdmissionConfig(
+        policy="shed", tenants=(TenantConfig("a", max_pending=4),)
+    )
+    assert cfg.max_pending is None
+    with pytest.raises(ValueError):
+        AdmissionConfig(policy="shed", tenants=(TenantConfig("a"),))
+
+
+def test_parse_tenant_spec():
+    tenants = parse_tenant_spec("ui:4:interactive,crawl:1:batch:32")
+    assert tenants == (
+        TenantConfig("ui", weight=4.0, priority="interactive"),
+        TenantConfig("crawl", weight=1.0, priority="batch", max_pending=32),
+    )
+    assert parse_tenant_spec("solo") == (TenantConfig("solo"),)
+    with pytest.raises(ValueError):
+        parse_tenant_spec("a:1:interactive:8:extra")
+    with pytest.raises(ValueError):
+        parse_tenant_spec(":2")
+    with pytest.raises(ValueError):
+        parse_tenant_spec("a:0")  # weight must be > 0
+
+
+# ---------------------------------------------------------------------------
+# The DRR drain: weighted shares, strict priority, FIFO degeneration.
+# ---------------------------------------------------------------------------
+def test_drr_weighted_share_within_a_class():
+    lanes = _lanes_with(
+        [TenantConfig("a", weight=2.0), TenantConfig("b", weight=1.0)],
+        {"a": 20, "b": 20},
+    )
+    out = lanes.select(6)
+    names = [lanes.name_of(f) for f in out]
+    assert names.count("a") == 4 and names.count("b") == 2  # 2:1 share
+    # While both lanes stay backlogged, repeated budgets keep the
+    # weighted share (deficits carry across selects).
+    names += [lanes.name_of(f) for f in lanes.select(9)]
+    assert names.count("a") == 10 and names.count("b") == 5
+    assert len(lanes.select(None)) == 25  # the rest drains completely
+    assert lanes.n_queued() == 0
+
+
+def test_strict_interactive_over_batch_priority():
+    lanes = _lanes_with(
+        [
+            TenantConfig("ui", weight=1.0),
+            TenantConfig("crawl", weight=100.0, priority="batch"),
+        ],
+        {"crawl": 6, "ui": 3},
+    )
+    out = lanes.select(5)
+    names = [lanes.name_of(f) for f in out]
+    # Every interactive request precedes any batch one, regardless of the
+    # batch lane's enormous weight — batch only soaks leftover budget.
+    assert names == ["ui", "ui", "ui", "crawl", "crawl"]
+
+
+def test_single_lane_select_is_fifo_prefix():
+    lanes = _lanes_with([TenantConfig("only", weight=3.0)], {"only": 6})
+    fs = lanes.all_queued()
+    assert lanes.select(4) == fs[:4]
+    assert lanes.select(None) == fs[4:]
+
+
+def test_select_peek_does_not_advance_deficits_or_queues():
+    lanes = _lanes_with(
+        [TenantConfig("a", weight=2.0), TenantConfig("b", weight=1.0)],
+        {"a": 4, "b": 4},
+    )
+    peek = lanes.select(3, commit=False)
+    assert len(peek) == 3 and lanes.n_queued() == 8  # nothing dequeued
+    assert all(lane.deficit == 0.0 for lane in lanes._lanes.values())
+    assert lanes.select(3) == peek  # the commit pick matches the peek
+
+
+def test_burst_credit_caps_banked_deficit_on_lane_empty():
+    lanes = _lanes_with(
+        [
+            TenantConfig("burst", weight=5.0, burst_credit=2.0),
+            TenantConfig("flat", weight=5.0),
+        ],
+        {"burst": 1, "flat": 1},
+    )
+    lanes.select(None)
+    # Each lane earned 5 quanta, spent 1, then emptied: the banked
+    # leftover collapses to the burst allowance (2) or to zero.
+    assert lanes._lanes["burst"].deficit == 2.0
+    assert lanes._lanes["flat"].deficit == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Admission integration: routing, per-tenant bounds, accounting.
+# ---------------------------------------------------------------------------
+def test_untagged_and_unknown_tags_ride_the_default_lane():
+    q = AdmissionQueue(
+        AdmissionConfig(tenants=(TenantConfig("known"),))
+    )
+    assert q.offer(_mk := InferenceFuture(_request(0))) == "admitted"
+    assert q.offer(InferenceFuture(_request(1, tenant="mystery"))) == "admitted"
+    assert q.offer(InferenceFuture(_request(2, tenant="known"))) == "admitted"
+    assert q.tenant_pending(DEFAULT_TENANT) == 2
+    assert q.tenant_pending("known") == 1
+    assert _mk.priority == "interactive"  # the default lane's class
+    assert q.tenant_submitted == {DEFAULT_TENANT: 2, "known": 1}
+
+
+def test_per_tenant_max_pending_sheds_and_charges_the_lane():
+    q = AdmissionQueue(
+        AdmissionConfig(
+            policy="shed",
+            tenants=(
+                TenantConfig("cap2", max_pending=2),
+                TenantConfig("open"),
+            ),
+        )
+    )
+    fs = [InferenceFuture(_request(i, tenant="cap2")) for i in range(5)]
+    outcomes = [q.offer(f) for f in fs]
+    assert outcomes == ["admitted", "admitted", "rejected", "rejected", "rejected"]
+    # The full lane never blocks another tenant.
+    assert q.offer(InferenceFuture(_request(9, tenant="open"))) == "admitted"
+    assert q.n_rejected == 3
+    assert q.tenant_rejected == {"cap2": 3}
+    assert q.tenant_submitted == {"cap2": 5, "open": 1}
+    assert all(f.state is RequestState.REJECTED for f in fs[2:])
+
+
+def test_lane_priority_stamps_the_future_and_request_override_wins():
+    q = AdmissionQueue(
+        AdmissionConfig(
+            tenants=(TenantConfig("crawl", priority="batch"),)
+        )
+    )
+    lane_class = InferenceFuture(_request(0, tenant="crawl"))
+    override = InferenceFuture(
+        _request(1, tenant="crawl", priority="interactive")
+    )
+    q.offer(lane_class)
+    q.offer(override)
+    assert lane_class.priority == "batch"
+    assert override.priority == "interactive"
+
+
+def test_requeue_reenters_at_the_lane_front():
+    q = AdmissionQueue(
+        AdmissionConfig(
+            max_chunk=2,
+            tenants=(TenantConfig("a"), TenantConfig("b", priority="batch")),
+        )
+    )
+    for i, tenant in enumerate(["a", "a", "b", "b"]):
+        q.offer(InferenceFuture(_request(i, tenant=tenant)))
+    batch = q.take(10.0, default_sla_ms=1e9)
+    assert [f.rid for f in batch.chunk] == [0, 1]  # interactive lane first
+    q.requeue(batch.chunk)
+    assert q.n_requeued == 2
+    # The lost rows head their own lane again — still ahead of the batch
+    # class, in their original order.
+    nxt = q.take(20.0, default_sla_ms=1e9)
+    assert [f.rid for f in nxt.chunk] == [0, 1]
+
+
+def test_fifo_mode_counts_tagged_rejects_only():
+    # Without lanes, tenant accounting exists only for tagged requests —
+    # an untagged run's counters (and metrics) stay empty.
+    q = AdmissionQueue(
+        AdmissionConfig(max_pending=1, policy="shed")
+    )
+    q.offer(InferenceFuture(_request(0)))
+    assert q.offer(InferenceFuture(_request(1))) == "rejected"
+    assert q.offer(InferenceFuture(_request(2, tenant="t"))) == "rejected"
+    assert q.n_rejected == 2
+    assert q.tenant_rejected == {"t": 1}  # the untagged reject uncounted
+
+
+def test_tenants_none_never_builds_lanes():
+    assert AdmissionQueue(AdmissionConfig())._lanes is None
+    assert (
+        AdmissionQueue(AdmissionConfig(max_pending=4, policy="shed"))._lanes
+        is None
+    )
+
+
+# ---------------------------------------------------------------------------
+# Loop-level: single-lane tenancy ≡ FIFO (regression pin) and the flood.
+# ---------------------------------------------------------------------------
+def _serve_rows(tenants, *, n=12):
+    loop = _loop(
+        AdmissionConfig(
+            max_pending=6, max_chunk=4, policy="shed", tenants=tenants
+        ),
+        t_sla_ms=1_000.0,
+        seed=3,
+    )
+    fs = [loop.submit(_request(i, arrival_ms=7.0 * i)) for i in range(n)]
+    rows, t = [], 0.0
+    while loop.backlog:
+        t += 50.0
+        res = loop.tick(now_ms=t)
+        if res is not None:
+            rows.extend(
+                (c.rid, c.model_index, c.hedged, c.used_remote,
+                 c.queue_wait_ms, c.race_resolution, c.tenant, c.priority)
+                for c in res.completions
+            )
+    assert all(f.done() for f in fs)
+    return rows
+
+
+def test_single_default_lane_matches_fifo_rows():
+    # An untagged stream through a tenancy queue whose only lane is the
+    # default degenerates to the exact FIFO schedule (same rows, same
+    # order, same accounting) — the lanes machinery adds no behavior
+    # until real tenants diverge.
+    fifo = _serve_rows(None)
+    lanes = _serve_rows((TenantConfig(DEFAULT_TENANT),))
+    assert fifo == lanes
+
+
+def test_flood_isolation_metrics_and_ordering():
+    tenants = (
+        TenantConfig("ui", weight=4.0),
+        TenantConfig("crawl", weight=1.0, priority="batch", max_pending=8),
+    )
+    loop = _loop(
+        AdmissionConfig(policy="shed", max_chunk=8, tenants=tenants),
+        t_sla_ms=10_000.0,
+    )
+    # A batch flood (40 requests) already queued when the interactive
+    # tenant's 8 arrive.
+    flood = [
+        loop.submit(_request(i, arrival_ms=0.0, tenant="crawl"))
+        for i in range(40)
+    ]
+    ui = [
+        loop.submit(_request(100 + i, arrival_ms=1.0, tenant="ui"))
+        for i in range(8)
+    ]
+    order, metrics_last = [], None
+    t = 0.0
+    while loop.backlog:
+        t += 50.0
+        res = loop.tick(now_ms=t)
+        if res is not None:
+            order.extend(c.rid for c in res.completions)
+            metrics_last = res.metrics
+    # Per-lane capacity absorbed the flood: 32 of 40 crawl requests shed
+    # at offer, charged to their lane.
+    assert loop.admission.tenant_rejected == {"crawl": 32}
+    assert sum(f.rejected() for f in flood) == 32
+    assert all(f.done() for f in flood + ui)
+    # Strict priority: every ui request was served before any crawl one.
+    ui_pos = [order.index(f.rid) for f in ui]
+    crawl_pos = [
+        order.index(f.rid) for f in flood if not f.rejected()
+    ]
+    assert max(ui_pos) < min(crawl_pos)
+    # Tick metrics grew the tenancy view: per-lane rows + per-class p99.
+    assert set(metrics_last.tenant_rows) <= {"ui", "crawl"}
+    assert "crawl" in metrics_last.tenant_rows
+    assert metrics_last.tenant_rows["crawl"].priority == "batch"
+    assert set(metrics_last.priority_p99) <= {"interactive", "batch"}
+
+
+def test_drain_trace_tenant_rows_and_priority_p99():
+    from repro.core.network import FixedCVNetwork
+    from repro.serving.loadgen import MixedTenantArrivals, make_trace
+
+    n = 60
+    trace = make_trace(
+        n, MixedTenantArrivals(interactive_rps=50.0, batch_rps=200.0),
+        FixedCVNetwork(10.0, 0.0), seed=8,
+    )
+    tenants = (
+        TenantConfig("interactive", weight=4.0),
+        TenantConfig("batch", weight=1.0, priority="batch", max_pending=16),
+    )
+    loop = _loop(
+        AdmissionConfig(policy="shed", max_chunk=8, tenants=tenants),
+        t_sla_ms=10_000.0,
+    )
+    done, metrics = loop.drain_trace(
+        trace, 50.0, tokens_for=lambda i: np.zeros(4, np.int32), n_steps=2
+    )
+    assert len(done) + metrics.n_rejected == n
+    assert set(metrics.tenant_rows) == {"interactive", "batch"}
+    rows = metrics.tenant_rows
+    assert rows["interactive"].priority == "interactive"
+    assert rows["batch"].priority == "batch"
+    share = sum(r.share for r in rows.values())
+    assert share == pytest.approx(1.0)
+    assert set(metrics.priority_p99) == {"interactive", "batch"}
+    for c in done:
+        assert c.tenant in ("interactive", "batch")
+        assert c.priority == ("batch" if c.tenant == "batch" else "interactive")
+
+
+def test_untenanted_metrics_stay_unchanged():
+    loop = _loop(AdmissionConfig(max_pending=8, max_chunk=8, policy="shed"))
+    for i in range(4):
+        loop.submit(_request(i))
+    res = loop.tick(now_ms=50.0)
+    assert res.metrics.tenant_rows == {}
+    assert res.metrics.priority_p99 == {}
+
+
+# ---------------------------------------------------------------------------
+# Streaming: the no-token-channel fallback (stubs have no decode stream).
+# ---------------------------------------------------------------------------
+def test_stream_fallback_bursts_completion_tokens():
+    loop = _loop(AdmissionConfig())
+    f = loop.submit(_request(0))
+    chunks = list(f.stream())  # drives the loop, then bursts
+    c = f.result(timeout=0)
+    assert f.done() and c is not None
+    assert [ch.index for ch in chunks] == list(range(len(chunks)))
+    assert [ch.token for ch in chunks] == list(
+        np.asarray(c.tokens).ravel()
+    )
+    assert len({ch.wall_ms for ch in chunks}) == 1  # one burst stamp
+    assert f.chunks == chunks
+
+
+def test_stream_on_resolved_future_replays_chunks():
+    loop = _loop(AdmissionConfig())
+    f = loop.submit(_request(0))
+    f.result()  # resolve first
+    first = list(f.stream())
+    again = list(f.stream())  # replay is stable, no double-push
+    assert first == again and len(first) == 2

@@ -1,7 +1,6 @@
 """Fault tolerance end-to-end: failure injection + bit-identical resume."""
 import io
 import re
-import sys
 from contextlib import redirect_stdout
 
 import pytest
