@@ -772,6 +772,281 @@ def _continuous_batching(
     return growth
 
 
+def _drift_gauntlet(
+    *, n_requests: int, sla_ms: float = 250.0, seed: int = 0, sync: bool = False
+):
+    """Drift gauntlet rows (PR 9 tentpole): adaptive vs static-tuned oracle.
+
+    Four drift scenarios — diurnal arrival swing, 30x service spike,
+    flapping replica on a heterogeneous 2-replica pool, university→LTE
+    network swap — each served twice: with the best static
+    :class:`AdmissionConfig` from a small grid (the scenario's
+    *static-tuned oracle*) and with a deliberately mistuned static config
+    plus an :class:`AdmissionController` closing the loop.  The
+    ``adaptive`` row's ``vs_oracle`` ratio is the acceptance signal
+    (``<=1.25x`` in >=3 of 4 scenarios; the seeded deterministic twin of
+    this comparison is asserted in ``tests/test_drift_gauntlet.py``).
+    """
+    import jax
+
+    from repro.configs import reduced
+    from repro.core.network import LognormalNetwork, SwitchedNetwork, lte_trace
+    from repro.models import transformer as T
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.backend import JitBackend, OnDeviceBackend
+    from repro.serving.cluster import ClusterBackend, ReplicaSpec
+    from repro.serving.controller import AdmissionController, ControllerConfig
+    from repro.serving.engine import ServingEngine, Variant
+    from repro.serving.loadgen import (
+        DiurnalArrivals,
+        PoissonArrivals,
+        SpikeArrivals,
+        make_trace,
+    )
+
+    prompt, gen, window_ms = 8, 2, 100.0
+    service_ms = 6.0  # per row on one unit-scale replica
+    capacity_rps = 1e3 / service_ms
+    dispatch = "sync" if sync else "async"
+    max_len = prompt + gen + 4
+
+    hedge = OnDeviceBackend.from_zoo(max_len=max_len)
+    ondevice = hedge.measure_profile(prompt_len=prompt, gen_tokens=gen, trials=2)
+    cfg = reduced(
+        "gemma-2b", d_model=64, n_layers=2, n_heads=2, n_kv_heads=1, head_dim=32
+    )
+    params = T.init_params(cfg, jax.random.key(seed))
+
+    flap_specs = [
+        ReplicaSpec(weight=2.0), ReplicaSpec(weight=1.0, service_scale=2.0)
+    ]
+    registry = None
+    engines = {}
+
+    def get_engine(n_replicas):
+        """One engine per pool shape, reused across every run (a fresh
+        JitBackend per run would re-jit 12+ times for nothing)."""
+        nonlocal registry
+        if n_replicas not in engines:
+            if n_replicas == 1:
+                engine = ServingEngine(
+                    max_len=max_len, hedge_backend=hedge, dispatch=dispatch
+                )
+            else:
+                backend = ClusterBackend(
+                    [JitBackend(max_len) for _ in range(n_replicas)],
+                    router="least_inflight", seed=seed, specs=flap_specs,
+                )
+                engine = ServingEngine(
+                    max_len=max_len, backend=backend, hedge_backend=hedge,
+                    dispatch=dispatch,
+                )
+            engine.register(Variant("remote", cfg, params, 80.0))
+            if registry is None:
+                registry = engine.measure_profiles(
+                    prompt_len=prompt, gen_tokens=gen, trials=2
+                )
+            engines[n_replicas] = engine
+        return engines[n_replicas]
+
+    spike = SpikeArrivals(
+        rate_rps=0.8 * capacity_rps, spike_factor=30.0,
+        spike_start=0.4, spike_stop=0.6,
+    )
+    scenarios = (
+        ("diurnal",
+         lambda n: make_trace(
+             n, DiurnalArrivals(0.2 * capacity_rps, 3.0 * capacity_rps),
+             LognormalNetwork(80.0, 0.6), seed=seed), 1),
+        ("spike",
+         lambda n: make_trace(
+             n, spike, LognormalNetwork(80.0, 0.6), seed=seed), 1),
+        ("flap",
+         lambda n: make_trace(
+             n, PoissonArrivals(1.2 * capacity_rps),
+             LognormalNetwork(80.0, 0.6), seed=seed), 2),
+        ("network_swap",
+         lambda n: make_trace(
+             n, PoissonArrivals(1.1 * capacity_rps),
+             SwitchedNetwork(university_trace(), lte_trace(), 0.5),
+             seed=seed), 1),
+    )
+
+    def serve(scenario, trace, prompts, admission, controller, n_replicas):
+        engine = get_engine(n_replicas)
+        backend = engine.backend
+        sched = MDInferenceScheduler(
+            registry, ondevice, SchedulerConfig(t_sla_ms=sla_ms, seed=seed)
+        )
+        loop = engine.make_loop(
+            sched, admission=admission, controller=controller
+        )
+        horizon = float(trace.arrival_ms[-1])
+        state = {"factor": 1.0}
+        scales = (
+            [s.service_scale for s in flap_specs] if n_replicas > 1 else [1.0]
+        )
+
+        def on_tick(t_ms, res):
+            if scenario == "spike":
+                state["factor"] = spike.service_factor(t_ms, horizon)
+            if scenario == "flap":
+                drained = backend.pool.replicas[0].health.draining
+                if 0.3 <= t_ms / horizon < 0.6:
+                    if not drained:
+                        backend.drain(0)
+                elif drained:
+                    backend.rejoin(0)
+
+        def service_model(res):
+            rows = res.stats.replica_rows
+            busiest = (
+                res.stats.n_requests
+                if not rows
+                else max(r * scales[rid] for rid, r in rows.items())
+            )
+            return service_ms * state["factor"] * busiest
+
+        t0 = time.perf_counter()
+        done, metrics = loop.drain_trace(
+            trace, window_ms, tokens_for=lambda i: prompts[i], n_steps=gen,
+            on_tick=on_tick, service_model=service_model,
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        if n_replicas > 1 and backend.pool.replicas[0].health.draining:
+            backend.rejoin(0)  # leave the shared engine clean for reuse
+        return done, metrics, us
+
+    grid = (8, 64) if n_requests <= 160 else (8, 16, 64)
+    controller_cfg = ControllerConfig(
+        target_wait_frac=0.1, wait_alpha=0.7, max_pending=64
+    )
+    for scenario, mk_trace, n_replicas in scenarios:
+        trace = mk_trace(n_requests)
+        prompts = np.random.default_rng(seed).integers(
+            0, 256, (n_requests, prompt)
+        )
+        static_runs = []
+        for mp in grid:
+            _, m, us = serve(
+                scenario, trace, prompts,
+                AdmissionConfig(policy="shed", max_pending=mp, max_chunk=16),
+                None, n_replicas,
+            )
+            static_runs.append((mp, m, us))
+        best_goodput = max(m.goodput for _, m, _ in static_runs)
+        mp, oracle, us = min(
+            (r for r in static_runs if r[1].goodput >= 0.9 * best_goodput),
+            key=lambda r: r[1].p99_latency_ms,
+        )
+        emit(
+            f"serving/drift/{scenario}/static_oracle",
+            us / max(oracle.n_requests, 1),
+            f"p99={oracle.p99_latency_ms:.1f}ms "
+            f"goodput={oracle.goodput*100:.2f}% "
+            f"shed_rate={oracle.shed_rate*100:.2f}% "
+            f"max_pending={mp} (best of grid {grid})",
+        )
+        controller = AdmissionController(controller_cfg)
+        _, adaptive, us = serve(
+            scenario, trace, prompts,
+            AdmissionConfig(policy="shed", max_pending=64, max_chunk=16),
+            controller, n_replicas,
+        )
+        ratio = adaptive.p99_latency_ms / max(oracle.p99_latency_ms, 1e-9)
+        emit(
+            f"serving/drift/{scenario}/adaptive",
+            us / max(adaptive.n_requests, 1),
+            f"p99={adaptive.p99_latency_ms:.1f}ms "
+            f"vs_oracle={ratio:.2f}x (target <=1.25x in 3/4) "
+            f"goodput={adaptive.goodput*100:.2f}% "
+            f"retunes={controller.n_retunes} "
+            f"(mistuned start max_pending=64)",
+        )
+
+
+def _adaptive_recompile_check(*, n_requests: int, seed: int = 0) -> int:
+    """The controller must add zero recompiles on the continuous tier.
+
+    Drives a controller-attached, bounded-admission overload trace through
+    the continuous-batching backend and returns the post-warmup compile
+    growth (0 = the adaptive path never perturbs batch shapes in a way
+    that escapes the fixed-shape ladder) — folded into the
+    ``--check-compiles`` CI gate.
+    """
+    import jax
+
+    from repro.configs import reduced
+    from repro.configs.mdinference_zoo import ServingGeometry
+    from repro.core.network import LognormalNetwork
+    from repro.models import transformer as T
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.backend import OnDeviceBackend
+    from repro.serving.controller import AdmissionController, ControllerConfig
+    from repro.serving.engine import ServingEngine, Variant
+    from repro.serving.loadgen import OverloadArrivals, make_trace
+
+    prompt, gen, window_ms = 8, 8, 100.0
+    service_ms = 6.0
+    capacity_rps = 1e3 / service_ms
+    geo = ServingGeometry(
+        max_len=prompt + gen + 4, prompt_width=prompt, bs_ladder=(1, 2, 4, 8),
+        n_slots=8, page_size=8, max_steps=8,
+    )
+    hedge = OnDeviceBackend.from_zoo(max_len=prompt + gen + 4)
+    ondevice = hedge.measure_profile(prompt_len=prompt, gen_tokens=gen, trials=2)
+    engine = ServingEngine(hedge_backend=hedge, continuous=True, geometry=geo)
+    cfg = reduced(
+        "gemma-2b", d_model=64, n_layers=2, n_heads=2, n_kv_heads=1, head_dim=32
+    )
+    engine.register(
+        Variant("remote", cfg, T.init_params(cfg, jax.random.key(seed)), 80.0)
+    )
+    registry = engine.measure_profiles(prompt_len=prompt, gen_tokens=gen, trials=2)
+    backend = engine.backend
+    backend.warmup()
+    for N in (1, 2, 4, 8):
+        hedge.run_batch(hedge.hedge_name, np.zeros((N, prompt), np.int32), gen)
+    compiles_after_warmup = backend.compile_count
+
+    sched = MDInferenceScheduler(
+        registry, ondevice, SchedulerConfig(t_sla_ms=400.0, seed=seed)
+    )
+    controller = AdmissionController(ControllerConfig(target_wait_frac=0.1))
+    loop = engine.make_loop(
+        sched,
+        admission=AdmissionConfig(
+            policy="shed", max_pending=16, max_chunk=geo.n_slots
+        ),
+        controller=controller,
+    )
+    trace = make_trace(
+        n_requests,
+        OverloadArrivals(
+            rate_rps=capacity_rps, overload_factor=2.0,
+            overload_start=0.0, overload_stop=1.0,
+        ),
+        LognormalNetwork(80.0, 0.6),
+        seed=seed,
+    )
+    prompts = np.random.default_rng(seed).integers(0, 256, (n_requests, prompt))
+    loop.drain_trace(
+        trace, window_ms, tokens_for=lambda i: prompts[i], n_steps=gen,
+        service_model=lambda res: service_ms * res.stats.n_requests,
+    )
+    backend.check_conservation()
+    growth = backend.compile_count - compiles_after_warmup
+    emit(
+        "serving/drift/recompiles",
+        0.0,
+        f"compile_count={backend.compile_count} "
+        f"post_warmup_growth={growth} (must be 0) "
+        f"retunes={controller.n_retunes} "
+        "(controller-attached continuous tier)",
+    )
+    return growth
+
+
 def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False) -> int:
     reg = lm_zoo_registry(chips=8)
     for p in reg:
@@ -862,6 +1137,18 @@ def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False) -> int
     # is thread-free, so the rows are deterministic with or without --sync.
     compile_growth = _continuous_batching(n_requests=48 if smoke else 160)
 
+    # Drift gauntlet (PR 9 tentpole): diurnal / spike / flapping-replica /
+    # network-swap scenarios, each served by the best static admission
+    # config from a grid (the static-tuned oracle) and by a mistuned
+    # static config + AdmissionController closing the loop — the adaptive
+    # row's p99 tracks the oracle without per-scenario hand-tuning.
+    _drift_gauntlet(n_requests=120 if smoke else 400, sync=sync)
+
+    # The controller must be invisible to the compile caches: a
+    # controller-attached bounded-admission run on the continuous tier
+    # folds its post-warmup compile growth into the --check-compiles gate.
+    compile_growth += _adaptive_recompile_check(n_requests=48 if smoke else 160)
+
     write_results("serving")
     return compile_growth
 
@@ -875,7 +1162,8 @@ if __name__ == "__main__":
                     "deterministic rows (used by CI)")
     ap.add_argument("--check-compiles", action="store_true",
                     help="exit nonzero on any post-warmup recompile of the "
-                    "continuous tier's fixed-shape entry points (CI gate)")
+                    "continuous tier's fixed-shape entry points, with or "
+                    "without an AdmissionController attached (CI gate)")
     args = ap.parse_args()
     growth = run(smoke=args.smoke, sync=args.sync)
     if args.check_compiles and growth != 0:

@@ -31,6 +31,7 @@ __all__ = [
     "FixedCVNetwork",
     "LognormalNetwork",
     "TraceNetwork",
+    "SwitchedNetwork",
     "university_trace",
     "residential_trace",
     "lte_trace",
@@ -87,6 +88,35 @@ class TraceNetwork(NetworkModel):
     def sample(self, rng, n):
         trace = np.asarray(self.trace_ms)
         return trace[rng.integers(0, len(trace), size=n)]
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchedNetwork(NetworkModel):
+    """A mid-stream network handover: the first ``switch_frac`` fraction of
+    requests samples from ``before``, the rest from ``after``.
+
+    Models a device walking off university WiFi onto LTE (or back) —
+    the paper's §III mobility motivation.  Requests are arrival-ordered
+    in a :class:`~repro.serving.loadgen.LoadTrace`, so "first fraction of
+    samples" is "first fraction of the run" for every arrival process in
+    :mod:`repro.serving.loadgen`.
+    """
+
+    before: NetworkModel
+    after: NetworkModel
+    switch_frac: float = 0.5
+
+    def __post_init__(self):
+        if not 0.0 <= self.switch_frac <= 1.0:
+            raise ValueError(
+                f"switch_frac must be in [0, 1], got {self.switch_frac}"
+            )
+
+    def sample(self, rng, n):
+        n_before = int(round(n * self.switch_frac))
+        head = self.before.sample(rng, n_before)
+        tail = self.after.sample(rng, n - n_before)
+        return np.concatenate([np.asarray(head), np.asarray(tail)])
 
 
 def _mixture_trace(

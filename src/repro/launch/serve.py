@@ -36,6 +36,13 @@ rate instead of the interactive tenant's p99.  ``--stream`` (with
 ``--continuous``) demonstrates token streaming: one request consumed chunk
 by chunk as the persistent decode batch emits tokens.
 
+Adaptivity under drift: ``--controller`` attaches an
+``AdmissionController`` that retunes ``--max-pending`` and the shed
+margin each tick from the live queue-wait/shed/service signals (clamped
+AIMD with hysteresis); ``--replica-spec '2:8:0.5,1'`` declares a
+heterogeneous pool (per-replica weight / soft concurrency cap / service
+scale) that the load-aware routers account for.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --requests 50 --sla 2000
 """
@@ -53,7 +60,13 @@ from repro.core.network import NAMED_TRACES, LognormalNetwork
 from repro.models import transformer as T
 from repro.serving.admission import OVERLOAD_POLICIES, AdmissionConfig
 from repro.serving.backend import JitBackend, OnDeviceBackend
-from repro.serving.cluster import ROUTERS, ClusterBackend, shard_slices
+from repro.serving.cluster import (
+    ROUTERS,
+    ClusterBackend,
+    parse_replica_specs,
+    shard_slices,
+)
+from repro.serving.controller import AdmissionController, ControllerConfig
 from repro.serving.transport import ProcessTransportBackend
 from repro.serving.engine import ServingEngine, Variant
 from repro.serving.loadgen import (
@@ -83,7 +96,7 @@ def build_engine(
     max_len: int, seed: int = 0, measured_hedge: bool = True,
     dispatch: str = "async", replicas: int = 1, router: str = "round_robin",
     shard_zoo: bool = False, transport: str = "none",
-    geometry=None,
+    geometry=None, specs=None,
 ) -> ServingEngine:
     hedge = (
         OnDeviceBackend.from_zoo(max_len=max_len, seed=seed)
@@ -129,7 +142,7 @@ def build_engine(
 
         backend = ClusterBackend(
             [make_replica() for _ in range(replicas)],
-            router=router, slices=slices, seed=seed,
+            router=router, slices=slices, seed=seed, specs=specs,
         )
     engine = ServingEngine(
         max_len=max_len, backend=backend, hedge_backend=hedge,
@@ -211,6 +224,25 @@ def main(argv=None):
                     "round_robin, least_inflight (join-shortest-queue), "
                     "power_of_two (2 random replicas, pick by live "
                     "latency EWMA)")
+    ap.add_argument("--replica-spec", default=None, metavar="SPEC",
+                    help="heterogeneous replica pool (with --replicas > 1): "
+                    "'weight[:max_concurrency[:service_scale]],...' — one "
+                    "entry per replica, empty fields keep the default, e.g. "
+                    "'2:8:0.5,1' (a double-weight box capped at 8 inflight "
+                    "rows that runs 2x fast, next to a stock one).  Routers "
+                    "normalize queue depth by weight and treat "
+                    "max_concurrency as a soft routing cap")
+    ap.add_argument("--controller", action="store_true",
+                    help="close the loop on admission: an "
+                    "AdmissionController reads each tick's queue-wait / "
+                    "shed / service signals and retunes --max-pending and "
+                    "the shed margin via a clamped AIMD law with "
+                    "hysteresis (requires --max-pending; without this "
+                    "flag the static config is served byte-identically)")
+    ap.add_argument("--controller-target-frac", type=float, default=0.2,
+                    metavar="FRAC",
+                    help="controller setpoint: target queue wait as a "
+                    "fraction of --sla (default 0.2)")
     ap.add_argument("--shard-zoo", action="store_true",
                     help="shard the model zoo across replicas (disjoint "
                     "slices, one backend per slice) instead of full "
@@ -274,6 +306,29 @@ def main(argv=None):
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
 
+    specs = None
+    if args.replica_spec is not None:
+        if args.replicas <= 1:
+            ap.error("--replica-spec needs a pool (--replicas > 1)")
+        try:
+            specs = parse_replica_specs(args.replica_spec, args.replicas)
+        except ValueError as e:
+            ap.error(f"--replica-spec: {e}")
+
+    controller = None
+    if args.controller:
+        if args.max_pending is None and not tenant_bounded:
+            ap.error(
+                "--controller retunes a bounded queue; give it "
+                "--max-pending (the knob it drives)"
+            )
+        try:
+            controller = AdmissionController(
+                ControllerConfig(target_wait_frac=args.controller_target_frac)
+            )
+        except ValueError as e:
+            ap.error(f"--controller-target-frac: {e}")
+
     geometry = None
     dispatch = args.dispatch
     if args.continuous:
@@ -312,7 +367,7 @@ def main(argv=None):
         max_len=args.prompt + args.gen + 8, seed=args.seed,
         measured_hedge=measured, dispatch=dispatch,
         replicas=args.replicas, router=args.router, shard_zoo=args.shard_zoo,
-        transport=args.transport, geometry=geometry,
+        transport=args.transport, geometry=geometry, specs=specs,
     )
     cluster = engine.backend if isinstance(engine.backend, ClusterBackend) else None
     if args.kill_replica_at is not None and cluster is None:
@@ -323,7 +378,17 @@ def main(argv=None):
             f"transport={args.transport}"
         )
         for snap in cluster.snapshot():
-            print(f"  replica {snap.replica_id}: hosts {list(snap.hosts)}")
+            hw = ""
+            if specs is not None:
+                cap = (
+                    "inf" if snap.max_concurrency is None
+                    else snap.max_concurrency
+                )
+                hw = (
+                    f" weight={snap.weight:g} cap={cap} "
+                    f"scale={snap.service_scale:g}"
+                )
+            print(f"  replica {snap.replica_id}: hosts {list(snap.hosts)}{hw}")
     registry = engine.measure_profiles(
         prompt_len=args.prompt, gen_tokens=args.gen, trials=3, seed=args.seed
     )
@@ -438,7 +503,7 @@ def main(argv=None):
             f"exec={c.exec_ms:.1f}ms"
         )
 
-    loop = engine.make_loop(sched, admission=admission)
+    loop = engine.make_loop(sched, admission=admission, controller=controller)
     # Server service time covers the remote-scheduled rows only: the
     # degrade lane executes on the device, so it costs the device — not
     # the server's clock (that offload is the degrade policy's point).
@@ -538,6 +603,15 @@ def main(argv=None):
             f"max_pending={args.max_pending} shed_rate={metrics.shed_rate*100:.1f}% "
             f"goodput={metrics.goodput*100:.1f}%\n"
         )
+    controller_note = ""
+    if controller is not None:
+        cfg_now = loop.admission.cfg
+        controller_note = (
+            f"controller        : retunes={controller.n_retunes} "
+            f"final max_pending={cfg_now.max_pending} "
+            f"shed_headroom={cfg_now.shed_headroom_ms:.0f}ms "
+            f"(setpoint {args.controller_target_frac:.2f}x sla)\n"
+        )
     tenancy_note = ""
     if metrics.tenant_rows:
         lanes = "\n".join(
@@ -571,6 +645,7 @@ def main(argv=None):
         f"[{hedge_note}]\n"
         f"race resolution   : {races}\n"
         f"{admission_note}"
+        f"{controller_note}"
         f"{tenancy_note}"
         f"{cluster_note}"
         f"queue wait        : mean {waits.mean():.0f}ms  max {waits.max():.0f}ms  "

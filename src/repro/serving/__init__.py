@@ -20,11 +20,14 @@ from repro.serving.cluster import (
     PowerOfTwoRouter,
     Replica,
     ReplicaPool,
+    ReplicaSpec,
     RoundRobinRouter,
     Router,
     make_router,
+    parse_replica_specs,
     shard_slices,
 )
+from repro.serving.controller import AdmissionController, ControllerConfig
 from repro.serving.health import BreakerConfig, CircuitBreaker, ReplicaHealth
 from repro.serving.engine import (
     CompletedRequest,
@@ -40,10 +43,12 @@ from repro.serving.lifecycle import (
 )
 from repro.serving.loadgen import (
     BurstyArrivals,
+    DiurnalArrivals,
     LoadTrace,
     OverloadArrivals,
     PoissonArrivals,
     RampArrivals,
+    SpikeArrivals,
     iter_windows,
     make_trace,
 )
@@ -64,19 +69,22 @@ from repro.serving.scheduler import (
 )
 
 __all__ = [
-    "AdmissionConfig", "AdmissionQueue", "BatchDecision", "BatchHandle",
+    "AdmissionConfig", "AdmissionController", "AdmissionQueue",
+    "BatchDecision", "BatchHandle",
     "BreakerConfig", "BurstyArrivals", "CircuitBreaker", "ClusterBackend",
-    "CompletedRequest", "Decision", "ExecutionBackend", "FailedBatchHandle",
+    "CompletedRequest", "ControllerConfig", "Decision", "DiurnalArrivals",
+    "ExecutionBackend", "FailedBatchHandle",
     "InferenceClient", "InferenceFuture", "JitBackend",
     "LeastInflightRouter", "LoadTrace", "MDInferenceScheduler",
     "NoHealthyReplica", "ONDEVICE_TIER", "OnDeviceBackend",
     "OverloadArrivals", "PoissonArrivals", "PowerOfTwoRouter",
     "ProcessTransportBackend", "QueuedRequest", "ROUTERS", "RampArrivals",
     "RemoteExecutionError", "Replica", "ReplicaDied", "ReplicaHealth",
-    "ReplicaPool", "RequestCancelled", "RequestRejected", "RequestState",
-    "RoundRobinRouter", "Router", "SchedulerConfig", "ServingEngine",
-    "ServingLoop", "TickResult", "TickStats", "TransportError", "V5E",
+    "ReplicaPool", "ReplicaSpec", "RequestCancelled", "RequestRejected",
+    "RequestState", "RoundRobinRouter", "Router", "SchedulerConfig",
+    "ServingEngine", "ServingLoop", "SpikeArrivals", "TickResult",
+    "TickStats", "TransportError", "V5E",
     "Variant", "build_hedge_variant", "estimate_ms", "iter_windows",
-    "lm_zoo_registry", "make_router", "make_trace", "shard_slices",
-    "sla_unreachable",
+    "lm_zoo_registry", "make_router", "make_trace", "parse_replica_specs",
+    "shard_slices", "sla_unreachable",
 ]

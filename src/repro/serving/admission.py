@@ -58,6 +58,8 @@ __all__ = [
 
 OVERLOAD_POLICIES = ("unbounded", "block", "shed", "degrade")
 
+_UNSET = object()  # retune(): "leave this knob alone" sentinel
+
 
 def sla_unreachable(
     queue_wait_ms: float,
@@ -229,6 +231,42 @@ class AdmissionQueue:
     def _admit_stamp(future: InferenceFuture) -> None:
         future.admitted = True
         future.admitted_wall_ms = time.perf_counter() * 1e3
+
+    # -- adaptive retuning -----------------------------------------------------
+    def retune(
+        self,
+        *,
+        max_pending=_UNSET,
+        max_chunk=_UNSET,
+        shed_headroom_ms=_UNSET,
+    ) -> AdmissionConfig:
+        """Replace the queue's *capacity* knobs mid-run — the surface the
+        adaptive :class:`repro.serving.controller.AdmissionController`
+        drives.  Returns the config now in effect.
+
+        Only capacity knobs are retunable; policy, tenants, and the
+        inflight gate are structural and keep their configured values.
+        The swap is atomic under the queue lock and re-validated by
+        :class:`AdmissionConfig` (shrinking ``max_pending`` below 1, or
+        dropping it while a bounded policy is active, raises instead of
+        wedging the queue).  Already-admitted requests are never
+        retro-shed by a shrink: capacity is only consulted on *offer*,
+        and the shed predicate is monotone in the margin — a smaller
+        ``shed_headroom_ms`` sheds a strict subset of what the old
+        margin would have (regression-tested in
+        ``tests/test_admission.py``).
+        """
+        kw = {}
+        if max_pending is not _UNSET:
+            kw["max_pending"] = max_pending
+        if max_chunk is not _UNSET:
+            kw["max_chunk"] = max_chunk
+        if shed_headroom_ms is not _UNSET:
+            kw["shed_headroom_ms"] = float(shed_headroom_ms)
+        with self._lock:
+            if kw:
+                self.cfg = dataclasses.replace(self.cfg, **kw)
+            return self.cfg
 
     # -- submit side -----------------------------------------------------------
     def offer(self, future: InferenceFuture) -> str:

@@ -74,6 +74,8 @@ __all__ = [
     "ROUTERS",
     "NoHealthyReplica",
     "Replica",
+    "ReplicaSpec",
+    "parse_replica_specs",
     "ReplicaPool",
     "Router",
     "RoundRobinRouter",
@@ -91,6 +93,85 @@ class NoHealthyReplica(RuntimeError):
     on-device degrade lane instead of crashing the tick."""
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaSpec:
+    """Per-replica hardware shape for a *heterogeneous* pool.
+
+    Real fleets (llm-farm-style phone farms, mixed accelerator
+    generations) are not homogeneous; the spec tells routing how unequal
+    a replica is:
+
+    * ``weight`` — relative serving capacity.  Load-aware routers divide
+      a replica's inflight/dispatched rows by its weight, so a weight-2
+      replica is expected to carry 2x the rows of a weight-1 one before
+      looking equally loaded.
+    * ``max_concurrency`` — a soft inflight-row cap: a replica at or
+      above it is skipped by routing while any eligible peer has
+      capacity (it never becomes *unroutable* — when every peer is full
+      the pick proceeds over the full eligible set, so saturation is
+      back-pressure, not an outage).
+    * ``service_scale`` — relative service-time multiplier (1.0 =
+      nominal, 2.0 = half-speed silicon).  Routing does not consume it
+      directly — the live ``ewma_wall_ms`` measures actual slowness —
+      but service models (``drain_trace`` coupling, benches) charge
+      ``rows * service_scale`` so a slow replica's makespan is honest.
+
+    The default spec (weight 1, no cap, scale 1) on every replica is the
+    homogeneous pool, byte-identical to the pre-spec cluster
+    (regression-pinned in ``tests/test_cluster.py``).
+    """
+
+    weight: float = 1.0
+    max_concurrency: Optional[int] = None
+    service_scale: float = 1.0
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(f"weight must be > 0, got {self.weight}")
+        if self.max_concurrency is not None and self.max_concurrency < 1:
+            raise ValueError(
+                f"max_concurrency must be >= 1 or None, got "
+                f"{self.max_concurrency}"
+            )
+        if self.service_scale <= 0:
+            raise ValueError(
+                f"service_scale must be > 0, got {self.service_scale}"
+            )
+
+
+def parse_replica_specs(text: str, n_replicas: int) -> List[ReplicaSpec]:
+    """Parse a CLI fleet description into per-replica specs.
+
+    ``text`` is comma-separated, one ``weight[:max_concurrency[:scale]]``
+    entry per replica (empty fields keep the default), e.g.
+    ``"2:8:0.5,1,1::2"`` — a weight-2 replica capped at 8 inflight rows
+    at double speed, a nominal replica, and a half-speed replica.
+    """
+    entries = [e.strip() for e in text.split(",")]
+    if len(entries) != n_replicas:
+        raise ValueError(
+            f"--replica-spec names {len(entries)} replicas but the pool "
+            f"has {n_replicas}"
+        )
+    specs = []
+    for entry in entries:
+        parts = entry.split(":")
+        if len(parts) > 3:
+            raise ValueError(
+                f"replica spec entry {entry!r} has more than "
+                "weight:max_concurrency:service_scale"
+            )
+        parts += [""] * (3 - len(parts))
+        specs.append(
+            ReplicaSpec(
+                weight=float(parts[0]) if parts[0] else 1.0,
+                max_concurrency=int(parts[1]) if parts[1] else None,
+                service_scale=float(parts[2]) if parts[2] else 1.0,
+            )
+        )
+    return specs
+
+
 class Replica:
     """One routable backend replica in a pool.
 
@@ -99,7 +180,9 @@ class Replica:
     actually *hosts* is its backend's variant registry — the source of
     truth routing consults.  ``health`` is the replica's routability
     state (circuit breaker + drain flag); a replica can *host* a variant
-    yet be unroutable this tick.
+    yet be unroutable this tick.  ``spec`` is the replica's hardware
+    shape (:class:`ReplicaSpec`) — the default is the homogeneous
+    nominal replica.
     """
 
     def __init__(
@@ -108,6 +191,7 @@ class Replica:
         backend: ExecutionBackend,
         slice_names: Optional[Sequence[str]] = None,
         breaker: Optional[BreakerConfig] = None,
+        spec: Optional[ReplicaSpec] = None,
     ):
         self.replica_id = replica_id
         self.backend = backend
@@ -117,6 +201,7 @@ class Replica:
         self.health = ReplicaHealth(
             None if breaker is None else CircuitBreaker(breaker)
         )
+        self.spec = spec if spec is not None else ReplicaSpec()
 
     def admits(self, name: str) -> bool:
         """Whether registration may place variant ``name`` here."""
@@ -143,6 +228,21 @@ class Replica:
     @property
     def ewma_wall_ms(self) -> Optional[float]:
         return self.backend.ewma_wall_ms
+
+    # Heterogeneity (spec-derived; nominal defaults on every replica).
+    @property
+    def weight(self) -> float:
+        return self.spec.weight
+
+    @property
+    def service_scale(self) -> float:
+        return self.spec.service_scale
+
+    @property
+    def has_capacity(self) -> bool:
+        """Below the spec's soft inflight cap (always True uncapped)."""
+        cap = self.spec.max_concurrency
+        return cap is None or self.inflight_rows < cap
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (
@@ -205,10 +305,16 @@ class RoundRobinRouter(Router):
 class LeastInflightRouter(Router):
     """Join-shortest-queue over per-replica inflight-row accounting.
 
-    Ties break on cumulative dispatched rows (least total work first), so
-    serialized ``sync`` dispatch — where batches complete inline and
-    inflight is 0 at every pick — still spreads load instead of pinning
-    everything to replica 0; then on ``replica_id`` for determinism.
+    Load is *weight-normalized* (``inflight_rows / weight``): in a
+    heterogeneous pool a weight-2 replica absorbs 2x the rows of a
+    weight-1 peer before looking equally loaded, so unequal hardware gets
+    its proportional share instead of a blind even split.  Ties break on
+    weight-normalized cumulative dispatched rows (least total work
+    first), so serialized ``sync`` dispatch — where batches complete
+    inline and inflight is 0 at every pick — still spreads load instead
+    of pinning everything to replica 0; then on ``replica_id`` for
+    determinism.  With the default weight 1 everywhere the keys equal
+    the raw row counts — the homogeneous pool routes byte-identically.
     """
 
     name = "least_inflight"
@@ -220,7 +326,11 @@ class LeastInflightRouter(Router):
         self._require_nonempty(eligible)
         return min(
             eligible,
-            key=lambda r: (r.inflight_rows, r.dispatched_rows, r.replica_id),
+            key=lambda r: (
+                r.inflight_rows / r.weight,
+                r.dispatched_rows / r.weight,
+                r.replica_id,
+            ),
         )
 
 
@@ -258,8 +368,15 @@ class PowerOfTwoRouter(Router):
 
     @staticmethod
     def _key(r: Replica):
+        # The EWMA already *measures* heterogeneity (a half-speed replica
+        # reports 2x walls); the inflight tie-break is weight-normalized
+        # so equal-EWMA candidates split proportionally to capacity.
         ewma = r.ewma_wall_ms
-        return (0.0 if ewma is None else ewma, r.inflight_rows, r.replica_id)
+        return (
+            0.0 if ewma is None else ewma,
+            r.inflight_rows / r.weight,
+            r.replica_id,
+        )
 
     def pick(self, eligible: Sequence[Replica]) -> Replica:
         self._require_nonempty(eligible)
@@ -325,6 +442,10 @@ class ReplicaSnapshot:
     reason: Optional[str] = None  # why the breaker tripped (open/half_open)
     open_until_ms: Optional[float] = None  # loop-clock; inf: permanent (kill)
     draining: bool = False
+    # Hardware shape (heterogeneous pools; nominal defaults otherwise).
+    weight: float = 1.0
+    max_concurrency: Optional[int] = None
+    service_scale: float = 1.0
 
 
 class ReplicaPool:
@@ -335,7 +456,10 @@ class ReplicaPool:
     :class:`ClusterBackend` — fronts a pool behind the single-backend
     execution interface.  ``slices`` restricts which variants each
     replica admits (see :func:`shard_slices`); ``None`` replicates every
-    variant everywhere.
+    variant everywhere.  ``specs`` gives each replica its hardware shape
+    (:class:`ReplicaSpec` — weight / soft concurrency cap / service
+    scale) for heterogeneous fleets; ``None`` keeps every replica
+    nominal, byte-identical to the pre-spec pool.
     """
 
     def __init__(
@@ -343,6 +467,7 @@ class ReplicaPool:
         backends: Sequence[ExecutionBackend],
         slices: Optional[Sequence[Sequence[str]]] = None,
         breaker: Optional[BreakerConfig] = None,
+        specs: Optional[Sequence[ReplicaSpec]] = None,
     ):
         if not backends:
             raise ValueError("a ReplicaPool needs at least one replica")
@@ -367,8 +492,19 @@ class ReplicaPool:
                 f"slices covers {len(slices)} replicas but the pool has "
                 f"{len(backends)}"
             )
+        if specs is not None and len(specs) != len(backends):
+            raise ValueError(
+                f"specs covers {len(specs)} replicas but the pool has "
+                f"{len(backends)}"
+            )
         self.replicas = [
-            Replica(i, b, None if slices is None else slices[i], breaker)
+            Replica(
+                i,
+                b,
+                None if slices is None else slices[i],
+                breaker,
+                spec=None if specs is None else specs[i],
+            )
             for i, b in enumerate(backends)
         ]
 
@@ -431,6 +567,9 @@ class ReplicaPool:
                 reason=r.health.breaker.reason,
                 open_until_ms=r.health.breaker.open_until_ms,
                 draining=r.health.draining,
+                weight=r.spec.weight,
+                max_concurrency=r.spec.max_concurrency,
+                service_scale=r.spec.service_scale,
             )
             for r in self.replicas
         ]
@@ -458,17 +597,20 @@ class ClusterBackend(ExecutionBackend):
         slices: Optional[Sequence[Sequence[str]]] = None,
         seed: int = 0,
         breaker: Optional[BreakerConfig] = None,
+        specs: Optional[Sequence[ReplicaSpec]] = None,
     ):
         super().__init__()
         if isinstance(backends, ReplicaPool):
-            if slices is not None or breaker is not None:
+            if slices is not None or breaker is not None or specs is not None:
                 raise ValueError(
-                    "pass slices/breaker to the ReplicaPool, not the "
-                    "ClusterBackend"
+                    "pass slices/breaker/specs to the ReplicaPool, not "
+                    "the ClusterBackend"
                 )
             self.pool = backends
         else:
-            self.pool = ReplicaPool(backends, slices=slices, breaker=breaker)
+            self.pool = ReplicaPool(
+                backends, slices=slices, breaker=breaker, specs=specs
+            )
         self.router = router if isinstance(router, Router) else make_router(
             router, seed=seed
         )
@@ -493,8 +635,14 @@ class ClusterBackend(ExecutionBackend):
 
     @property
     def max_len(self):
-        """The pool's sequence cap (replicas are homogeneous)."""
-        return getattr(self.pool.replicas[0].backend, "max_len", None)
+        """The pool's sequence cap: the tightest across replicas (a
+        heterogeneous pool caps at its most constrained member; on the
+        homogeneous default every replica reports the same value)."""
+        caps = [
+            getattr(r.backend, "max_len", None) for r in self.pool.replicas
+        ]
+        caps = [c for c in caps if c is not None]
+        return min(caps) if caps else None
 
     # -- placement ------------------------------------------------------------
     def register(self, v: Variant) -> None:
@@ -529,7 +677,14 @@ class ClusterBackend(ExecutionBackend):
                 f"no replica hosts variant {name!r} (slices: "
                 f"{[sorted(r.backend.variants) for r in self.pool.replicas]})"
             )
-        eligible = [r for r in hosting if r.routable(self._now_ms)]
+        routable = [r for r in hosting if r.routable(self._now_ms)]
+        # Soft concurrency cap: a replica at its spec's max_concurrency is
+        # skipped while any routable peer has room — but when the whole
+        # set is full, routing proceeds over it (saturation is
+        # back-pressure, not an outage; NoHealthyReplica stays a pure
+        # health signal).  Uncapped replicas (the default) always have
+        # capacity, so the homogeneous pool routes byte-identically.
+        eligible = [r for r in routable if r.has_capacity] or routable
         if not eligible:
             raise NoHealthyReplica(
                 f"no healthy replica for variant {name!r}: "
@@ -633,9 +788,11 @@ class ClusterBackend(ExecutionBackend):
     def measure_profile(
         self, name, prompt_len, gen_tokens, batch=1, trials=5, seed=0
     ):
-        # Pin the measurement to one hosting replica: replicas are
-        # homogeneous, and rotating the router between timed trials would
-        # charge each replica's one-time compile to the profile.
+        # Pin the measurement to one hosting replica: rotating the router
+        # between timed trials would charge each replica's one-time
+        # compile to the profile.  (In a heterogeneous pool this is the
+        # *nominal* profile; live ewma_wall_ms tracks real per-replica
+        # speed.)
         return self.replicas_for(name)[0].backend.measure_profile(
             name, prompt_len, gen_tokens, batch=batch, trials=trials, seed=seed
         )

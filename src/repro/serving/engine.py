@@ -86,14 +86,22 @@ class ServingEngine:
         (generated (B, n_steps), wall_ms)."""
         return self.backend.generate(name, tokens, n_steps)
 
-    def make_loop(self, scheduler, dispatch: Optional[str] = None, admission=None):
+    def make_loop(
+        self,
+        scheduler,
+        dispatch: Optional[str] = None,
+        admission=None,
+        controller=None,
+    ):
         """Build a :class:`repro.serving.loop.ServingLoop` over this
         engine's backends (the event-loop serving front).
 
         ``admission`` is an optional
         :class:`repro.serving.admission.AdmissionConfig` — the bounded
         admission queue with overload policies; ``None`` keeps the
-        unbounded compatibility behavior.
+        unbounded compatibility behavior.  ``controller`` is an optional
+        :class:`repro.serving.controller.AdmissionController` closing the
+        adaptive loop over that queue; ``None`` keeps the static config.
         """
         from repro.serving.loop import ServingLoop
 
@@ -103,6 +111,7 @@ class ServingEngine:
             self.hedge_backend,
             dispatch=self.dispatch if dispatch is None else dispatch,
             admission=admission,
+            controller=controller,
         )
 
     # -- compatibility shim over the event loop ------------------------------

@@ -19,10 +19,25 @@ Arrival processes:
 * :class:`RampArrivals` — the rate ramps linearly from ``rate_start_rps``
   to ``rate_end_rps`` across the stream (capacity-crossing sweeps: find
   where a policy starts shedding).
+* :class:`DiurnalArrivals` — a smooth ramp-up-and-back-down (half-sine)
+  rate profile: trough → peak → trough across the stream, the
+  diurnal-drift input for the adaptive admission controller.
+* :class:`SpikeArrivals` — steady Poisson arrivals paired with a
+  *service-time* spike schedule (:meth:`SpikeArrivals.service_factor`):
+  for a contiguous span of the horizon service times multiply by
+  ``spike_factor`` (the 30x per-replica swings of "A Note on Latency
+  Variability of DNNs for Mobile Inference").  The arrival stream itself
+  stays steady — the drift is in the service model.
 * :class:`MixedTenantArrivals` — two concurrent *tagged* lanes: an
   interactive Poisson lane plus a batch flood lane, each request carrying
   its tenant name (the adversarial input for the multi-tenant QoS lanes:
   does the flood destroy the interactive tenant's p99?).
+
+Units: every rate parameter (``rate_rps``, ``rate_start_rps``, …) is in
+**requests per second**; every timestamp and gap these processes emit is
+in **milliseconds** (mean gap = ``1e3 / rate_rps`` ms).  Doubling a rate
+halves the expected gaps, i.e. a 2x-rate trace yields ~2x the arrivals
+inside any fixed horizon.
 
 Network times come from any :class:`repro.core.network.NetworkModel`; the
 named paper traces (university / residential / LTE) are exposed through
@@ -43,6 +58,8 @@ __all__ = [
     "BurstyArrivals",
     "OverloadArrivals",
     "RampArrivals",
+    "DiurnalArrivals",
+    "SpikeArrivals",
     "MixedTenantArrivals",
     "LoadTrace",
     "make_trace",
@@ -51,7 +68,11 @@ __all__ = [
 
 
 class ArrivalProcess:
-    """Samples per-request arrival timestamps (ms, non-decreasing)."""
+    """Samples per-request arrival timestamps (ms, non-decreasing).
+
+    Rate parameters on all subclasses are in requests per *second*
+    (``*_rps``); emitted timestamps are in *milliseconds*.
+    """
 
     def sample_arrivals_ms(self, rng: np.random.Generator, n: int) -> np.ndarray:
         raise NotImplementedError
@@ -59,6 +80,9 @@ class ArrivalProcess:
 
 @dataclasses.dataclass(frozen=True)
 class PoissonArrivals(ArrivalProcess):
+    """Memoryless open-loop traffic: exponential gaps with mean
+    ``1e3 / rate_rps`` ms (``rate_rps`` is in requests per second)."""
+
     rate_rps: float = 100.0
 
     def sample_arrivals_ms(self, rng, n):
@@ -101,6 +125,9 @@ class OverloadArrivals(ArrivalProcess):
     """Sustained overload: a contiguous span of the stream arrives at
     ``overload_factor`` × the base rate.
 
+    ``rate_rps`` is in requests per **second** (arrival timestamps are in
+    ms; the overloaded span's mean gap is
+    ``1e3 / (rate_rps * overload_factor)`` ms).
     ``overload_start`` / ``overload_stop`` are fractions of the *request
     stream* (not wall time): requests with index in
     ``[start*n, stop*n)`` use the overloaded rate.  The default is a
@@ -140,7 +167,9 @@ class OverloadArrivals(ArrivalProcess):
 class RampArrivals(ArrivalProcess):
     """Linear rate ramp across the stream: ``rate_start_rps`` for the first
     request through ``rate_end_rps`` for the last (Poisson gaps at the
-    instantaneous rate).  Sweeps the offered load through the serving
+    instantaneous rate).  Both rates are in requests per **second**; the
+    emitted arrival timestamps are in ms (instantaneous mean gap
+    ``1e3 / rate_rps``).  Sweeps the offered load through the serving
     tier's capacity — where queue wait starts growing is the knee.
     """
 
@@ -161,6 +190,82 @@ class RampArrivals(ArrivalProcess):
         )
         gaps = rng.exponential(1.0, size=n) * (1e3 / rate)
         return np.cumsum(gaps)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalArrivals(ArrivalProcess):
+    """Half-sine diurnal profile: the rate ramps smoothly from
+    ``trough_rps`` up to ``peak_rps`` at mid-stream and back down
+    (``rate(i) = trough + (peak - trough) * sin(pi * i / n)``).
+
+    Rates are in requests per **second**; arrival timestamps are in ms.
+    This is the slow-drift input for the adaptive admission controller: a
+    static capacity tuned for the trough over-admits at the peak, one
+    tuned for the peak over-sheds in the shoulders.
+    """
+
+    trough_rps: float = 50.0
+    peak_rps: float = 300.0
+
+    def __post_init__(self):
+        if self.trough_rps <= 0 or self.peak_rps <= 0:
+            raise ValueError(
+                "diurnal rates must be > 0, got "
+                f"{self.trough_rps} / {self.peak_rps}"
+            )
+
+    def sample_arrivals_ms(self, rng, n):
+        frac = np.arange(n) / max(n - 1, 1)
+        rate = self.trough_rps + (self.peak_rps - self.trough_rps) * np.sin(
+            np.pi * frac
+        )
+        gaps = rng.exponential(1.0, size=n) * (1e3 / rate)
+        return np.cumsum(gaps)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpikeArrivals(ArrivalProcess):
+    """Steady Poisson arrivals plus a *service-time* spike schedule.
+
+    Arrivals are plain Poisson at ``rate_rps`` (requests per second, ms
+    timestamps) — the drift lives in the service model:
+    :meth:`service_factor` returns ``spike_factor`` for loop-clock times
+    inside ``[spike_start, spike_stop)`` (fractions of a given horizon)
+    and ``1.0`` outside it.  Scenario harnesses fold it into the
+    ``drain_trace`` ``service_model`` (and the backend's reported wall
+    times) to realize a 30x per-replica service swing without changing
+    the offered load.
+    """
+
+    rate_rps: float = 100.0
+    spike_factor: float = 30.0
+    spike_start: float = 0.4
+    spike_stop: float = 0.6
+
+    def __post_init__(self):
+        if not 0.0 <= self.spike_start <= self.spike_stop <= 1.0:
+            raise ValueError(
+                "need 0 <= spike_start <= spike_stop <= 1, got "
+                f"[{self.spike_start}, {self.spike_stop})"
+            )
+        if self.spike_factor <= 0:
+            raise ValueError(
+                f"spike_factor must be > 0, got {self.spike_factor}"
+            )
+
+    def sample_arrivals_ms(self, rng, n):
+        gaps = rng.exponential(1e3 / self.rate_rps, size=n)
+        return np.cumsum(gaps)
+
+    def service_factor(self, t_ms: float, horizon_ms: float) -> float:
+        """Service-time multiplier at loop-clock time ``t_ms`` of a run
+        whose trace spans ``horizon_ms``."""
+        if horizon_ms <= 0:
+            return 1.0
+        frac = t_ms / horizon_ms
+        if self.spike_start <= frac < self.spike_stop:
+            return float(self.spike_factor)
+        return 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,7 +349,12 @@ def make_trace(
     estimator: Optional[Estimator] = None,
     seed: int = 0,
 ) -> LoadTrace:
-    """Draw a request stream: arrivals x network times x estimates."""
+    """Draw a request stream: arrivals x network times x estimates.
+
+    ``arrivals`` rate parameters are in requests per **second**; all
+    columns of the returned :class:`LoadTrace` (``arrival_ms``,
+    ``t_nw_ms``, ``t_nw_est_ms``) are in **milliseconds**.
+    """
     rng = np.random.default_rng(seed)
     tenant = None
     sample_tagged = getattr(arrivals, "sample_tagged", None)

@@ -268,6 +268,14 @@ class ServingLoop:
         :class:`~repro.serving.admission.AdmissionQueue`).  ``None`` is the
         unbounded compatibility default — every submit admitted, every
         tick drains everything.
+    controller:
+        An optional :class:`repro.serving.controller.AdmissionController`
+        closing the loop over the admission queue: each collected tick is
+        observed, and due retunes (bounded AIMD over ``max_pending`` /
+        ``shed_headroom_ms``) are applied at the top of the next tick
+        before admission take.  ``None`` — the default — keeps the static
+        config byte-identical to the pre-controller loop
+        (regression-pinned).
     """
 
     def __init__(
@@ -278,6 +286,7 @@ class ServingLoop:
         *,
         dispatch: str = "async",
         admission: Optional[AdmissionConfig | AdmissionQueue] = None,
+        controller=None,
     ):
         if dispatch not in ("async", "sync", "stepped"):
             raise ValueError(
@@ -300,6 +309,7 @@ class ServingLoop:
             if isinstance(admission, AdmissionQueue)
             else AdmissionQueue(admission)
         )
+        self.controller = controller
         self._inflight: List[_InflightTick] = []
         self._rid = itertools.count()
 
@@ -406,6 +416,12 @@ class ServingLoop:
             and len(self._inflight) >= cfg.max_inflight_ticks
         ):
             return None  # dispatch gate: requests stay queued for later
+        # Closed-loop adaptivity: enact any retune the controller owes
+        # from the last collected tick *before* this tick's admission
+        # take, so the new capacity/margin govern this tick's offers and
+        # sheds.  Inert (byte-identical path) without a controller.
+        if self.controller is not None:
+            self.controller.apply(self.admission)
         # The admission queue hands one tick's work over atomically: a
         # submit() racing this tick from another thread lands in either
         # this chunk or a later one, never vanishes.
@@ -951,7 +967,18 @@ class ServingLoop:
             n_recycled=n_recycled,
             compile_count=int(getattr(self.backend, "compile_count", 0)),
         )
-        return TickResult(completions=completions, metrics=metrics, stats=stats)
+        result = TickResult(
+            completions=completions, metrics=metrics, stats=stats
+        )
+        if self.controller is not None:
+            self.controller.observe(
+                result,
+                scheduler=self.scheduler,
+                backend=self.backend,
+                now_ms=tick.now_ms,
+                backlog=self.admission.backlog,
+            )
+        return result
 
     def _collect_degraded(
         self,

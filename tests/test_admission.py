@@ -603,3 +603,160 @@ def test_admission_config_validation():
         AdmissionConfig(max_chunk=-1)
     assert not AdmissionConfig().bounded
     assert AdmissionConfig(max_pending=4, policy="block").bounded
+
+
+# ---------------------------------------------------------------------------
+# Mid-run retuning (the adaptive controller's surface): atomic capacity
+# swaps, shrink-never-retro-sheds, conservation while knobs move.
+# ---------------------------------------------------------------------------
+def test_retune_swaps_capacity_knobs_atomically():
+    q = AdmissionQueue(
+        AdmissionConfig(max_pending=8, max_chunk=4, policy="shed")
+    )
+    cfg = q.retune(max_pending=2, shed_headroom_ms=50.0)
+    assert cfg is q.cfg
+    assert cfg.max_pending == 2 and cfg.shed_headroom_ms == 50.0
+    assert cfg.max_chunk == 4 and cfg.policy == "shed"  # untouched knobs
+    # The swap re-runs AdmissionConfig validation; a bad retune raises
+    # and leaves the live config alone instead of wedging the queue.
+    with pytest.raises(ValueError):
+        q.retune(max_pending=0)
+    with pytest.raises(ValueError):
+        q.retune(max_pending=None)  # bounded policy needs a capacity
+    assert q.cfg.max_pending == 2
+
+
+def test_retune_shrink_capacity_never_retro_sheds():
+    # Capacity is consulted on *offer* only: shrinking max_pending under a
+    # full queue evicts nothing — the already-admitted requests all serve,
+    # while new arrivals see the shrunk capacity immediately.
+    q = AdmissionQueue(
+        AdmissionConfig(max_pending=8, max_chunk=8, policy="shed")
+    )
+    fs = [InferenceFuture(_request(i, arrival_ms=0.0)) for i in range(8)]
+    for f in fs:
+        assert q.offer(f) == "admitted"
+    q.retune(max_pending=2)
+    assert q.pending == 8  # nobody evicted
+    late = InferenceFuture(_request(99, arrival_ms=1.0))
+    assert q.offer(late) == "rejected"  # new arrivals: shrunk capacity
+    batch = q.take(10.0, default_sla_ms=1e9)
+    assert [f.request.rid for f in batch.chunk] == list(range(8))
+    assert batch.shed == []
+    assert all(f.state is not RequestState.REJECTED for f in fs)
+
+
+def test_shrinking_margin_never_retro_sheds():
+    # sla_unreachable boundary under a *shrinking* margin.  The predicate
+    # charges wait + (est + service floor) + headroom against the SLA:
+    # with sla=200, est=10, floor=30 the shed bound is wait > 160 - headroom.
+    # Pick a wait between the wide-margin bound (60) and the shrunk-margin
+    # bound (160): the wide margin sheds it, the shrunk margin must not —
+    # a smaller headroom sheds a strict subset of what the old margin did.
+    sla, wide, wait = 200.0, 100.0, 120.0
+
+    def outcome(headroom_at_take):
+        q = AdmissionQueue(
+            AdmissionConfig(
+                max_pending=4, policy="shed", shed_headroom_ms=wide
+            )
+        )
+        f = InferenceFuture(_request(0, arrival_ms=0.0))
+        assert q.offer(f) == "admitted"  # admitted under the wide margin
+        q.retune(shed_headroom_ms=headroom_at_take)
+        batch = q.take(
+            wait, default_sla_ms=sla, service_floor_ms=STUB_FLOOR_MS
+        )
+        return f, batch
+
+    f_wide, batch_wide = outcome(wide)  # margin kept: the boundary is live
+    assert batch_wide.shed == [f_wide]
+    assert f_wide.state is RequestState.REJECTED
+    f_shrunk, batch_shrunk = outcome(0.0)  # margin shrunk before the tick
+    assert batch_shrunk.chunk == [f_shrunk] and batch_shrunk.shed == []
+    assert f_shrunk.state is not RequestState.REJECTED
+
+
+@given(
+    wait=st.floats(min_value=0.0, max_value=1e4),
+    sla=st.floats(min_value=0.0, max_value=1e4),
+    est=st.floats(min_value=0.0, max_value=1e3),
+    floor=st.floats(min_value=0.0, max_value=1e3),
+    headroom=st.floats(min_value=0.0, max_value=1e3),
+    shrink=st.floats(min_value=0.0, max_value=1e3),
+    ondev=st.one_of(st.none(), st.floats(min_value=0.0, max_value=1e3)),
+)
+@settings(deadline=None, max_examples=200)
+def test_shed_monotone_in_margin_property(
+    wait, sla, est, floor, headroom, shrink, ondev
+):
+    # Monotone in the margin: anything shed under the smaller headroom
+    # would also have been shed under the larger one — so shrinking the
+    # margin never sheds a request the old margin admitted past.
+    small = max(headroom - shrink, 0.0)
+    if sla_unreachable(wait, sla, est, floor, small, ondev):
+        assert sla_unreachable(wait, sla, est, floor, headroom, ondev)
+
+
+def _check_conservation_retuned(arrival_gaps, policy, retunes):
+    """Drain with a capacity retune before every tick; conservation and
+    the capacity invariant must hold against the *live* config."""
+    cfg = AdmissionConfig(max_pending=8, max_chunk=3, policy=policy)
+    q = AdmissionQueue(cfg)
+    futures, t = [], 0.0
+    for i, gap in enumerate(arrival_gaps):
+        t += float(gap)
+        f = InferenceFuture(_request(i, arrival_ms=t))
+        q.offer(f)
+        futures.append(f)
+    now, step = t, 0
+    for _ in range(10_000):
+        if not q.backlog:
+            break
+        now += 25.0
+        mp, headroom = retunes[step % len(retunes)]
+        step += 1
+        q.retune(max_pending=mp, shed_headroom_ms=headroom)
+        batch = q.take(now, default_sla_ms=1e9)  # no deadline shedding
+        for f in batch.chunk + batch.degraded:
+            assert f._try_schedule(batch.now_ms)
+            f._mark_resolved(_completion(f.request.rid))
+        if not batch and not batch.shed:
+            raise AssertionError("admission queue stalled with a backlog")
+    assert q.backlog == 0
+    resolved, rejected, cancelled = _state_counts(futures)
+    assert resolved + rejected + cancelled == len(futures) == q.n_submitted
+    assert rejected == q.n_rejected
+    assert all(
+        f.state is RequestState.RESOLVED for f in futures if f.admitted
+    )
+
+
+@pytest.mark.parametrize("policy", ["block", "shed", "degrade"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_conservation_under_midrun_retunes_seeded(policy, seed):
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(10.0, size=30)
+    retunes = [(int(m), float(h)) for m, h in zip(
+        rng.integers(1, 12, size=7), rng.uniform(0.0, 200.0, size=7)
+    )]
+    _check_conservation_retuned(gaps, policy, retunes)
+
+
+@given(
+    gaps=st.lists(
+        st.floats(min_value=0.0, max_value=100.0), min_size=1, max_size=40
+    ),
+    policy=st.sampled_from(["block", "shed", "degrade"]),
+    retunes=st.lists(
+        st.tuples(
+            st.integers(min_value=1, max_value=12),
+            st.floats(min_value=0.0, max_value=200.0),
+        ),
+        min_size=1,
+        max_size=8,
+    ),
+)
+@settings(deadline=None, max_examples=60)
+def test_conservation_under_midrun_retunes_property(gaps, policy, retunes):
+    _check_conservation_retuned(gaps, policy, retunes)

@@ -11,7 +11,7 @@ from hypothesis_compat import given, settings, st
 
 from repro.core.sla import summarize
 from repro.serving.admission import AdmissionConfig
-from repro.serving.backend import OnDeviceBackend
+from repro.serving.backend import OnDeviceBackend, Variant
 from repro.serving.cluster import (
     ClusterBackend,
     NoHealthyReplica,
@@ -28,6 +28,7 @@ from repro.serving.transport import FailedBatchHandle
 from loop_stubs import (
     STUB_NAMES,
     StubHedgeBackend,
+    StubRemoteBackend,
     stub_cluster,
     stub_fault_cluster,
     stub_scheduler,
@@ -823,3 +824,146 @@ def test_kill_rejoin_soak_under_overload_conserves_every_request():
     for replica in cluster.replicas:
         assert replica.inflight_rows == 0
     assert metrics is not None and metrics.goodput > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous replica pools (PR 9): per-replica weight / max_concurrency
+# / service_scale, weight-aware routing, and the homogeneous-default pin.
+# ---------------------------------------------------------------------------
+def test_replica_spec_validation_and_parsing():
+    from repro.serving.cluster import ReplicaSpec, parse_replica_specs
+
+    assert ReplicaSpec() == ReplicaSpec(
+        weight=1.0, max_concurrency=None, service_scale=1.0
+    )
+    with pytest.raises(ValueError):
+        ReplicaSpec(weight=0.0)
+    with pytest.raises(ValueError):
+        ReplicaSpec(max_concurrency=0)
+    with pytest.raises(ValueError):
+        ReplicaSpec(service_scale=-1.0)
+
+    specs = parse_replica_specs("2:8:0.5,1,::2", 3)
+    assert specs[0] == ReplicaSpec(
+        weight=2.0, max_concurrency=8, service_scale=0.5
+    )
+    assert specs[1] == ReplicaSpec()  # bare weight-only entry
+    assert specs[2] == ReplicaSpec(service_scale=2.0)  # empty fields default
+    with pytest.raises(ValueError):
+        parse_replica_specs("1,1", 3)  # count mismatch
+    with pytest.raises(ValueError):
+        parse_replica_specs("1:2:3:4", 1)  # too many fields
+
+
+def test_least_inflight_splits_proportionally_to_weight():
+    from repro.serving.cluster import ReplicaSpec
+
+    router = make_router("least_inflight")
+    reps = [
+        Replica(0, _FakeBackend(), spec=ReplicaSpec(weight=3.0)),
+        Replica(1, _FakeBackend(), spec=ReplicaSpec(weight=1.0)),
+    ]
+    counts = [0, 0]
+    for _ in range(40):
+        r = router.pick(reps)
+        counts[r.replica_id] += 1
+        r.backend.inflight_rows += 4  # rows stay in flight
+    # Normalized queue depth (inflight / weight): the 3x box carries 3x.
+    assert counts == [30, 10]
+
+
+def test_power_of_two_normalizes_its_queue_tiebreak_by_weight():
+    from repro.serving.cluster import ReplicaSpec
+
+    # Equal EWMAs force the inflight tie-break: 30 rows on a weight-3 box
+    # is a *shorter* normalized queue than 20 rows on a weight-1 box.
+    router = make_router("power_of_two", seed=0)
+    reps = [
+        Replica(
+            0, _FakeBackend(30, ewma=50.0), spec=ReplicaSpec(weight=3.0)
+        ),
+        Replica(
+            1, _FakeBackend(20, ewma=50.0), spec=ReplicaSpec(weight=1.0)
+        ),
+    ]
+    # Stay under probe_every: the periodic anti-starvation probe is the
+    # only thing that would ever take the slower candidate here.
+    picks = {router.pick(reps).replica_id for _ in range(10)}
+    assert picks == {0}
+
+
+def test_max_concurrency_is_a_soft_routing_cap():
+    from repro.serving.cluster import ReplicaSpec
+
+    cluster = ClusterBackend(
+        [StubRemoteBackend(0.0), StubRemoteBackend(0.0)],
+        router="least_inflight",
+        specs=[ReplicaSpec(max_concurrency=4), ReplicaSpec()],
+    )
+    for name, quality in zip(STUB_NAMES, (40.0, 80.0)):
+        cluster.register(Variant(name, None, None, quality))
+    # Saturate replica 0 past its cap: routing prefers the uncapped box.
+    cluster.pool.replicas[0].backend.inflight_rows = 4
+    for _ in range(5):
+        assert cluster.route(STUB_NAMES[0]).replica_id == 1
+    # An uncapped replica is always eligible, however deep its queue.
+    cluster.pool.replicas[1].backend.inflight_rows = 500
+    assert cluster.route(STUB_NAMES[0]).replica_id == 1
+
+    # The cap is *soft*: with every replica at its cap the pool degrades
+    # to best-effort routing over the saturated set — never
+    # NoHealthyReplica (saturation is backpressure, not an outage).
+    capped = ClusterBackend(
+        [StubRemoteBackend(0.0), StubRemoteBackend(0.0)],
+        router="least_inflight",
+        specs=[ReplicaSpec(max_concurrency=4), ReplicaSpec(max_concurrency=4)],
+    )
+    for name, quality in zip(STUB_NAMES, (40.0, 80.0)):
+        capped.register(Variant(name, None, None, quality))
+    capped.pool.replicas[0].backend.inflight_rows = 9
+    capped.pool.replicas[1].backend.inflight_rows = 4
+    assert capped.route(STUB_NAMES[0]).replica_id == 1  # least saturated
+
+
+def test_homogeneous_specs_are_byte_identical_to_default():
+    """The regression pin: an all-default spec list must produce exactly
+    the routing decisions of a pool with no specs at all."""
+    from repro.serving.cluster import ReplicaSpec
+
+    def route_sequence(specs):
+        cluster = ClusterBackend(
+            [StubRemoteBackend(0.0) for _ in range(3)],
+            router="least_inflight",
+            specs=specs,
+        )
+        for name, quality in zip(STUB_NAMES, (40.0, 80.0)):
+            cluster.register(Variant(name, None, None, quality))
+        picks = []
+        for i in range(12):
+            r = cluster.route(STUB_NAMES[i % 2])
+            r.backend.inflight_rows += 3 + (i % 4)
+            picks.append(r.replica_id)
+        return picks
+
+    assert route_sequence(None) == route_sequence(
+        [ReplicaSpec() for _ in range(3)]
+    )
+
+
+def test_snapshot_carries_the_replica_spec():
+    from repro.serving.cluster import ReplicaSpec
+
+    cluster = ClusterBackend(
+        [StubRemoteBackend(0.0), StubRemoteBackend(0.0)],
+        specs=[
+            ReplicaSpec(weight=2.0, max_concurrency=8, service_scale=0.5),
+            ReplicaSpec(),
+        ],
+    )
+    snaps = {s.replica_id: s for s in cluster.snapshot()}
+    assert snaps[0].weight == 2.0
+    assert snaps[0].max_concurrency == 8
+    assert snaps[0].service_scale == 0.5
+    assert snaps[1].weight == 1.0
+    assert snaps[1].max_concurrency is None
+    assert snaps[1].service_scale == 1.0

@@ -332,3 +332,60 @@ def test_stream_yields_every_decode_token_before_resolution(variant, dispatch):
         # arrive while the request is still in flight.
         assert not done_at_yield[0]
     engine.backend.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# Adaptive stack: the slot ledger stays conserved while the admission
+# queue's max_pending is retuned mid-run (PR 9's controller surface).
+# ---------------------------------------------------------------------------
+def test_slot_ledger_conserved_under_midrun_retunes(variant):
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
+
+    engine = ServingEngine(continuous=True, geometry=GEO, dispatch="sync")
+    engine.register(variant)
+    registry = engine.measure_profiles(
+        prompt_len=PROMPT, gen_tokens=GEN, trials=2
+    )
+    ondevice = registry.profiles[0]
+    sched = MDInferenceScheduler(
+        registry, ondevice, SchedulerConfig(t_sla_ms=60_000.0, seed=0)
+    )
+    loop = engine.make_loop(
+        sched,
+        admission=AdmissionConfig(max_pending=4, max_chunk=4, policy="shed"),
+    )
+    joined_before = engine.backend.joined_total  # profiling grafts rows too
+    toks = _prompts(10, seed=33)
+    futures, t = [], 0.0
+    # Three waves, with the capacity knobs moving between every tick —
+    # including a shrink below the current backlog.
+    for wave, (mp, headroom) in enumerate(
+        [(4, 0.0), (2, 50.0), (6, 0.0)]
+    ):
+        loop.admission.retune(max_pending=mp, shed_headroom_ms=headroom)
+        for i in range(3):
+            rid = wave * 3 + i
+            futures.append(
+                loop.submit(
+                    QueuedRequest(
+                        rid=rid, tokens=toks[rid], n_steps=GEN,
+                        t_nw_est_ms=10.0, t_nw_actual_ms=10.0, arrival_ms=t,
+                    )
+                )
+            )
+        t += 100.0
+        loop.tick(now_ms=t)
+    while loop.backlog:
+        t += 100.0
+        if loop.tick(now_ms=t) is None:
+            break
+    # Request conservation across the retuned run...
+    from repro.serving.lifecycle import RequestState
+
+    resolved = sum(f.state is RequestState.RESOLVED for f in futures)
+    assert resolved + loop.admission.n_rejected == len(futures)
+    # ...and the block-paged slot ledger balances: every graft recycled.
+    engine.backend.check_conservation()
+    assert engine.backend.joined_total == engine.backend.recycled_total
+    assert engine.backend.joined_total - joined_before == resolved

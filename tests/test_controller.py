@@ -1,0 +1,226 @@
+"""AdmissionController law unit tests: hysteresis, AIMD clamps, margin
+escalation/decay, and the unbounded/no-op edges.
+
+The end-to-end behavior (does the law actually track drift?) lives in
+``tests/test_drift_gauntlet.py``; this file pins the law's mechanics by
+driving :meth:`observe`/:meth:`apply` directly with synthetic ticks.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving.admission import AdmissionConfig, AdmissionQueue
+from repro.serving.controller import AdmissionController, ControllerConfig
+
+from loop_stubs import stub_scheduler
+
+
+@dataclasses.dataclass
+class _FakeCompletion:
+    queue_wait_ms: float
+
+
+@dataclasses.dataclass
+class _FakeStats:
+    n_shed: int = 0
+
+
+@dataclasses.dataclass
+class _FakeTick:
+    completions: list
+    stats: _FakeStats
+
+
+def _tick(waits=(), n_shed=0):
+    return _FakeTick(
+        [_FakeCompletion(w) for w in waits], _FakeStats(n_shed)
+    )
+
+
+def _queue(max_pending=16, headroom=0.0, policy="shed"):
+    return AdmissionQueue(
+        AdmissionConfig(
+            max_pending=max_pending,
+            max_chunk=8,
+            policy=policy,
+            shed_headroom_ms=headroom,
+        )
+    )
+
+
+def _controller(**kw):
+    return AdmissionController(ControllerConfig(**kw))
+
+
+SCHED = stub_scheduler(t_sla_ms=1_000.0)  # read-only signal source
+
+
+def _observe(c, tick, *, backlog=0, now_ms=0.0):
+    c.observe(tick, scheduler=SCHED, now_ms=now_ms, backlog=backlog)
+
+
+# ---------------------------------------------------------------------------
+# Config validation.
+# ---------------------------------------------------------------------------
+def test_controller_config_validation():
+    for bad in (
+        dict(target_wait_frac=0.0),
+        dict(target_wait_frac=1.5),
+        dict(low_water=0.9, high_water=0.5),
+        dict(low_water=-0.1),
+        dict(wait_alpha=0.0),
+        dict(hysteresis=0),
+        dict(increase_step=0),
+        dict(decrease_factor=1.0),
+        dict(decrease_factor=0.0),
+        dict(min_pending=0),
+        dict(min_pending=10, max_pending=5),
+        dict(headroom_decay=1.0),
+        dict(headroom_step_frac=-0.1),
+    ):
+        with pytest.raises(ValueError):
+            ControllerConfig(**bad)
+    ControllerConfig()  # defaults are valid
+
+
+# ---------------------------------------------------------------------------
+# Hysteresis: the law acts only on *consecutive* evidence.
+# ---------------------------------------------------------------------------
+def test_single_overload_tick_does_not_retune():
+    c = _controller(hysteresis=2)
+    q = _queue()
+    _observe(c, _tick(n_shed=3))  # one overload tick...
+    assert not c.apply(q)  # ...is not a streak
+    assert q.cfg.max_pending == 16
+
+
+def test_neutral_tick_resets_the_streak():
+    c = _controller(hysteresis=2)
+    q = _queue()
+    _observe(c, _tick(n_shed=3))
+    # Neutral: no shed, wait between the watermarks, so neither streak
+    # advances (wait EWMA is now ~150 with target 200, low water 100).
+    _observe(c, _tick(waits=[150.0]))
+    _observe(c, _tick(n_shed=3))
+    assert not c.apply(q)  # the lone spikes never added up
+    assert q.cfg.max_pending == 16
+
+
+def test_overload_streak_halves_capacity_and_tightens_margin():
+    c = _controller(hysteresis=2)
+    q = _queue(max_pending=16, headroom=0.0)
+    for _ in range(2):
+        _observe(c, _tick(n_shed=3))
+    assert c.apply(q)
+    assert q.cfg.max_pending == 8  # multiplicative decrease
+    assert q.cfg.shed_headroom_ms > 0.0  # margin tightened
+    assert c.n_retunes == 1 and len(c.log) == 1
+
+
+def test_underload_streak_adds_capacity_and_decays_margin():
+    c = _controller(hysteresis=2, increase_step=4, headroom_decay=0.5)
+    q = _queue(max_pending=16, headroom=100.0)
+    for _ in range(2):
+        _observe(c, _tick(waits=[1.0]))  # calm: tiny waits, no shed
+    assert c.apply(q)
+    assert q.cfg.max_pending == 20  # additive increase
+    assert q.cfg.shed_headroom_ms == 50.0  # multiplicative decay
+
+
+def test_backlog_blocks_the_underload_verdict():
+    c = _controller(hysteresis=2)
+    q = _queue()
+    for _ in range(2):
+        _observe(c, _tick(waits=[1.0]), backlog=5)  # calm but backlogged
+    assert not c.apply(q)  # a backlogged queue is not underloaded
+    assert q.cfg.max_pending == 16
+
+
+# ---------------------------------------------------------------------------
+# Clamps and escalation.
+# ---------------------------------------------------------------------------
+def test_capacity_clamps_to_min_and_max_pending():
+    c = _controller(hysteresis=1, min_pending=4, max_pending=24)
+    q = _queue(max_pending=5)
+    _observe(c, _tick(n_shed=1))
+    assert c.apply(q)
+    assert q.cfg.max_pending == 4  # floor, not 2
+    for _ in range(20):
+        _observe(c, _tick(waits=[1.0]))
+        c.apply(q)
+    assert q.cfg.max_pending == 24  # ceiling holds under sustained calm
+    assert q.cfg.shed_headroom_ms < 1e-3  # margin decayed away
+    for _ in range(20):  # ...and snaps to exactly zero, eventually
+        _observe(c, _tick(waits=[1.0]))
+        c.apply(q)
+    assert q.cfg.shed_headroom_ms == 0.0
+
+
+def test_margin_clamps_to_the_sla_fraction():
+    c = _controller(hysteresis=1, max_headroom_frac=0.8)
+    q = _queue()
+    for _ in range(10):
+        _observe(c, _tick(waits=[5_000.0], n_shed=2))
+        c.apply(q)
+    assert q.cfg.shed_headroom_ms == pytest.approx(0.8 * 1_000.0)
+
+
+def test_persistent_overload_escalates_the_margin_to_its_clamp():
+    # First tighten takes a proportional bite; overload that survives a
+    # tighten jumps straight to the clamp (bounded escalation).
+    c = _controller(hysteresis=1, headroom_step_frac=0.5)
+    q = _queue(max_pending=64)
+    _observe(c, _tick(n_shed=1))
+    assert c.apply(q)
+    first = q.cfg.shed_headroom_ms
+    assert 0.0 < first < 0.8 * 1_000.0
+    _observe(c, _tick(n_shed=1))
+    assert c.apply(q)
+    assert q.cfg.shed_headroom_ms == pytest.approx(0.8 * 1_000.0)
+
+
+def test_retunes_are_logged_with_the_tick_clock():
+    c = _controller(hysteresis=1)
+    q = _queue()
+    _observe(c, _tick(n_shed=1), now_ms=1_234.0)
+    assert c.apply(q)
+    ((t, mp, headroom),) = c.log
+    assert t == 1_234.0 and mp == q.cfg.max_pending
+    assert headroom == q.cfg.shed_headroom_ms
+
+
+# ---------------------------------------------------------------------------
+# No-op edges.
+# ---------------------------------------------------------------------------
+def test_apply_is_a_noop_on_unbounded_queues():
+    c = _controller(hysteresis=1)
+    q = AdmissionQueue(AdmissionConfig())  # unbounded compat default
+    _observe(c, _tick(n_shed=0, waits=[10_000.0]))
+    assert not c.apply(q)
+    assert q.cfg.max_pending is None and c.n_retunes == 0
+
+
+def test_apply_without_evidence_never_touches_the_queue():
+    c = _controller()
+    q = _queue()
+    before = q.cfg
+    assert not c.apply(q)
+    assert q.cfg is before  # not even an identity-preserving swap
+
+
+def test_service_estimate_tracks_the_live_signals():
+    c = _controller()
+    _observe(c, _tick(waits=[10.0]))
+    # With no backend attached the estimate falls back to the
+    # scheduler's fastest remote mu (stub-a: 30ms).
+    assert c.service_est_ms == pytest.approx(float(np.min(SCHED.mu)))
+
+    class _Backend:
+        ewma_wall_ms = 250.0
+
+    c2 = _controller()
+    c2.observe(
+        _tick(waits=[10.0]), scheduler=SCHED, backend=_Backend(), now_ms=0.0
+    )
+    assert c2.service_est_ms == 250.0  # the slow box lifts the estimate

@@ -1,0 +1,428 @@
+"""Drift gauntlet: closed-loop admission control vs static-tuned oracles.
+
+Four named drift scenarios — diurnal arrival swing, a 30x service-time
+spike, a flapping replica, and an LTE<->university network swap — each
+driven through the real serving stack (``ServingLoop.drain_trace`` with a
+service-coupled clock) twice: once with a statically *mistuned*
+:class:`AdmissionConfig` plus an :class:`AdmissionController` closing the
+loop, and once per candidate in a small grid of static configs, the best
+of which is the scenario's **static-tuned oracle**.  The gauntlet's
+acceptance bar (ROADMAP item 4): the adaptive run holds interactive p99
+within 1.25x of the oracle in at least 3 of the 4 scenarios, without
+giving up goodput.
+
+Everything here is deterministic: execution is a :class:`FixedWallBackend`
+that *reports* configured wall times instead of sleeping (so latencies are
+exact functions of the seed), arrivals/network are seeded draws, and
+``dispatch="sync"`` serializes collection.  Two runs of any scenario are
+byte-identical — the seeded-twin test pins that, controller on and off.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.network import SwitchedNetwork, lte_trace, university_trace
+from repro.serving.admission import AdmissionConfig
+from repro.serving.backend import ExecutionBackend, Variant
+from repro.serving.cluster import ClusterBackend, ReplicaSpec
+from repro.serving.controller import AdmissionController, ControllerConfig
+from repro.serving.loadgen import (
+    DiurnalArrivals,
+    PoissonArrivals,
+    SpikeArrivals,
+    make_trace,
+)
+from repro.serving.loop import ServingLoop
+
+from loop_stubs import STUB_NAMES, stub_scheduler
+
+SLA_MS = 1_000.0
+WINDOW_MS = 50.0
+SERVICE_MS_PER_ROW = 6.0  # per-row service cost: ~166 req/s of capacity
+WALLS = {"stub-a": 30.0, "stub-b": 60.0}  # reported (not slept) exec walls
+
+
+class FixedWallBackend(ExecutionBackend):
+    """Execution stub that *reports* a configured wall time, no sleep.
+
+    The gauntlet needs hundreds of ticks per scenario and exact
+    reproducibility; real ``time.sleep`` stubs give neither.  ``scale``
+    is the drift knob — the spike scenario multiplies it mid-run so the
+    backend's reported walls (and every EWMA fed from them) genuinely
+    drift.
+    """
+
+    def __init__(self, scale: float = 1.0):
+        super().__init__()
+        self.scale = float(scale)
+
+    def register(self, v):
+        self.variants[v.name] = v
+
+    def generate(self, name, tokens, n_steps):
+        out = np.zeros((np.shape(tokens)[0], n_steps), dtype=np.int32)
+        return out, float(WALLS[name]) * self.scale
+
+    def run_batch(self, name, batch, n_steps):
+        return self.generate(name, batch, n_steps)
+
+
+def _register_zoo(backend) -> None:
+    for name, quality in zip(STUB_NAMES, (40.0, 80.0)):
+        backend.register(Variant(name, None, None, quality))
+
+
+@dataclasses.dataclass
+class ScenarioRun:
+    metrics: object  # RequestMetrics
+    completions: list
+    controller: object  # AdmissionController | None
+    loop: ServingLoop
+
+    @property
+    def p99(self) -> float:
+        return float(self.metrics.p99_latency_ms)
+
+    @property
+    def goodput(self) -> float:
+        return float(self.metrics.goodput)
+
+
+class Scenario:
+    """One named drift scenario: a seeded trace + backend + service model.
+
+    ``run(admission, controller)`` drives a fresh loop over a fresh
+    backend; the static grid and the adaptive run therefore never share
+    state.  ``static_grid`` is the oracle's search space — a handful of
+    plausible hand-tunings; ``adaptive_start`` is the deliberately
+    mistuned config the controller starts from.
+    """
+
+    name = "base"
+    n = 400
+    seed = 0
+    static_grid = (8, 16, 32, 64)
+    adaptive_start = 64
+    controller_cfg = ControllerConfig(
+        target_wait_frac=0.1, wait_alpha=0.7, max_pending=64
+    )
+
+    def make_trace(self):
+        raise NotImplementedError
+
+    def make_backend(self):
+        backend = FixedWallBackend()
+        _register_zoo(backend)
+        return backend
+
+    def service_model(self, backend, trace):
+        return lambda res: SERVICE_MS_PER_ROW * res.stats.max_replica_rows
+
+    def on_tick(self, backend, trace):
+        return None
+
+    def static(self, max_pending: int) -> AdmissionConfig:
+        return AdmissionConfig(
+            max_pending=max_pending, max_chunk=16, policy="shed"
+        )
+
+    def run(self, admission, controller=None) -> ScenarioRun:
+        trace = self.make_trace()
+        backend = self.make_backend()
+        scheduler = stub_scheduler(t_sla_ms=SLA_MS, seed=self.seed)
+        loop = ServingLoop(
+            scheduler,
+            backend,
+            None,
+            dispatch="sync",
+            admission=admission,
+            controller=controller,
+        )
+        done, metrics = loop.drain_trace(
+            trace,
+            WINDOW_MS,
+            tokens_for=lambda i: np.zeros(4, np.int32),
+            n_steps=2,
+            service_model=self.service_model(backend, trace),
+            on_tick=self.on_tick(backend, trace),
+        )
+        assert metrics is not None
+        return ScenarioRun(metrics, done, controller, loop)
+
+    # -- the two gauntlet arms ------------------------------------------------
+    def run_adaptive(self) -> ScenarioRun:
+        return self.run(
+            self.static(self.adaptive_start),
+            AdmissionController(self.controller_cfg),
+        )
+
+    def run_oracle(self) -> ScenarioRun:
+        """Best static tuning over the grid: lowest p99 among candidates
+        whose goodput is within 10% of the grid's best goodput (a static
+        config that sheds almost everything gets a great p99 for free —
+        the oracle has to actually serve)."""
+        runs = [self.run(self.static(mp)) for mp in self.static_grid]
+        best_goodput = max(r.goodput for r in runs)
+        eligible = [r for r in runs if r.goodput >= 0.9 * best_goodput]
+        return min(eligible, key=lambda r: r.p99)
+
+
+class DiurnalScenario(Scenario):
+    """Arrival-rate swing: trough -> 3.6x-capacity peak -> trough."""
+
+    name = "diurnal"
+    n = 1_200
+
+    def make_trace(self):
+        return make_trace(
+            self.n,
+            DiurnalArrivals(trough_rps=20.0, peak_rps=600.0),
+            university_trace(),
+            seed=5 + self.seed,
+        )
+
+
+class SpikeScenario(Scenario):
+    """30x service-time spike over the middle fifth of the run.
+
+    The backend's reported walls scale with the spike too, so the
+    controller's service estimate (replica wall EWMAs / scheduler mu)
+    sees the drift the moment it lands.
+    """
+
+    name = "spike"
+    n = 800
+    spike = SpikeArrivals(
+        rate_rps=100.0, spike_factor=30.0, spike_start=0.4, spike_stop=0.6
+    )
+
+    def make_trace(self):
+        trace = make_trace(
+            self.n, self.spike, university_trace(), seed=7 + self.seed
+        )
+        self._horizon_ms = float(trace.arrival_ms[-1])
+        return trace
+
+    def make_backend(self):
+        backend = super().make_backend()
+        self._factor = 1.0
+        return backend
+
+    def on_tick(self, backend, trace):
+        def tick(t_ms, result):
+            # Factor for the *next* tick: one window of detection lag,
+            # deterministic either way.
+            self._factor = self.spike.service_factor(t_ms, self._horizon_ms)
+            backend.scale = self._factor
+
+        return tick
+
+    def service_model(self, backend, trace):
+        return lambda res: (
+            SERVICE_MS_PER_ROW * self._factor * res.stats.max_replica_rows
+        )
+
+
+class FlapScenario(Scenario):
+    """A heterogeneous 2-replica pool whose fast replica flaps.
+
+    Replica 0 is the fast box (weight 2), replica 1 a half-speed box
+    (``service_scale=2``, weight 1).  Mid-run the fast replica drains —
+    pool capacity drops 3x — then rejoins.  The service model charges the
+    real heterogeneous makespan: the busiest replica's rows times its
+    service scale.
+    """
+
+    name = "flap"
+    n = 800
+    scales = (1.0, 2.0)
+
+    def make_trace(self):
+        trace = make_trace(
+            self.n, PoissonArrivals(140.0), university_trace(),
+            seed=11 + self.seed,
+        )
+        self._horizon_ms = float(trace.arrival_ms[-1])
+        return trace
+
+    def make_backend(self):
+        cluster = ClusterBackend(
+            [FixedWallBackend(scale=s) for s in self.scales],
+            router="least_inflight",
+            specs=[
+                ReplicaSpec(weight=2.0),
+                ReplicaSpec(weight=1.0, service_scale=2.0),
+            ],
+            seed=0,
+        )
+        _register_zoo(cluster)
+        return cluster
+
+    def on_tick(self, backend, trace):
+        def tick(t_ms, result):
+            frac = t_ms / self._horizon_ms
+            drained = backend.pool.replicas[0].health.draining
+            if 0.3 <= frac < 0.6:
+                if not drained:
+                    backend.drain(0)
+            elif drained:
+                backend.rejoin(0)
+
+        return tick
+
+    def service_model(self, backend, trace):
+        def service(res):
+            rows = res.stats.replica_rows
+            if not rows:
+                return SERVICE_MS_PER_ROW * res.stats.n_requests
+            return max(
+                SERVICE_MS_PER_ROW * r * self.scales[rid]
+                for rid, r in rows.items()
+            )
+
+        return service
+
+
+class NetworkSwapScenario(Scenario):
+    """University -> LTE mid-run: the network under the client drifts.
+
+    Load sits just above service capacity, so the static queue matters;
+    after the swap the per-request network leg jumps ~10x (and grows a 2%
+    multi-second tail), eating the latency budget the queue wait used to
+    fit in.
+    """
+
+    name = "network_swap"
+    n = 800
+
+    def make_trace(self):
+        return make_trace(
+            self.n,
+            PoissonArrivals(180.0),
+            SwitchedNetwork(university_trace(), lte_trace(), 0.5),
+            seed=13 + self.seed,
+        )
+
+
+SCENARIOS = [
+    DiurnalScenario(),
+    SpikeScenario(),
+    FlapScenario(),
+    NetworkSwapScenario(),
+]
+RATIO_BAR = 1.25  # adaptive p99 <= 1.25x oracle, in >= 3 of 4 scenarios
+
+
+def _gauntlet():
+    out = {}
+    for sc in SCENARIOS:
+        adaptive = sc.run_adaptive()
+        oracle = sc.run_oracle()
+        out[sc.name] = (adaptive, oracle)
+    return out
+
+
+@pytest.fixture(scope="module")
+def gauntlet():
+    return _gauntlet()
+
+
+# ---------------------------------------------------------------------------
+# The acceptance bar (ROADMAP item 4).
+# ---------------------------------------------------------------------------
+def test_adaptive_holds_p99_near_oracle_in_three_of_four(gauntlet):
+    ratios = {
+        name: adaptive.p99 / oracle.p99
+        for name, (adaptive, oracle) in gauntlet.items()
+    }
+    held = [name for name, r in ratios.items() if r <= RATIO_BAR]
+    assert len(held) >= 3, f"controller held only {held} (ratios {ratios})"
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS, ids=lambda s: s.name)
+def test_scenario_sanity(gauntlet, scenario):
+    adaptive, oracle = gauntlet[scenario.name]
+    # Per-scenario generous bound: even the scenario the combined bar
+    # tolerates losing must stay within 2.5x of its oracle.
+    assert adaptive.p99 <= 2.5 * oracle.p99
+    # The controller cannot buy latency by refusing to serve.  (It *is*
+    # allowed to trade some goodput for a large p99 win — the diurnal
+    # scenario's adaptive arm sheds harder at the peak than the
+    # goodput-constrained oracle and lands a ~2.5x better tail.)
+    assert adaptive.goodput >= 0.7 * oracle.goodput
+    # The law actually engaged: the mistuned start was retuned.
+    assert adaptive.controller.n_retunes > 0
+    assert adaptive.controller.log  # and left evidence
+    # Conservation across the adaptive run.
+    m = adaptive.metrics
+    assert m.n_requests + m.n_rejected == scenario.n
+
+
+# ---------------------------------------------------------------------------
+# Stress soak: the combined bar is not a single-seed fluke.  Reruns the
+# whole gauntlet under fresh arrival/network seeds (scenario classes keep
+# their per-scenario seeds as offsets).
+# ---------------------------------------------------------------------------
+@pytest.mark.stress
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_gauntlet_holds_across_seeds(seed):
+    held = 0
+    for proto in SCENARIOS:
+        sc = type(proto)()
+        sc.seed = seed
+        adaptive = sc.run_adaptive()
+        oracle = sc.run_oracle()
+        if adaptive.p99 <= RATIO_BAR * oracle.p99:
+            held += 1
+        assert adaptive.p99 <= 2.5 * oracle.p99
+        assert adaptive.goodput >= 0.7 * oracle.goodput
+    assert held >= 3
+
+
+# ---------------------------------------------------------------------------
+# Seeded-twin determinism: two fresh runs are identical, controller on/off.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("with_controller", [False, True], ids=["static", "adaptive"])
+def test_seeded_twin_runs_are_identical(with_controller):
+    sc = DiurnalScenario()
+
+    def once():
+        if with_controller:
+            return sc.run_adaptive()
+        return sc.run(sc.static(16))
+
+    a, b = once(), once()
+    assert a.metrics == b.metrics
+    assert len(a.completions) == len(b.completions)
+    for ca, cb in zip(a.completions, b.completions):
+        assert ca.rid == cb.rid
+        assert ca.model_name == cb.model_name
+        assert ca.latency_ms == cb.latency_ms
+        assert ca.queue_wait_ms == cb.queue_wait_ms
+        assert ca.race_resolution == cb.race_resolution
+    if with_controller:
+        assert a.controller.log == b.controller.log
+
+
+# ---------------------------------------------------------------------------
+# controller=None compatibility: attaching a controller that never fires
+# is invisible — same completions, same metrics (the observe/apply seam
+# has no side effects on the serving path).
+# ---------------------------------------------------------------------------
+def test_inert_controller_is_invisible():
+    sc = NetworkSwapScenario()
+    silent = AdmissionController(
+        ControllerConfig(hysteresis=10_000)  # never completes a streak
+    )
+    plain = sc.run(sc.static(16), None)
+    inert = sc.run(sc.static(16), silent)
+    assert silent.n_retunes == 0 and silent.log == []
+    assert silent.n_ticks > 0  # it watched every tick...
+    assert plain.metrics == inert.metrics  # ...and changed nothing
+    assert [c.rid for c in plain.completions] == [
+        c.rid for c in inert.completions
+    ]
+    assert [c.latency_ms for c in plain.completions] == [
+        c.latency_ms for c in inert.completions
+    ]

@@ -6,11 +6,13 @@ import pytest
 from repro.core.network import FixedCVNetwork
 from repro.serving.loadgen import (
     BurstyArrivals,
+    DiurnalArrivals,
     LoadTrace,
     MixedTenantArrivals,
     OverloadArrivals,
     PoissonArrivals,
     RampArrivals,
+    SpikeArrivals,
     iter_windows,
     make_trace,
 )
@@ -252,3 +254,87 @@ def test_saturated_trace_batches_capped_at_max_chunk(arrivals):
     assert all(s.n_requests <= max_chunk for s in stats)
     assert sorted(c.rid for c in done) == list(range(n))
     assert metrics.n_requests == n and metrics.n_rejected == 0
+
+
+# ---------------------------------------------------------------------------
+# Units (PR 9): every rate parameter is requests per *second*, every
+# timestamp a millisecond — so doubling the rate halves the mean gap and
+# doubles the arrivals landing inside any fixed horizon, in expectation.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "make",
+    [
+        lambda r: PoissonArrivals(r),
+        lambda r: OverloadArrivals(r, overload_factor=3.0),
+        lambda r: RampArrivals(r, 2.0 * r),
+        lambda r: DiurnalArrivals(trough_rps=r, peak_rps=2.0 * r),
+        lambda r: SpikeArrivals(rate_rps=r),
+    ],
+    ids=["poisson", "overload", "ramp", "diurnal", "spike"],
+)
+def test_double_rate_doubles_arrivals_in_expectation(make):
+    n, rate = 4_000, 100.0
+    slow = make(rate).sample_arrivals_ms(np.random.default_rng(0), n)
+    fast = make(2.0 * rate).sample_arrivals_ms(np.random.default_rng(0), n)
+    # Mean inter-arrival gap: 1e3 / rate_rps milliseconds, so 2x the rate
+    # halves it (15% tolerance: these are seeded exponential draws).
+    ratio = np.mean(np.diff(slow)) / np.mean(np.diff(fast))
+    assert ratio == pytest.approx(2.0, rel=0.15)
+    # Equivalently: a fixed horizon holds ~2x the arrivals.
+    horizon = np.percentile(slow, 50)
+    n_slow = int(np.sum(slow <= horizon))
+    n_fast = int(np.sum(fast <= horizon))
+    assert n_fast == pytest.approx(2 * n_slow, rel=0.2)
+
+
+def test_poisson_rate_is_requests_per_second():
+    # 200 req/s for ~2000 requests => mean gap 5ms, total span ~10s.
+    t = PoissonArrivals(200.0).sample_arrivals_ms(
+        np.random.default_rng(1), 2_000
+    )
+    assert np.mean(np.diff(t)) == pytest.approx(5.0, rel=0.1)
+    assert t[-1] == pytest.approx(10_000.0, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# The PR 9 drift shapes.
+# ---------------------------------------------------------------------------
+def test_diurnal_arrivals_swing_trough_peak_trough():
+    arr = DiurnalArrivals(trough_rps=20.0, peak_rps=400.0)
+    t = arr.sample_arrivals_ms(np.random.default_rng(3), 3_000)
+    assert np.all(np.diff(t) >= 0)
+    gaps = np.diff(t)
+    third = len(gaps) // 3
+    edges = np.mean(np.concatenate([gaps[:third], gaps[-third:]]))
+    middle = np.mean(gaps[third:-third])
+    # The middle of the run is the peak: much denser than the edges.
+    assert middle < edges / 3.0
+    # Determinism + validation.
+    np.testing.assert_array_equal(
+        t, arr.sample_arrivals_ms(np.random.default_rng(3), 3_000)
+    )
+    with pytest.raises(ValueError):
+        DiurnalArrivals(trough_rps=0.0, peak_rps=100.0)
+    with pytest.raises(ValueError):
+        DiurnalArrivals(trough_rps=100.0, peak_rps=0.0)
+
+
+def test_spike_arrivals_service_factor_window():
+    arr = SpikeArrivals(
+        rate_rps=100.0, spike_factor=30.0, spike_start=0.4, spike_stop=0.6
+    )
+    horizon = 10_000.0
+    assert arr.service_factor(0.0, horizon) == 1.0
+    assert arr.service_factor(3_999.0, horizon) == 1.0
+    assert arr.service_factor(4_000.0, horizon) == 30.0  # [start, stop)
+    assert arr.service_factor(5_999.0, horizon) == 30.0
+    assert arr.service_factor(6_000.0, horizon) == 1.0
+    assert arr.service_factor(horizon, horizon) == 1.0
+    # Arrivals themselves are plain Poisson: the spike is a *service*
+    # disturbance, not an arrival burst.
+    t = arr.sample_arrivals_ms(np.random.default_rng(5), 2_000)
+    assert np.mean(np.diff(t)) == pytest.approx(10.0, rel=0.1)
+    with pytest.raises(ValueError):
+        SpikeArrivals(spike_start=0.7, spike_stop=0.3)
+    with pytest.raises(ValueError):
+        SpikeArrivals(spike_factor=0.0)

@@ -89,3 +89,47 @@ def test_networks_always_positive(mean, cv, seed):
         s = net.sample(rng, 256)
         assert (s > 0).all()
         assert np.isfinite(s).all()
+
+
+# ---------------------------------------------------------------------------
+# SwitchedNetwork (PR 9): the mid-stream handover drift shape.
+# ---------------------------------------------------------------------------
+def test_switched_network_splits_at_the_switch_fraction():
+    from repro.core.network import SwitchedNetwork
+
+    rng = np.random.default_rng(0)
+    net = SwitchedNetwork(
+        FixedCVNetwork(10.0, 0.0), FixedCVNetwork(200.0, 0.0), 0.25
+    )
+    s = net.sample(rng, 400)
+    assert s.shape == (400,)
+    np.testing.assert_allclose(s[:100], 10.0)  # first quarter: before
+    np.testing.assert_allclose(s[100:], 200.0)  # the rest: after
+    # Degenerate fractions collapse to a single model.
+    all_before = SwitchedNetwork(
+        FixedCVNetwork(10.0, 0.0), FixedCVNetwork(200.0, 0.0), 1.0
+    ).sample(rng, 50)
+    np.testing.assert_allclose(all_before, 10.0)
+    all_after = SwitchedNetwork(
+        FixedCVNetwork(10.0, 0.0), FixedCVNetwork(200.0, 0.0), 0.0
+    ).sample(rng, 50)
+    np.testing.assert_allclose(all_after, 200.0)
+    with pytest.raises(ValueError):
+        SwitchedNetwork(
+            FixedCVNetwork(10.0, 0.0), FixedCVNetwork(200.0, 0.0), 1.5
+        )
+
+
+def test_switched_network_university_to_lte_is_a_real_drift():
+    from repro.core.network import SwitchedNetwork, lte_trace
+
+    rng = np.random.default_rng(1)
+    s = SwitchedNetwork(university_trace(), lte_trace(), 0.5).sample(
+        rng, 2_000
+    )
+    assert (s > 0).all() and np.isfinite(s).all()
+    # The LTE half is clearly slower in the median and carries the heavy
+    # multi-second tail — the paper's university-vs-LTE gap inside one
+    # trace (university's body is capped at 245ms; LTE's 2% tail is not).
+    assert np.median(s[1_000:]) > 1.3 * np.median(s[:1_000])
+    assert s[:1_000].max() < 1_000.0 < s[1_000:].max()
