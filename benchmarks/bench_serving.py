@@ -15,6 +15,7 @@ Run:  PYTHONPATH=src python -m benchmarks.run --only serving
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -22,6 +23,7 @@ import numpy as np
 from benchmarks.common import emit, timed, write_results
 from repro.core import residential_trace, university_trace
 from repro.core.duplication import HedgePolicy
+from repro.observability.quantile import quantile
 from repro.serving.profiles import ONDEVICE_TIER, lm_zoo_registry
 from repro.serving.scheduler import MDInferenceScheduler, SchedulerConfig
 
@@ -122,7 +124,7 @@ def _hedge_mode_comparison(
             us / len(done),
             f"quality={metrics.aggregate_accuracy:.2f} "
             f"attain={np.mean(lats <= sla_ms)*100:.2f}% "
-            f"p99={np.percentile(lats, 99):.1f}ms "
+            f"p99={quantile(lats, 99):.1f}ms "
             f"hedge_used={metrics.ondevice_reliance*100:.2f}%",
         )
 
@@ -748,7 +750,7 @@ def _continuous_batching(
     )
     us = (time.perf_counter() - t0) * 1e6
     ttfts = np.asarray([c.ttft_ms for c in done if c.ttft_ms is not None])
-    p99 = float(np.percentile(ttfts, 99))
+    p99 = quantile(ttfts, 99)
     emit(
         "serving/continuous/overload_ttft",
         us / max(len(done), 1),
@@ -921,6 +923,7 @@ def _drift_gauntlet(
     controller_cfg = ControllerConfig(
         target_wait_frac=0.1, wait_alpha=0.7, max_pending=64
     )
+    log_sizes = {}
     for scenario, mk_trace, n_replicas in scenarios:
         trace = mk_trace(n_requests)
         prompts = np.random.default_rng(seed).integers(
@@ -954,6 +957,7 @@ def _drift_gauntlet(
             controller, n_replicas,
         )
         ratio = adaptive.p99_latency_ms / max(oracle.p99_latency_ms, 1e-9)
+        log_sizes[scenario] = len(controller.log)
         emit(
             f"serving/drift/{scenario}/adaptive",
             us / max(adaptive.n_requests, 1),
@@ -962,6 +966,23 @@ def _drift_gauntlet(
             f"goodput={adaptive.goodput*100:.2f}% "
             f"retunes={controller.n_retunes} "
             f"(mistuned start max_pending=64)",
+        )
+
+    # The controller's retune log is the gauntlet's evidence the adaptive
+    # law actually moved the knobs: under a drifting trace it must be
+    # non-empty (the static rows never touch it).
+    nonempty = sum(1 for n in log_sizes.values() if n > 0)
+    emit(
+        "serving/drift/controller_log",
+        0.0,
+        "retune log entries "
+        + " ".join(f"{s}={n}" for s, n in log_sizes.items())
+        + f" nonempty={nonempty}/{len(log_sizes)} (must be >=1)",
+    )
+    if nonempty == 0:
+        raise AssertionError(
+            "AdmissionController.log stayed empty across every drift "
+            f"scenario: {log_sizes}"
         )
 
 
@@ -1047,7 +1068,187 @@ def _adaptive_recompile_check(*, n_requests: int, seed: int = 0) -> int:
     return growth
 
 
-def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False) -> int:
+def _observability_smoke(
+    *, n_requests: int, sla_ms: float = 250.0, seed: int = 0,
+    sync: bool = False, trace_out=None,
+):
+    """Observability regression pin (PR 10 tentpole): twin + overhead rows.
+
+    The same seeded overload stream (bounded shed admission + an
+    :class:`AdmissionController`, one remote variant + the measured
+    on-device hedge tier against the service-coupled loop clock) served
+    twice: observability **detached** (the regression-pinned default) and
+    **attached**.  Three asserted claims:
+
+    * ``twin`` — the attached run makes identical decisions: same
+      completion order, model selection, queue waits, and shed count as
+      the detached run (instrumentation observes, never steers).
+    * ``overhead`` — attached p99 latency stays within 1.05x of the
+      detached p99 (the <=5% CI gate).
+    * ``conservation`` — the span trees balance (every submitted request
+      carries exactly one resolve/shed/cancel terminal, none left open)
+      and the four required histogram families appear in the Prometheus
+      export.
+
+    With ``trace_out`` set, writes the Chrome trace, the JSONL span sink
+    (``<trace_out>.spans.jsonl``), the Prometheus text
+    (``<trace_out>.prom``), and the metrics snapshot
+    (``<trace_out>.metrics.json``) for ``benchmarks/validate_obs.py``.
+    """
+    import jax
+
+    from repro.configs import reduced
+    from repro.core.network import LognormalNetwork
+    from repro.models import transformer as T
+    from repro.observability import (
+        Observability,
+        prometheus_text,
+        request_conservation,
+        write_chrome_trace,
+        write_jsonl_spans,
+        write_metrics_snapshot,
+        write_prometheus,
+    )
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.backend import OnDeviceBackend
+    from repro.serving.controller import AdmissionController, ControllerConfig
+    from repro.serving.engine import ServingEngine, Variant
+    from repro.serving.loadgen import OverloadArrivals, make_trace
+
+    prompt, gen, window_ms = 8, 2, 100.0
+    service_ms = 6.0
+    capacity_rps = 1e3 / service_ms
+    dispatch = "sync" if sync else "async"
+
+    hedge = OnDeviceBackend.from_zoo(max_len=prompt + gen + 4)
+    ondevice = hedge.measure_profile(prompt_len=prompt, gen_tokens=gen, trials=2)
+    engine = ServingEngine(
+        max_len=prompt + gen + 4, hedge_backend=hedge, dispatch=dispatch
+    )
+    cfg = reduced(
+        "gemma-2b", d_model=64, n_layers=2, n_heads=2, n_kv_heads=1, head_dim=32
+    )
+    engine.register(
+        Variant("remote", cfg, T.init_params(cfg, jax.random.key(seed)), 80.0)
+    )
+    registry = engine.measure_profiles(prompt_len=prompt, gen_tokens=gen, trials=2)
+
+    overload = OverloadArrivals(
+        rate_rps=capacity_rps, overload_factor=2.0,
+        overload_start=0.0, overload_stop=1.0,
+    )
+    trace = make_trace(
+        n_requests, overload, LognormalNetwork(80.0, 0.6), seed=seed
+    )
+    prompts = np.random.default_rng(seed).integers(0, 256, (n_requests, prompt))
+    admission = AdmissionConfig(policy="shed", max_pending=32, max_chunk=16)
+
+    def serve(obs):
+        sched = MDInferenceScheduler(
+            registry, ondevice, SchedulerConfig(t_sla_ms=sla_ms, seed=seed)
+        )
+        controller = AdmissionController(
+            ControllerConfig(target_wait_frac=0.1, wait_alpha=0.7, max_pending=64)
+        )
+        loop = engine.make_loop(
+            sched, admission=admission, controller=controller,
+            observability=obs,
+        )
+        t0 = time.perf_counter()
+        done, metrics = loop.drain_trace(
+            trace, window_ms, tokens_for=lambda i: prompts[i], n_steps=gen,
+            service_model=lambda res: service_ms * res.stats.n_requests,
+        )
+        us = (time.perf_counter() - t0) * 1e6
+        return done, metrics, loop, us
+
+    serve(None)  # warm every jitted shape out of both timed passes
+    done_off, _, loop_off, us_off = serve(None)
+    obs = Observability()
+    done_on, _, loop_on, us_on = serve(obs)
+
+    # -- seeded twin: the attached run must make identical decisions -------
+    twin = (
+        [c.rid for c in done_off] == [c.rid for c in done_on]
+        and [c.model_name for c in done_off] == [c.model_name for c in done_on]
+        and loop_off.admission.n_rejected == loop_on.admission.n_rejected
+        and np.allclose(
+            [c.queue_wait_ms for c in done_off],
+            [c.queue_wait_ms for c in done_on],
+        )
+    )
+
+    lats_off = np.asarray([c.latency_ms for c in done_off])
+    lats_on = np.asarray([c.latency_ms for c in done_on])
+    p99_off, p99_on = quantile(lats_off, 99), quantile(lats_on, 99)
+    ratio = p99_on / max(p99_off, 1e-9)
+    emit(
+        "serving/observability/disabled",
+        us_off / max(len(done_off), 1),
+        f"p99={p99_off:.1f}ms twin_identical={twin} "
+        f"shed={loop_off.admission.n_rejected} (regression-pinned default)",
+    )
+    emit(
+        "serving/observability/enabled",
+        us_on / max(len(done_on), 1),
+        f"p99={p99_on:.1f}ms overhead={ratio:.3f}x (gate <=1.05x) "
+        f"spans={len(obs.tracer)}",
+    )
+
+    # -- conservation + required metric families ---------------------------
+    audit = request_conservation(obs.tracer)
+    balanced = (
+        audit["open"] == 0
+        and audit["extra_terminals"] == 0
+        and audit["submitted"]
+        == audit["resolved"] + audit["rejected"] + audit["cancelled"]
+    )
+    text = prometheus_text(obs.metrics)
+    families = (
+        "admission_queue_wait_ms",
+        "loop_tick_wall_ms",
+        "cluster_batch_wall_ms",
+        "controller_wait_ewma_ms",
+    )
+    missing = [f for f in families if f not in text]
+    emit(
+        "serving/observability/trace",
+        0.0,
+        f"spans={len(obs.tracer)} submitted={audit['submitted']} "
+        f"resolved={audit['resolved']} shed={audit['rejected']} "
+        f"conservation={'ok' if balanced else 'VIOLATED'} "
+        f"families_missing={missing if missing else 'none'}",
+    )
+
+    if trace_out is not None:
+        out_dir = os.path.dirname(trace_out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        write_chrome_trace(trace_out, obs.tracer)
+        write_jsonl_spans(trace_out + ".spans.jsonl", obs.tracer)
+        write_prometheus(trace_out + ".prom", obs.metrics)
+        write_metrics_snapshot(trace_out + ".metrics.json", obs.metrics)
+
+    errors = []
+    if not twin:
+        errors.append("observability-attached run diverged from its "
+                      "detached seeded twin")
+    if ratio > 1.05:
+        errors.append(
+            f"observability overhead {ratio:.3f}x exceeds the 1.05x p99 gate"
+        )
+    if not balanced:
+        errors.append(f"span conservation violated: {audit}")
+    if missing:
+        errors.append(f"prometheus export missing families: {missing}")
+    if errors:
+        raise AssertionError("; ".join(errors))
+
+
+def run(
+    n_requests: int = 2_000, smoke: bool = False, sync: bool = False,
+    trace_out=None,
+) -> int:
     reg = lm_zoo_registry(chips=8)
     for p in reg:
         emit(f"serving/zoo/{p.name}", p.mu_ms * 1e3, f"quality={p.accuracy}")
@@ -1149,6 +1350,15 @@ def run(n_requests: int = 2_000, smoke: bool = False, sync: bool = False) -> int
     # folds its post-warmup compile growth into the --check-compiles gate.
     compile_growth += _adaptive_recompile_check(n_requests=48 if smoke else 160)
 
+    # Observability regression pin (PR 10 tentpole): the attached stack is
+    # a decision-identical seeded twin of the detached one, p99 overhead
+    # stays <=1.05x, span conservation balances, and the required metric
+    # families export.  --trace-out additionally writes the Chrome trace /
+    # span sink / Prometheus text / metrics snapshot for schema validation.
+    _observability_smoke(
+        n_requests=120 if smoke else 300, sync=sync, trace_out=trace_out
+    )
+
     write_results("serving")
     return compile_growth
 
@@ -1164,8 +1374,22 @@ if __name__ == "__main__":
                     help="exit nonzero on any post-warmup recompile of the "
                     "continuous tier's fixed-shape entry points, with or "
                     "without an AdmissionController attached (CI gate)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the observability smoke's Chrome trace to "
+                    "PATH (plus PATH.spans.jsonl / PATH.prom / "
+                    "PATH.metrics.json) for benchmarks/validate_obs.py")
+    ap.add_argument("--only-observability", action="store_true",
+                    help="run just the observability smoke section (the CI "
+                    "trace job's fast path)")
     args = ap.parse_args()
-    growth = run(smoke=args.smoke, sync=args.sync)
+    if args.only_observability:
+        _observability_smoke(
+            n_requests=120 if args.smoke else 300, sync=args.sync,
+            trace_out=args.trace_out,
+        )
+        write_results("serving")
+        raise SystemExit(0)
+    growth = run(smoke=args.smoke, sync=args.sync, trace_out=args.trace_out)
     if args.check_compiles and growth != 0:
         raise SystemExit(
             f"continuous tier recompiled after warmup (growth={growth})"

@@ -1,0 +1,193 @@
+"""Validate the observability smoke's exported artifacts (CI trace job).
+
+Stdlib-only: a hand-rolled JSON-Schema-*subset* validator (``type`` /
+``required`` / ``properties`` / ``items`` / ``enum`` — exactly what the
+checked-in schemas use) plus semantic checks no schema can express:
+
+* the Chrome trace (validated against
+  ``benchmarks/schemas/chrome_trace.schema.json``) contains request span
+  events and per-track thread metadata;
+* the span sink (``<trace>.spans.jsonl``) balances — every ``request``
+  root carries exactly one ``resolve`` | ``shed`` | ``cancel`` terminal
+  (the conservation audit, recomputed here from the raw JSONL so the
+  gate does not trust the library that produced it);
+* the Prometheus text (``<trace>.prom``) exposes the four required
+  histogram families;
+* the metrics snapshot (``<trace>.metrics.json``) matches
+  ``benchmarks/schemas/metrics_snapshot.schema.json``.
+
+Run:  python benchmarks/validate_obs.py results/trace_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+SCHEMA_DIR = os.path.join(os.path.dirname(__file__), "schemas")
+REQUIRED_FAMILIES = (
+    "admission_queue_wait_ms",
+    "loop_tick_wall_ms",
+    "cluster_batch_wall_ms",
+    "controller_wait_ewma_ms",
+)
+TERMINALS = ("resolve", "shed", "cancel")
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+def _type_ok(value, name: str) -> bool:
+    if name == "integer":
+        return isinstance(value, int) and not isinstance(value, bool)
+    if name == "number":
+        return (
+            isinstance(value, (int, float)) and not isinstance(value, bool)
+        )
+    return isinstance(value, _TYPES[name])
+
+
+def validate(instance, schema: Dict, path: str = "$") -> List[str]:
+    """Validate ``instance`` against the schema subset; returns error
+    strings (empty = valid).  Collects every violation instead of
+    stopping at the first."""
+    errors: List[str] = []
+    expected = schema.get("type")
+    if expected is not None and not _type_ok(instance, expected):
+        errors.append(
+            f"{path}: expected {expected}, got {type(instance).__name__}"
+        )
+        return errors  # children would only cascade the same failure
+    if "enum" in schema and instance not in schema["enum"]:
+        errors.append(f"{path}: {instance!r} not in {schema['enum']}")
+    for key in schema.get("required", ()):
+        if not isinstance(instance, dict) or key not in instance:
+            errors.append(f"{path}: missing required key {key!r}")
+    if isinstance(instance, dict):
+        for key, sub in schema.get("properties", {}).items():
+            if key in instance:
+                errors.extend(validate(instance[key], sub, f"{path}.{key}"))
+    if isinstance(instance, list) and "items" in schema:
+        for i, item in enumerate(instance):
+            errors.extend(validate(item, schema["items"], f"{path}[{i}]"))
+    return errors
+
+
+def _load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_trace(path: str) -> List[str]:
+    schema = _load(os.path.join(SCHEMA_DIR, "chrome_trace.schema.json"))
+    trace = _load(path)
+    errors = validate(trace, schema)
+    if errors:
+        return errors
+    events = trace["traceEvents"]
+    requests = [e for e in events if e.get("name") == "request"]
+    if not requests:
+        errors.append(f"{path}: no 'request' span events in the trace")
+    tids = {e["tid"] for e in events if e["ph"] != "M"}
+    named = {
+        e["tid"]
+        for e in events
+        if e["ph"] == "M" and e.get("name") == "thread_name"
+    }
+    unnamed = tids - named
+    if unnamed:
+        errors.append(f"{path}: tracks without thread_name metadata: "
+                      f"{sorted(unnamed)}")
+    return errors
+
+
+def check_spans(path: str) -> List[str]:
+    errors: List[str] = []
+    spans = []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            try:
+                spans.append(json.loads(line))
+            except ValueError as e:
+                errors.append(f"{path}:{i}: bad JSON ({e})")
+    if errors:
+        return errors
+    # The conservation audit, recomputed from raw JSONL: one terminal
+    # instant per request root, nothing open, nothing double-terminated.
+    roots = [s for s in spans if s.get("name") == "request"]
+    terminals: Dict[int, List[str]] = {}
+    for s in spans:
+        if s.get("name") in TERMINALS and s.get("parent_id") is not None:
+            terminals.setdefault(s["parent_id"], []).append(s["name"])
+    n_open = sum(1 for r in roots if not terminals.get(r["span_id"]))
+    n_extra = sum(
+        len(t) - 1 for t in terminals.values() if len(t) > 1
+    )
+    if not roots:
+        errors.append(f"{path}: no request roots in the span sink")
+    if n_open:
+        errors.append(f"{path}: {n_open} request roots have no terminal")
+    if n_extra:
+        errors.append(f"{path}: {n_extra} surplus terminal instants")
+    return errors
+
+
+def check_prometheus(path: str) -> List[str]:
+    with open(path) as f:
+        text = f.read()
+    errors = []
+    if "# TYPE" not in text:
+        errors.append(f"{path}: no '# TYPE' lines (not exposition format?)")
+    for family in REQUIRED_FAMILIES:
+        if f"# TYPE {family} histogram" not in text:
+            errors.append(f"{path}: missing histogram family {family!r}")
+    return errors
+
+
+def check_metrics_snapshot(path: str) -> List[str]:
+    schema = _load(
+        os.path.join(SCHEMA_DIR, "metrics_snapshot.schema.json")
+    )
+    return validate(_load(path), schema)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "trace", help="Chrome trace path passed to bench_serving "
+        "--trace-out (sibling .spans.jsonl / .prom / .metrics.json "
+        "artifacts are validated too)"
+    )
+    args = ap.parse_args(argv)
+    checks = (
+        (args.trace, check_trace),
+        (args.trace + ".spans.jsonl", check_spans),
+        (args.trace + ".prom", check_prometheus),
+        (args.trace + ".metrics.json", check_metrics_snapshot),
+    )
+    failed = False
+    for path, check in checks:
+        if not os.path.exists(path):
+            print(f"FAIL {path}: missing")
+            failed = True
+            continue
+        errors = check(path)
+        if errors:
+            failed = True
+            for e in errors[:20]:
+                print(f"FAIL {e}")
+            if len(errors) > 20:
+                print(f"... and {len(errors) - 20} more")
+        else:
+            print(f"ok   {path}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

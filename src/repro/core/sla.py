@@ -6,6 +6,8 @@ from typing import Dict
 
 import numpy as np
 
+from repro.observability.quantile import quantile
+
 __all__ = ["ReplicaRow", "TenantRow", "RequestMetrics", "summarize"]
 
 # Lane name charged for untagged requests under tenancy — mirrors
@@ -183,7 +185,7 @@ def summarize(
                     ),
                     utilization=per_rows[r] / busiest,
                     p99_inflight=(
-                        float(np.percentile(inflight[mask], 99))
+                        quantile(inflight[mask], 99, default=0.0)
                         if inflight is not None
                         else 0.0
                     ),
@@ -237,10 +239,8 @@ def summarize(
                 goodput=(
                     lane_attained / lane_submitted if lane_submitted else 0.0
                 ),
-                p99_latency_ms=(
-                    float(np.percentile(latency_ms[mask], 99))
-                    if served
-                    else 0.0
+                p99_latency_ms=quantile(
+                    latency_ms[mask] if served else (), 99, default=0.0
                 ),
                 n_requests=served,
                 n_rejected=rejects,
@@ -248,8 +248,8 @@ def summarize(
         if prio_arr is not None and n:
             for cls in np.unique(prio_arr):
                 cmask = prio_arr == cls
-                priority_p99[str(cls)] = float(
-                    np.percentile(latency_ms[cmask], 99)
+                priority_p99[str(cls)] = quantile(
+                    latency_ms[cmask], 99, default=0.0
                 )
 
     return RequestMetrics(
@@ -259,8 +259,8 @@ def summarize(
         ondevice_reliance=reliance,
         mean_latency_ms=float(latency_ms.mean()) if n else 0.0,
         std_latency_ms=float(latency_ms.std()) if n else 0.0,
-        p50_latency_ms=float(np.percentile(latency_ms, 50)) if n else 0.0,
-        p99_latency_ms=float(np.percentile(latency_ms, 99)) if n else 0.0,
+        p50_latency_ms=quantile(latency_ms, 50, default=0.0),
+        p99_latency_ms=quantile(latency_ms, 99, default=0.0),
         model_usage=usage,
         mean_queue_wait_ms=(
             0.0
@@ -270,7 +270,7 @@ def summarize(
         p99_queue_wait_ms=(
             0.0
             if queue_wait_ms is None or not n
-            else float(np.percentile(queue_wait_ms, 99))
+            else quantile(queue_wait_ms, 99, default=0.0)
         ),
         race_resolution=(
             {}

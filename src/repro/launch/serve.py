@@ -58,6 +58,7 @@ import numpy as np
 from repro.configs import reduced
 from repro.core.network import NAMED_TRACES, LognormalNetwork
 from repro.models import transformer as T
+from repro.observability.quantile import quantile
 from repro.serving.admission import OVERLOAD_POLICIES, AdmissionConfig
 from repro.serving.backend import JitBackend, OnDeviceBackend
 from repro.serving.cluster import (
@@ -90,6 +91,36 @@ TIERS = (
 def _jit_backend_factory(max_len: int) -> JitBackend:
     """Top-level (picklable) backend factory for the process transport."""
     return JitBackend(max_len)
+
+
+def _export_observability(obs, trace_out, metrics_out) -> None:
+    """Write the run's trace/metrics exports (no-op with tracing off)."""
+    if obs is None:
+        return
+    from repro.observability import (
+        request_conservation,
+        write_chrome_trace,
+        write_jsonl_spans,
+        write_prometheus,
+    )
+
+    if trace_out is not None:
+        write_chrome_trace(trace_out, obs.tracer)
+        write_jsonl_spans(trace_out + ".spans.jsonl", obs.tracer)
+        audit = request_conservation(obs.tracer)
+        balanced = (
+            audit["open"] == 0
+            and audit["extra_terminals"] == 0
+            and audit["submitted"]
+            == audit["resolved"] + audit["rejected"] + audit["cancelled"]
+        )
+        print(
+            f"trace             : {len(obs.tracer)} spans -> {trace_out} "
+            f"(conservation {'ok' if balanced else f'VIOLATED {audit}'})"
+        )
+    if metrics_out is not None:
+        write_prometheus(metrics_out, obs.metrics)
+        print(f"metrics           : prometheus text -> {metrics_out}")
 
 
 def build_engine(
@@ -281,6 +312,15 @@ def main(argv=None):
                     "submit one request and print each StreamChunk as the "
                     "continuous tier's decode steps emit it (requires "
                     "--continuous)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable tracing and write a Chrome trace_event "
+                    "JSON timeline (chrome://tracing / Perfetto) of the "
+                    "whole run to PATH; PATH.spans.jsonl gets the raw span "
+                    "sink (without this flag — and --metrics-out — the "
+                    "stack runs untraced, byte-identical to before)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable metrics and write a Prometheus-style text "
+                    "exposition of every counter/gauge/histogram to PATH")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     tenants = None
@@ -503,7 +543,16 @@ def main(argv=None):
             f"exec={c.exec_ms:.1f}ms"
         )
 
-    loop = engine.make_loop(sched, admission=admission, controller=controller)
+    observability = None
+    if args.trace_out is not None or args.metrics_out is not None:
+        from repro.observability import Observability
+
+        observability = Observability()
+
+    loop = engine.make_loop(
+        sched, admission=admission, controller=controller,
+        observability=observability,
+    )
     # Server service time covers the remote-scheduled rows only: the
     # degrade lane executes on the device, so it costs the device — not
     # the server's clock (that offload is the degrade policy's point).
@@ -585,6 +634,7 @@ def main(argv=None):
             f"goodput={metrics.goodput*100:.1f}%) — every request was "
             "rejected by admission; loosen --sla or --max-pending"
         )
+        _export_observability(observability, args.trace_out, args.metrics_out)
         return 0
     lats = np.asarray([c.latency_ms for c in completions])
     waits = np.asarray([c.queue_wait_ms for c in completions])
@@ -650,7 +700,7 @@ def main(argv=None):
         f"{cluster_note}"
         f"queue wait        : mean {waits.mean():.0f}ms  max {waits.max():.0f}ms  "
         f"(time-to-schedule mean {metrics.mean_time_to_schedule_ms:.0f}ms)\n"
-        f"p50/p99 latency   : {np.percentile(lats,50):.0f}/{np.percentile(lats,99):.0f} ms"
+        f"p50/p99 latency   : {quantile(lats, 50):.0f}/{quantile(lats, 99):.0f} ms"
     )
     if args.continuous:
         growth = engine.backend.compile_count - compiles_after_warmup
@@ -658,8 +708,8 @@ def main(argv=None):
             [c.ttft_ms for c in completions if c.ttft_ms is not None]
         )
         ttft_note = (
-            f"ttft p50/p99={np.percentile(ttfts, 50):.1f}/"
-            f"{np.percentile(ttfts, 99):.1f}ms "
+            f"ttft p50/p99={quantile(ttfts, 50):.1f}/"
+            f"{quantile(ttfts, 99):.1f}ms "
             if ttfts.size
             else ""
         )
@@ -669,6 +719,7 @@ def main(argv=None):
             f"recycled={engine.backend.recycled_total} {ttft_note}"
             f"post-warmup recompiles={growth} (conservation ok)"
         )
+    _export_observability(observability, args.trace_out, args.metrics_out)
     return 0
 
 

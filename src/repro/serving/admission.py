@@ -163,6 +163,7 @@ class AdmissionQueue:
 
     def __init__(self, cfg: AdmissionConfig = AdmissionConfig()):
         self.cfg = cfg
+        self._obs = None  # Observability handle; None keeps the bare path
         self._lock = threading.Lock()
         self._admitted: Deque[InferenceFuture] = deque()
         self._overflow: Deque[InferenceFuture] = deque()  # block policy
@@ -232,6 +233,45 @@ class AdmissionQueue:
         future.admitted = True
         future.admitted_wall_ms = time.perf_counter() * 1e3
 
+    # -- observability ---------------------------------------------------------
+    def attach_observability(self, obs) -> None:
+        """Attach a :class:`repro.observability.Observability` handle.
+
+        Offer dispositions, take-side shed counts, queue-wait histograms,
+        and lane-depth gauges are emitted through it.  Never attached
+        (the default), every path is the exact pre-observability one.
+        """
+        self._obs = obs
+
+    def _note_offer(self, disposition: str) -> None:
+        self._obs.counter(
+            "admission_offers_total", disposition=disposition
+        ).inc()
+
+    def _note_take(self, batch: AdmissionBatch) -> None:
+        """Record one take's outcome (only called with ``_obs`` attached)."""
+        obs = self._obs
+        wait_hist = obs.histogram("admission_queue_wait_ms")
+        for f in batch.chunk:
+            wait_hist.record(max(batch.now_ms - f.request.arrival_ms, 0.0))
+        if batch.shed:
+            obs.counter("admission_shed_total").inc(len(batch.shed))
+        if batch.degraded:
+            obs.counter("admission_degraded_taken_total").inc(
+                len(batch.degraded)
+            )
+        obs.gauge("admission_pending").set(self.pending)
+        obs.gauge("admission_blocked").set(self.blocked)
+        if self._lanes is not None:
+            for f in batch.chunk:
+                obs.counter(
+                    "tenant_selected_total", tenant=self._lanes.name_of(f)
+                ).inc()
+            with self._lock:
+                depths = self._lanes.depths()
+            for name, depth in depths.items():
+                obs.gauge("tenant_lane_depth", tenant=name).set(depth)
+
     # -- adaptive retuning -----------------------------------------------------
     def retune(
         self,
@@ -273,8 +313,16 @@ class AdmissionQueue:
         """Place one submitted future; returns its disposition:
         ``"admitted"`` | ``"blocked"`` | ``"degraded"`` | ``"rejected"``.
         """
-        if self._lanes is not None:
-            return self._offer_tenant(future)
+        disposition = (
+            self._offer_tenant(future)
+            if self._lanes is not None
+            else self._offer_fifo(future)
+        )
+        if self._obs is not None:
+            self._note_offer(disposition)
+        return disposition
+
+    def _offer_fifo(self, future: InferenceFuture) -> str:
         with self._lock:
             self.n_submitted += 1
             if not self.cfg.bounded:
@@ -476,6 +524,8 @@ class AdmissionQueue:
                 else:
                     self._admitted.appendleft(f)
             self.n_requeued += len(futures)
+        if self._obs is not None and futures:
+            self._obs.counter("admission_requeued_total").inc(len(futures))
 
     # -- tick side -------------------------------------------------------------
     def take(
@@ -506,12 +556,31 @@ class AdmissionQueue:
         FIFO prefix; everything else keeps its semantics.
         """
         if self._lanes is not None:
-            return self._take_tenant(
+            batch = self._take_tenant(
                 now_ms,
                 default_sla_ms=default_sla_ms,
                 service_floor_ms=service_floor_ms,
                 ondevice_floor_ms=ondevice_floor_ms,
             )
+        else:
+            batch = self._take_fifo(
+                now_ms,
+                default_sla_ms=default_sla_ms,
+                service_floor_ms=service_floor_ms,
+                ondevice_floor_ms=ondevice_floor_ms,
+            )
+        if self._obs is not None:
+            self._note_take(batch)
+        return batch
+
+    def _take_fifo(
+        self,
+        now_ms: Optional[float],
+        *,
+        default_sla_ms: float,
+        service_floor_ms: float,
+        ondevice_floor_ms: Optional[float],
+    ) -> AdmissionBatch:
         shed: List[InferenceFuture] = []
         with self._lock:
             self._prune()

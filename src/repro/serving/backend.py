@@ -193,6 +193,20 @@ class ExecutionBackend:
         self.dispatched_rows = 0
         self.completed_batches = 0
         self.ewma_wall_ms: Optional[float] = None
+        # Optional repro.observability.Observability handle + the trace
+        # track this backend's spans land on (set by the cluster layer
+        # with the replica's id, or by the loop for a single backend).
+        self._obs = None
+        self._obs_track: Optional[str] = None
+
+    def attach_observability(self, obs, track: Optional[str] = None) -> None:
+        """Wire this backend's dispatch path to a metrics+trace handle.
+
+        Never attached (the default), every path is byte-identical to the
+        uninstrumented backend.
+        """
+        self._obs = obs
+        self._obs_track = track
 
     def _note_dispatch(self, n_rows: int) -> None:
         with self._stats_lock:
@@ -277,10 +291,22 @@ class ExecutionBackend:
             return _CompletedBatchHandle(
                 name, n_rows, dispatch_wall_ms, out, wall_ms
             )
+        run = lambda: self.run_batch(name, batch, n_steps)  # noqa: E731
+        if self._obs is not None:
+            # The handle's worker thread has no ambient span of its own;
+            # capture the dispatching thread's (the loop's batch-group
+            # span) and re-bind it so transport-level spans nest under it.
+            tracer = self._obs.tracer
+            ambient = tracer.ambient_id()
+
+            def run(_inner=run):
+                with tracer.bind(ambient):
+                    return _inner()
+
         return _ThreadedBatchHandle(
             name,
             n_rows,
-            lambda: self.run_batch(name, batch, n_steps),
+            run,
             on_done=lambda wall_ms: self._note_done(n_rows, wall_ms),
         )
 
@@ -596,6 +622,17 @@ class ContinuousBatchingBackend(ExecutionBackend):
     def register(self, v: Variant) -> None:
         self.variants[v.name] = v
         self._engines[v.name] = _ContinuousEngine(v, self.geometry)
+        if self._obs is not None:
+            self._engines[v.name].cache_mgr.attach_observability(
+                self._obs, variant=v.name
+            )
+
+    def attach_observability(self, obs, track: Optional[str] = None) -> None:
+        super().attach_observability(obs, track)
+        # The slot ledger emits graft/free counters and free-capacity
+        # gauges; engines registered later attach in register().
+        for nm, eng in self._engines.items():
+            eng.cache_mgr.attach_observability(obs, variant=nm)
 
     def warmup(self, name: Optional[str] = None) -> None:
         """Compile every fixed-shape entry point (idempotent).
@@ -748,6 +785,19 @@ class ContinuousBatchingBackend(ExecutionBackend):
                 now_wall = time.perf_counter() * 1e3
                 handle.emitted[row].append(tok)
                 handle.ttft_wall_ms[row] = now_wall - handle.dispatch_wall_ms
+                if self._obs is not None:
+                    self._obs.histogram(
+                        "continuous_ttft_ms", variant=name
+                    ).record(handle.ttft_wall_ms[row])
+                    self._obs.tracer.instant(
+                        "graft",
+                        parent=self._obs.tracer.ambient_id(),
+                        cat="continuous",
+                        track=self._obs_track,
+                        t_ms=now_wall,
+                        variant=name,
+                        slot=slot.index,
+                    )
                 if handle.on_token is not None:
                     handle.on_token(row, tok, now_wall)
                 if n_steps == 1:

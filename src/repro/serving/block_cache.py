@@ -78,6 +78,23 @@ class BlockPagedSlotCache:
         self.freed_by_reason: Dict[str, int] = {
             "resolved": 0, "hedge_win": 0, "cancel": 0,
         }
+        # Optional metrics hookup (set by the continuous backend); None
+        # keeps the ledger metric-free.
+        self._obs = None
+        self._obs_labels: Dict[str, str] = {}
+
+    def attach_observability(self, obs, **labels) -> None:
+        """Mirror the conservation ledger into counters/gauges."""
+        self._obs = obs
+        self._obs_labels = labels
+
+    def _note_capacity(self) -> None:
+        self._obs.gauge(
+            "slot_cache_free_pages", **self._obs_labels
+        ).set(self.n_free_pages)
+        self._obs.gauge(
+            "slot_cache_free_slots", **self._obs_labels
+        ).set(len(self.free_slots))
 
     # -- queries --------------------------------------------------------------
     @property
@@ -141,6 +158,11 @@ class BlockPagedSlotCache:
             raise ValueError(f"slot {slot_index} not prefilling: {slot.state}")
         slot.state = SlotState.DECODING
         self.grafted_total += 1
+        if self._obs is not None:
+            self._obs.counter(
+                "slot_cache_grafted_total", **self._obs_labels
+            ).inc()
+            self._note_capacity()
 
     def release(self, slot_index: int, reason: str) -> None:
         """PREFILLING/DECODING → RECYCLED: return the slot's pages.
@@ -165,6 +187,11 @@ class BlockPagedSlotCache:
         slot.state = SlotState.RECYCLED
         self.freed_total += 1
         self.freed_by_reason[reason] += 1
+        if self._obs is not None:
+            self._obs.counter(
+                "slot_cache_freed_total", reason=reason, **self._obs_labels
+            ).inc()
+            self._note_capacity()
 
     # -- device-facing views ---------------------------------------------------
     def page_table(self, slot_index: int) -> np.ndarray:

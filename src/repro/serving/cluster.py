@@ -618,6 +618,22 @@ class ClusterBackend(ExecutionBackend):
         # cooldowns and routability are evaluated against this, so health
         # behavior is deterministic trace time, not wall time.
         self._now_ms = 0.0
+        self._obs = None  # Observability handle; None keeps the bare path
+
+    def attach_observability(self, obs, track: Optional[str] = None) -> None:
+        """Propagate a metrics+trace handle through the pool: each
+        replica's breaker and backend get it with the replica's trace
+        track (``replica:<id>``), so worker spans and trip instants land
+        on the right timeline row."""
+        self._obs = obs
+        for r in self.pool.replicas:
+            rtrack = f"replica:{r.replica_id}"
+            r.health.breaker.attach_observability(
+                obs, track=rtrack, replica=str(r.replica_id)
+            )
+            attach = getattr(r.backend, "attach_observability", None)
+            if attach is not None:
+                attach(obs, track=rtrack)
 
     # -- membership clock -----------------------------------------------------
     def advance_clock(self, now_ms: float) -> None:
@@ -757,8 +773,23 @@ class ClusterBackend(ExecutionBackend):
     def submit_batch(
         self, name: str, batch: np.ndarray, n_steps: int, *, sync: bool = False
     ) -> BatchHandle:
-        replica = self.route(name)
+        try:
+            replica = self.route(name)
+        except NoHealthyReplica:
+            if self._obs is not None:
+                self._obs.counter(
+                    "cluster_no_healthy_total", variant=name
+                ).inc()
+            raise
         depth = replica.inflight_rows + int(batch.shape[0])
+        if self._obs is not None:
+            self._obs.counter(
+                "cluster_dispatched_rows_total",
+                replica=str(replica.replica_id),
+            ).inc(int(batch.shape[0]))
+            self._obs.gauge(
+                "cluster_inflight_rows", replica=str(replica.replica_id)
+            ).set(depth)
         try:
             handle = replica.backend.submit_batch(
                 name, batch, n_steps, sync=sync

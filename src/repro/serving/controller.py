@@ -136,6 +136,9 @@ class AdmissionController:
         # (now_ms, max_pending, shed_headroom_ms) after each retune —
         # the gauntlet's evidence that the law actually moved the knobs.
         self.log: List[Tuple[float, int, float]] = []
+        # Optional repro.observability.Observability handle (set by the
+        # loop); None keeps observe/apply free of metric writes.
+        self.observability = None
 
     # -- phase 1: fold one collected tick's signals ------------------------
     def observe(
@@ -197,6 +200,14 @@ class AdmissionController:
                 + (1.0 - cfg.wait_alpha) * self.wait_ewma_ms
             )
         self._shed_last = result.stats.n_shed > 0
+
+        obs = self.observability
+        if obs is not None:
+            if self.wait_ewma_ms is not None:
+                obs.histogram("controller_wait_ewma_ms").record(
+                    self.wait_ewma_ms
+                )
+            obs.gauge("controller_service_est_ms").set(self.service_est_ms)
 
         target = cfg.target_wait_frac * self.sla_ms
         wait = self.wait_ewma_ms if self.wait_ewma_ms is not None else 0.0
@@ -267,7 +278,22 @@ class AdmissionController:
             max_pending=new_pending, shed_headroom_ms=new_headroom
         )
         self.n_retunes += 1
-        self.log.append(
-            (getattr(self, "_now_ms", 0.0), new_pending, new_headroom)
-        )
+        now_ms = getattr(self, "_now_ms", 0.0)
+        self.log.append((now_ms, new_pending, new_headroom))
+        if self.observability is not None:
+            obs = self.observability
+            direction = "tighten" if self._tightened_last else "relax"
+            obs.counter(
+                "controller_retunes_total", direction=direction
+            ).inc()
+            obs.gauge("controller_max_pending").set(new_pending)
+            obs.gauge("controller_shed_headroom_ms").set(new_headroom)
+            obs.tracer.instant(
+                "controller.retune",
+                cat="controller",
+                now_ms=now_ms,
+                direction=direction,
+                max_pending=new_pending,
+                shed_headroom_ms=new_headroom,
+            )
         return True

@@ -92,6 +92,7 @@ class ServingEngine:
         dispatch: Optional[str] = None,
         admission=None,
         controller=None,
+        observability=None,
     ):
         """Build a :class:`repro.serving.loop.ServingLoop` over this
         engine's backends (the event-loop serving front).
@@ -102,6 +103,10 @@ class ServingEngine:
         unbounded compatibility behavior.  ``controller`` is an optional
         :class:`repro.serving.controller.AdmissionController` closing the
         adaptive loop over that queue; ``None`` keeps the static config.
+        ``observability`` is an optional
+        :class:`repro.observability.Observability` handle the loop
+        threads through every layer; ``None`` keeps the stack untraced
+        (the regression-pinned default).
         """
         from repro.serving.loop import ServingLoop
 
@@ -112,6 +117,7 @@ class ServingEngine:
             dispatch=self.dispatch if dispatch is None else dispatch,
             admission=admission,
             controller=controller,
+            observability=observability,
         )
 
     # -- compatibility shim over the event loop ------------------------------

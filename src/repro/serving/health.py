@@ -79,6 +79,21 @@ class CircuitBreaker:
         self.consecutive_failures = 0
         self.trips = 0  # lifetime trip count (drives the cooldown backoff)
         self._probe_inflight = False
+        # Optional observability hookup (set by the cluster layer, which
+        # knows the replica id).  None keeps transitions metric-free.
+        self._obs = None
+        self._obs_labels: dict = {}
+        self._obs_track: Optional[str] = None
+
+    def attach_observability(self, obs, track: Optional[str] = None, **labels):
+        """Wire trip/recovery events to a metrics+trace handle.
+
+        ``labels`` (e.g. ``replica="2"``) tag the counters; ``track``
+        places the ``breaker.trip`` instants on that trace row.
+        """
+        self._obs = obs
+        self._obs_labels = labels
+        self._obs_track = track
 
     # -- inspection -----------------------------------------------------------
     @property
@@ -118,6 +133,10 @@ class CircuitBreaker:
     # -- completion-side ------------------------------------------------------
     def on_success(self, now_ms: float) -> None:
         """A routed batch completed: close the breaker, reset the backoff."""
+        if self._obs is not None and self.state != "closed":
+            self._obs.counter(
+                "breaker_recoveries_total", **self._obs_labels
+            ).inc()
         self.state = "closed"
         self.reason = None
         self.open_until_ms = None
@@ -144,6 +163,19 @@ class CircuitBreaker:
 
     def trip(self, now_ms: float, reason: str, permanent: bool = False) -> None:
         """Open the breaker (cooldown backs off per consecutive trip)."""
+        if self._obs is not None:
+            self._obs.counter(
+                "breaker_trips_total", **self._obs_labels
+            ).inc()
+            self._obs.tracer.instant(
+                "breaker.trip",
+                cat="health",
+                track=self._obs_track,
+                reason=reason,
+                permanent=permanent,
+                now_ms=now_ms,
+                **self._obs_labels,
+            )
         self.trips += 1
         self.state = "open"
         self.reason = reason

@@ -179,6 +179,17 @@ class InferenceFuture:
             "interactive" if request.priority is None else request.priority
         )
         self._loop = loop
+        # Observability: the request's root span and the tracer it lives
+        # in — set by the loop at submit when tracing is enabled (both
+        # stay None otherwise; every emission below is guarded).  The
+        # lifecycle transitions are the single source of truth for the
+        # terminal instants (resolve / shed / cancel) the conservation
+        # check counts, and for the requeue back-edge mark.
+        self.span = None
+        self._tracer = None
+        # The queued-period child span (submit → tick claim); reopened by
+        # a lost-batch requeue so the tree shows every wait separately.
+        self._queued_span = None
         self._event = threading.Event()
         # Streaming channel: decode tokens pushed by the backend (via the
         # loop's per-batch on_token callback) before resolution.
@@ -278,6 +289,14 @@ class InferenceFuture:
         self._chunks.append(
             StreamChunk(len(self._chunks), int(token), float(wall_ms))
         )
+        if self._tracer is not None:
+            self._tracer.instant(
+                "stream.token",
+                parent=self.span,
+                cat="stream",
+                t_ms=wall_ms,
+                index=len(self._chunks) - 1,
+            )
 
     @property
     def chunks(self) -> List[StreamChunk]:
@@ -354,6 +373,12 @@ class InferenceFuture:
                 return False
             self.state = RequestState.SCHEDULED
             self.scheduled_ms = now_ms
+            if self._tracer is not None:
+                self._end_queued()
+                self._tracer.instant(
+                    "scheduled", parent=self.span, cat="request",
+                    now_ms=now_ms,
+                )
             return True
 
     def _mark_executing(self, tier_dispatch_wall_ms: Dict[str, float]) -> None:
@@ -371,10 +396,29 @@ class InferenceFuture:
             self.state = RequestState.RESOLVED
             self._completion = completion
             self.resolved_ms = self.request.arrival_ms + completion.latency_ms
+            if self._tracer is not None:
+                self._tracer.instant(
+                    "resolve",
+                    parent=self.span,
+                    cat="request",
+                    race_resolution=completion.race_resolution,
+                    latency_ms=completion.latency_ms,
+                    model=completion.model_name,
+                )
+                self._tracer.end(self.span)
             self._event.set()
+
+    def _end_queued(self) -> None:
+        """Close the queued-period span (idempotent; no-op untraced)."""
+        if self._tracer is not None and self._queued_span is not None:
+            self._tracer.end(self._queued_span)
 
     def _mark_cancelled(self) -> None:
         self.state = RequestState.CANCELLED
+        if self._tracer is not None:
+            self._end_queued()
+            self._tracer.instant("cancel", parent=self.span, cat="request")
+            self._tracer.end(self.span)
         self._event.set()
 
     def _requeue(self) -> bool:
@@ -399,6 +443,18 @@ class InferenceFuture:
             self.state = RequestState.QUEUED
             self.scheduled_ms = None
             self.requeues += 1
+            if self._tracer is not None:
+                self._tracer.instant(
+                    "requeue", parent=self.span, cat="request",
+                    requeues=self.requeues,
+                )
+                self._queued_span = self._tracer.start(
+                    "queued",
+                    parent=self.span,
+                    cat="request",
+                    track=self.span.track if self.span is not None else None,
+                    requeue=self.requeues,
+                )
             return True
 
     def _mark_rejected(self) -> bool:
@@ -414,6 +470,10 @@ class InferenceFuture:
             if self.state is not RequestState.QUEUED:
                 return False
             self.state = RequestState.REJECTED
+            if self._tracer is not None:
+                self._end_queued()
+                self._tracer.instant("shed", parent=self.span, cat="request")
+                self._tracer.end(self.span)
             self._event.set()
             return True
 

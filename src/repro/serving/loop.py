@@ -239,6 +239,13 @@ class _InflightTick:
     shed_info: List[Tuple[Optional[str], str]] = dataclasses.field(
         default_factory=list
     )
+    # Observability (all None/empty with tracing off): the tick span, the
+    # per-group batch spans (index-aligned with ``groups``), and the
+    # hedge / degrade batch spans — opened at dispatch, closed at collect.
+    tick_span: object = None
+    group_spans: List[object] = dataclasses.field(default_factory=list)
+    hedge_span: object = None
+    degrade_span: object = None
 
     def poll(self) -> bool:
         handles = [h for _, _, h in self.groups]
@@ -276,6 +283,15 @@ class ServingLoop:
         before admission take.  ``None`` — the default — keeps the static
         config byte-identical to the pre-controller loop
         (regression-pinned).
+    observability:
+        An optional :class:`repro.observability.Observability` handle.
+        The loop is the fan-out point: it attaches the handle to the
+        admission queue, controller, scheduler, both backend tiers (a
+        cluster propagates to every replica's breaker and transport), and
+        instruments its own tick/dispatch/collect path — request span
+        trees, tick and batch spans, and the loop's counters/histograms.
+        ``None`` — the default — keeps every layer on its exact
+        pre-observability path (regression-pinned byte identity).
     """
 
     def __init__(
@@ -287,6 +303,7 @@ class ServingLoop:
         dispatch: str = "async",
         admission: Optional[AdmissionConfig | AdmissionQueue] = None,
         controller=None,
+        observability=None,
     ):
         if dispatch not in ("async", "sync", "stepped"):
             raise ValueError(
@@ -312,6 +329,31 @@ class ServingLoop:
         self.controller = controller
         self._inflight: List[_InflightTick] = []
         self._rid = itertools.count()
+        self.observability = None
+        if observability is not None:
+            self.attach_observability(observability)
+
+    def attach_observability(self, obs) -> None:
+        """Thread one observability handle through the whole stack.
+
+        The loop owns the fan-out so callers attach exactly once: the
+        admission queue (and through it the tenant lanes), the controller,
+        the scheduler's EWMA gauges, and both backend tiers — a clustered
+        remote tier forwards to each replica's breaker and transport, a
+        continuous tier to its slot-cache ledger.
+        """
+        self.observability = obs
+        self.admission.attach_observability(obs)
+        self.scheduler.observability = obs
+        if self.controller is not None:
+            self.controller.observability = obs
+        for tier, track in (
+            (self.backend, "remote"),
+            (self.hedge_backend, "ondevice"),
+        ):
+            attach = getattr(tier, "attach_observability", None)
+            if attach is not None:
+                attach(obs, track=track)
 
     # -- admission ------------------------------------------------------------
     def next_rid(self) -> int:
@@ -328,6 +370,27 @@ class ServingLoop:
         REJECTED (``shed``), or routed to the on-device-only degrade lane.
         """
         future = InferenceFuture(request, loop=self)
+        obs = self.observability
+        if obs is not None:
+            tracer = obs.tracer
+            track = (
+                f"tenant:{request.tenant}"
+                if request.tenant is not None
+                else "requests"
+            )
+            future._tracer = tracer
+            future.span = tracer.start(
+                "request",
+                cat="request",
+                track=track,
+                rid=request.rid,
+                tenant=request.tenant,
+                arrival_ms=request.arrival_ms,
+            )
+            future._queued_span = tracer.start(
+                "queued", parent=future.span, cat="request", track=track
+            )
+            obs.counter("loop_submitted_total").inc()
         self.admission.offer(future)
         return future
 
@@ -438,6 +501,18 @@ class ServingLoop:
             return None
         now_ms = take.now_ms
         self.now_ms = max(self.now_ms, now_ms)
+        obs = self.observability
+        tick_span = None
+        if obs is not None:
+            tick_span = obs.tracer.start(
+                "tick",
+                cat="loop",
+                track="loop",
+                now_ms=now_ms,
+                n_taken=len(take.chunk),
+                n_degraded=len(take.degraded),
+                n_shed=len(take.shed),
+            )
         # Feed the loop clock to a clustered backend: breaker cooldowns,
         # drain state, and the hosted mask are all evaluated at tick time,
         # so membership transitions are visible the same tick they happen.
@@ -469,8 +544,11 @@ class ServingLoop:
                         shed_info=[
                             (f.request.tenant, f.priority) for f in take.shed
                         ],
+                        tick_span=tick_span,
                     )
                 )
+            if tick_span is not None:
+                obs.tracer.end(tick_span)
             return None
         # Dispatch modes: "sync" runs everything inline; "async" overlaps
         # tiers on worker threads; "stepped" is the continuous-batching
@@ -484,6 +562,8 @@ class ServingLoop:
         t_sla: object = self.scheduler.cfg.t_sla_ms
         queue_wait = np.zeros(len(batch))
         groups: List[Tuple[int, np.ndarray, BatchHandle]] = []
+        group_spans: List[object] = []
+        hedge_span = None
         row_handles: List[Optional[BatchHandle]] = [None] * len(batch)
         hedged_rows = np.zeros(0, dtype=np.int64)
         hedge_handle: Optional[BatchHandle] = None
@@ -532,10 +612,28 @@ class ServingLoop:
                         if streaming
                         else {}
                     )
-                    try:
-                        handle = self.backend.submit_batch(
-                            name, gbatch, steps, sync=sync, **kwargs
+                    gspan = None
+                    if obs is not None:
+                        gspan = obs.tracer.start(
+                            f"batch:{name}",
+                            parent=tick_span,
+                            cat="dispatch",
+                            variant=name,
+                            rows=int(part.size),
                         )
+                    try:
+                        # The group span is the ambient parent during
+                        # submit so transport/backend spans nest under it
+                        # even across the async path's worker thread.
+                        if gspan is not None:
+                            with obs.tracer.bind(gspan):
+                                handle = self.backend.submit_batch(
+                                    name, gbatch, steps, sync=sync, **kwargs
+                                )
+                        else:
+                            handle = self.backend.submit_batch(
+                                name, gbatch, steps, sync=sync, **kwargs
+                            )
                     except NoHealthyReplica as e:
                         # The eligible mask was computed at the top of the
                         # tick; a same-tick health transition (e.g. the
@@ -546,21 +644,43 @@ class ServingLoop:
                         handle = FailedBatchHandle(
                             name, int(gbatch.shape[0]), e
                         )
+                        if gspan is not None:
+                            gspan.args["error"] = "no_healthy_replica"
+                    if gspan is not None:
+                        replica = getattr(handle, "replica", None)
+                        if replica is not None:
+                            gspan.track = f"replica:{replica}"
+                            gspan.args["replica"] = replica
                     groups.append((int(m), part, handle))
+                    group_spans.append(gspan)
                     for i in part:
                         row_handles[i] = handle
 
             hedged_rows = np.flatnonzero(decision.hedged)
             if self.hedge_backend is not None and hedged_rows.size > 0:
                 hbatch, hsteps = _pad_batch(requests, hedged_rows)
-                hedge_handle = self.hedge_backend.submit_hedge(
-                    hbatch, hsteps, sync=hedge_sync
-                )
+                if obs is not None:
+                    hedge_span = obs.tracer.start(
+                        "batch:hedge",
+                        parent=tick_span,
+                        cat="dispatch",
+                        track="ondevice",
+                        rows=int(hedged_rows.size),
+                    )
+                    with obs.tracer.bind(hedge_span):
+                        hedge_handle = self.hedge_backend.submit_hedge(
+                            hbatch, hsteps, sync=hedge_sync
+                        )
+                else:
+                    hedge_handle = self.hedge_backend.submit_hedge(
+                        hbatch, hsteps, sync=hedge_sync
+                    )
 
         # Overload-degraded rows: the on-device tier alone answers — no
         # remote leg, no hedge race.  Without a hedge backend the duplicate
         # is simulated from the live on-device profile at collection.
         degrade_handle: Optional[BatchHandle] = None
+        degrade_span = None
         degrade_queue_wait = np.zeros(len(degraded))
         if degraded:
             dreqs = [f.request for f in degraded]
@@ -569,9 +689,22 @@ class ServingLoop:
             )
             if self.hedge_backend is not None:
                 dbatch, dsteps = _pad_batch(dreqs, range(len(dreqs)))
-                degrade_handle = self.hedge_backend.submit_hedge(
-                    dbatch, dsteps, sync=hedge_sync
-                )
+                if obs is not None:
+                    degrade_span = obs.tracer.start(
+                        "batch:degrade",
+                        parent=tick_span,
+                        cat="dispatch",
+                        track="ondevice",
+                        rows=len(degraded),
+                    )
+                    with obs.tracer.bind(degrade_span):
+                        degrade_handle = self.hedge_backend.submit_hedge(
+                            dbatch, dsteps, sync=hedge_sync
+                        )
+                else:
+                    degrade_handle = self.hedge_backend.submit_hedge(
+                        dbatch, dsteps, sync=hedge_sync
+                    )
 
         for i, f in enumerate(batch):
             tiers = {"remote": row_handles[i].dispatch_wall_ms}
@@ -601,6 +734,10 @@ class ServingLoop:
             degrade_handle=degrade_handle,
             n_shed=len(take.shed),
             shed_info=[(f.request.tenant, f.priority) for f in take.shed],
+            tick_span=tick_span,
+            group_spans=group_spans,
+            hedge_span=hedge_span,
+            degrade_span=degrade_span,
         )
         if not wait:
             self._inflight.append(tick)
@@ -708,8 +845,59 @@ class ServingLoop:
             if note is not None:
                 note(replica, str(error), fatal=isinstance(error, ReplicaDied))
 
+    # -- observability emission (all call sites obs-guarded) ------------------
+    def _note_request_tiers(self, f: InferenceFuture, c: CompletedRequest):
+        """Per-request tier legs + TTFT instant on the request's span tree.
+
+        The legs replay the future's recorded per-tier wall stamps — both
+        race clocks start at the dispatch tick, so the spans make the
+        overlap (or a serialized fallback's lack of it) visible per row.
+        """
+        tracer = self.observability.tracer
+        disp, done = f.tier_dispatch_wall_ms, f.tier_done_wall_ms
+        if "remote" in disp:
+            track = (
+                f"replica:{c.replica}" if c.replica is not None else "remote"
+            )
+            span = tracer.start(
+                "remote", parent=f.span, cat="tier", track=track,
+                t0_ms=disp["remote"], variant=c.model_name,
+            )
+            tracer.end(span, t1_ms=done.get("remote", disp["remote"]))
+        if "ondevice" in disp:
+            span = tracer.start(
+                "ondevice", parent=f.span, cat="tier", track="ondevice",
+                t0_ms=disp["ondevice"],
+            )
+            tracer.end(span, t1_ms=done.get("ondevice", disp["ondevice"]))
+        if c.ttft_ms is not None:
+            base = disp.get("remote")
+            tracer.instant(
+                "ttft", parent=f.span, cat="request",
+                t_ms=None if base is None else base + c.ttft_ms,
+                ttft_ms=c.ttft_ms,
+            )
+
+    def _note_tick(self, stats: TickStats, n_completions: int) -> None:
+        """Fold one collected tick into the loop's metric families."""
+        obs = self.observability
+        obs.counter("loop_ticks_total").inc()
+        obs.histogram("loop_tick_wall_ms").record(stats.span_wall_ms)
+        for name, value in (
+            ("loop_completions_total", n_completions),
+            ("loop_shed_total", stats.n_shed),
+            ("loop_degraded_total", stats.n_degraded),
+            ("loop_hedged_total", stats.n_hedged),
+            ("loop_lost_rows_total", stats.n_lost),
+            ("loop_requeued_total", stats.n_requeued),
+        ):
+            if value:
+                obs.counter(name).inc(value)
+        obs.gauge("loop_inflight_ticks").set(len(self._inflight))
+
     # -- collection / resolution ---------------------------------------------
     def _collect(self, tick: _InflightTick) -> TickResult:
+        obs = self.observability
         requests, decision = tick.requests, tick.decision
         n = len(requests)
         exec_ms = np.empty(n)
@@ -721,7 +909,8 @@ class ServingLoop:
         ttft = np.full(n, np.nan)
         gen_tokens: List[Optional[np.ndarray]] = [None] * n
         remote_wall_sum = 0.0
-        for m, rows, handle in tick.groups:
+        for gi, (m, rows, handle) in enumerate(tick.groups):
+            gspan = tick.group_spans[gi] if tick.group_spans else None
             try:
                 out, wall_ms = handle.wait()
             except (TransportError, NoHealthyReplica) as e:
@@ -736,6 +925,10 @@ class ServingLoop:
                 lost[rows] = True
                 exec_ms[rows] = np.inf
                 self._note_replica(handle.replica, ok=False, error=e)
+                if gspan is not None:
+                    gspan.args["error"] = repr(e)
+                    obs.tracer.end(gspan)
+                    obs.counter("loop_batches_lost_total").inc()
                 continue
             remote_wall_sum += wall_ms
             exec_ms[rows] = wall_ms
@@ -752,6 +945,13 @@ class ServingLoop:
                     released[i] = True
                     exec_ms[i] = np.inf
             self._note_replica(handle.replica, ok=True)
+            if gspan is not None:
+                obs.tracer.end(gspan, t1_ms=handle.done_wall_ms)
+            if obs is not None:
+                replica = handle.replica if handle.replica is not None else -1
+                obs.histogram(
+                    "cluster_batch_wall_ms", replica=str(replica)
+                ).record(float(wall_ms))
 
         completions: List[CompletedRequest] = []
         t_sla_live: List[float] = []  # per live completion, for summarize
@@ -788,6 +988,10 @@ class ServingLoop:
             hedge_tokens: Dict[int, np.ndarray] = {}
             if measured:
                 out, hedge_wall = tick.hedge_handle.wait()
+                if tick.hedge_span is not None:
+                    obs.tracer.end(
+                        tick.hedge_span, t1_ms=tick.hedge_handle.done_wall_ms
+                    )
                 for row, i in enumerate(tick.hedged_rows):
                     hedge_tokens[int(i)] = out[row, : requests[i].n_steps]
                 ondevice_in = np.full(n, hedge_wall)
@@ -853,6 +1057,8 @@ class ServingLoop:
                     tenant=requests[i].tenant,
                     priority=f.priority,
                 )
+                if obs is not None and f.span is not None:
+                    self._note_request_tiers(f, c)
                 f._mark_resolved(c)
                 if f.state is RequestState.RESOLVED:
                     completions.append(c)
@@ -970,6 +1176,15 @@ class ServingLoop:
         result = TickResult(
             completions=completions, metrics=metrics, stats=stats
         )
+        if obs is not None:
+            self._note_tick(stats, len(completions))
+            if tick.tick_span is not None:
+                tick.tick_span.args.update(
+                    n_completions=len(completions),
+                    n_lost=stats.n_lost,
+                    n_requeued=stats.n_requeued,
+                )
+                obs.tracer.end(tick.tick_span)
         if self.controller is not None:
             self.controller.observe(
                 result,
@@ -998,10 +1213,15 @@ class ServingLoop:
         nd = len(tick.degraded_futures)
         if not nd:
             return completions, t_sla_live
+        obs = self.observability
         dreqs = [f.request for f in tick.degraded_futures]
         sched = self.scheduler
         if tick.degrade_handle is not None:
             dout, dwall = tick.degrade_handle.wait()
+            if tick.degrade_span is not None:
+                obs.tracer.end(
+                    tick.degrade_span, t1_ms=tick.degrade_handle.done_wall_ms
+                )
             d_exec = np.full(nd, dwall)
             d_tokens = [dout[row, : r.n_steps] for row, r in enumerate(dreqs)]
             sched.observe_ondevice(d_exec)
@@ -1040,6 +1260,8 @@ class ServingLoop:
                 tenant=r.tenant,
                 priority=f.priority,
             )
+            if obs is not None and f.span is not None:
+                self._note_request_tiers(f, c)
             f._mark_resolved(c)
             if f.state is RequestState.RESOLVED:
                 completions.append(c)

@@ -190,6 +190,9 @@ class MDInferenceScheduler:
         self._join_var = np.zeros(len(self.names))
         self.join_count = np.zeros(len(self.names), dtype=np.int64)
         self._log: list[dict] = []
+        # Optional repro.observability.Observability handle (set by the
+        # serving loop).  None keeps every path free of metric writes.
+        self.observability = None
 
     # -- batched decision path ----------------------------------------------
     def decide_batch(
@@ -303,6 +306,14 @@ class MDInferenceScheduler:
         Observations are replayed per model in arrival order, so the result
         is identical to issuing scalar :meth:`observe` calls one by one.
         """
+        obs = self.observability
+        if obs is not None:
+            mi = np.atleast_1d(np.asarray(model_index))
+            ex = np.atleast_1d(np.asarray(exec_ms, dtype=np.float64))
+            for m, x in zip(mi, ex):
+                obs.histogram(
+                    "scheduler_observed_exec_ms", model=self.names[int(m)]
+                ).record(float(x))
         if self.cfg.profile_ewma <= 0:
             return
         model_index = np.atleast_1d(np.asarray(model_index))
@@ -312,6 +323,10 @@ class MDInferenceScheduler:
                 self.mu[m], self._var[m], exec_ms[model_index == m]
             )
             self.sigma[m] = np.sqrt(self._var[m])
+            if obs is not None:
+                obs.gauge(
+                    "scheduler_mu_ms", model=self.names[int(m)]
+                ).set(float(self.mu[m]))
 
     def observe(self, model_index: int, exec_ms: float):
         """EWMA profile update from an observed execution (drift handling)."""
@@ -333,6 +348,10 @@ class MDInferenceScheduler:
             np.atleast_1d(np.asarray(exec_ms, dtype=np.float64)),
         )
         self.ondevice_sigma = float(np.sqrt(self._ondevice_var))
+        if self.observability is not None:
+            self.observability.gauge("scheduler_ondevice_mu_ms").set(
+                self.ondevice_mu
+            )
 
     def observe_join(self, model_index: np.ndarray, ttft_ms: np.ndarray):
         """Fold mid-flight continuous-batching joins into the TTFT profile.
@@ -354,6 +373,10 @@ class MDInferenceScheduler:
                 mu, self._join_var[m], xs
             )
             self.join_count[m] += int((model_index == m).sum())
+            if self.observability is not None:
+                self.observability.gauge(
+                    "scheduler_join_ttft_mu_ms", model=self.names[int(m)]
+                ).set(float(self.join_ttft_mu[m]))
 
     # -- outcome resolution ---------------------------------------------------
     def resolve_chunk(

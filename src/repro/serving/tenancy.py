@@ -146,6 +146,10 @@ class TenantLanes:
             return self._lanes[name].n_queued
         return sum(lane.n_queued for lane in self._lanes.values())
 
+    def depths(self) -> Dict[str, int]:
+        """Per-lane queued depth (lane name -> count), for gauge export."""
+        return {name: lane.n_queued for name, lane in self._lanes.items()}
+
     def all_queued(self) -> List[InferenceFuture]:
         return [f for lane in self._lanes.values() for f in lane.q]
 

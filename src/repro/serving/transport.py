@@ -40,6 +40,7 @@ from __future__ import annotations
 import itertools
 import multiprocessing as mp
 import threading
+import time
 from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
@@ -98,6 +99,10 @@ class _PendingBatch:
         self.event = threading.Event()
         self.result: Optional[Tuple[np.ndarray, float]] = None
         self.error: Optional[TransportError] = None
+        # Tracing extras (populated only when the submit asked for them):
+        # the worker's relative timings and the parent-side receive stamp.
+        self.span_info: Optional[dict] = None
+        self.recv_wall_ms: Optional[float] = None
 
 
 class ProcessTransportBackend(ExecutionBackend):
@@ -175,6 +180,9 @@ class ProcessTransportBackend(ExecutionBackend):
                     continue  # a timed-out batch already gave up on it
                 if kind == "result":
                     slot.result = (msg[2], msg[3])
+                    if len(msg) > 4:  # traced submit: worker-side timings
+                        slot.span_info = msg[4]
+                        slot.recv_wall_ms = time.perf_counter() * 1e3
                 else:
                     slot.error = RemoteExecutionError(
                         f"batch failed in worker: {msg[2]}"
@@ -254,9 +262,53 @@ class ProcessTransportBackend(ExecutionBackend):
             raise ReplicaDied(f"replica is down: {self._dead}")
         if self.mode == "inline":
             if self._fail_queue:
+                if self._obs is not None:
+                    self._obs.counter(
+                        "transport_batches_total", outcome="error"
+                    ).inc()
                 raise RemoteExecutionError(self._fail_queue.pop(0))
-            return self._inner.run_batch(name, batch, n_steps)
+            if self._obs is None:
+                return self._inner.run_batch(name, batch, n_steps)
+            return self._run_inline_traced(name, batch, n_steps)
         return self._roundtrip(name, np.asarray(batch), int(n_steps))
+
+    def _run_inline_traced(self, name, batch, n_steps):
+        """Inline execution with the same span shape as process mode:
+        a ``transport.roundtrip`` wrapping a ``worker.execute`` (here
+        the 'worker' is this process — the boundary is logical only)."""
+        tracer = self._obs.tracer
+        span = tracer.start(
+            "transport.roundtrip",
+            parent=tracer.ambient_id(),
+            cat="transport",
+            track=self._obs_track,
+            variant=name,
+            rows=int(np.asarray(batch).shape[0]),
+            mode="inline",
+        )
+        exec_span = tracer.start(
+            "worker.execute",
+            parent=span,
+            cat="transport",
+            track=self._obs_track,
+            variant=name,
+        )
+        try:
+            out = self._inner.run_batch(name, batch, n_steps)
+        except BaseException as e:
+            span.args["error"] = repr(e)
+            self._obs.counter(
+                "transport_batches_total", outcome="error"
+            ).inc()
+            raise
+        finally:
+            tracer.end(exec_span)
+            tracer.end(span)
+        self._obs.counter("transport_batches_total", outcome="ok").inc()
+        self._obs.histogram("transport_roundtrip_ms").record(
+            span.duration_ms
+        )
+        return out
 
     def generate(self, name, tokens, n_steps):
         if self.mode == "inline":
@@ -266,14 +318,72 @@ class ProcessTransportBackend(ExecutionBackend):
         return self.run_batch(name, tokens, n_steps)
 
     def _roundtrip(self, name, batch, n_steps) -> Tuple[np.ndarray, float]:
+        if self._obs is None:
+            return self._roundtrip_raw(name, batch, n_steps, traced=False)[0]
+        # Traced path: one transport.roundtrip span around the pipe trip,
+        # with a worker.execute child reconstructed from the worker's
+        # *relative* timings (perf_counter epochs differ across processes,
+        # so the child is anchored to end at the parent-side receive
+        # stamp and extend backwards by the reported duration).
+        tracer = self._obs.tracer
+        span = tracer.start(
+            "transport.roundtrip",
+            parent=tracer.ambient_id(),
+            cat="transport",
+            track=self._obs_track,
+            variant=name,
+            rows=int(batch.shape[0]),
+            mode="process",
+        )
+        try:
+            result, slot = self._roundtrip_raw(
+                name, batch, n_steps, traced=True
+            )
+        except TransportError as e:
+            span.args["error"] = str(e)
+            tracer.end(span)
+            self._obs.counter(
+                "transport_batches_total", outcome="error"
+            ).inc()
+            raise
+        if slot.span_info is not None and slot.recv_wall_ms is not None:
+            info = slot.span_info
+            exec_span = tracer.start(
+                "worker.execute",
+                parent=span,
+                cat="transport",
+                track=self._obs_track,
+                variant=name,
+                worker_wall_ms=info.get("wall_ms"),
+                t0_ms=slot.recv_wall_ms - float(info.get("handle_ms", 0.0)),
+            )
+            tracer.end(exec_span, slot.recv_wall_ms)
+        tracer.end(span)
+        self._obs.counter("transport_batches_total", outcome="ok").inc()
+        self._obs.histogram("transport_roundtrip_ms").record(
+            span.duration_ms
+        )
+        return result
+
+    def _roundtrip_raw(
+        self, name, batch, n_steps, *, traced: bool
+    ) -> Tuple[Tuple[np.ndarray, float], _PendingBatch]:
         slot = _PendingBatch()
         with self._send_lock:
             if self._dead is not None:
                 raise ReplicaDied(f"replica is down: {self._dead}")
             seq = next(self._seq)
             self._pending[seq] = slot
+            # Backward-compatible protocol extension: the 6th element asks
+            # the worker to report its relative timings alongside the
+            # result (old 5-tuples keep the old 4-tuple reply).
+            msg = (
+                ("submit", seq, name, batch, n_steps, True)
+                if traced
+                else ("submit", seq, name, batch, n_steps)
+            )
             try:
-                self._conn.send(("submit", seq, name, batch, n_steps))
+                self._conn.send(msg)
             except (BrokenPipeError, OSError):
                 self._pending.pop(seq, None)
                 self._fail_all_pending("worker process died")
@@ -287,4 +397,4 @@ class ProcessTransportBackend(ExecutionBackend):
             raise ReplicaDied(f"batch timeout after {self.timeout_s}s")
         if slot.error is not None:
             raise slot.error
-        return slot.result
+        return slot.result, slot

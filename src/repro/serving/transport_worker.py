@@ -11,11 +11,20 @@ parent → child messages (tuples, first element is the op):
 
 * ``("register", variant)`` — register one variant on the child backend.
 * ``("submit", seq, name, batch, n_steps)`` — run one batch.
+* ``("submit", seq, name, batch, n_steps, True)`` — run one batch *and*
+  report worker-side timings (the tracing-enabled submit; the trailing
+  flag is the whole extension, so old parents and old workers interop).
 * ``("stop",)`` — exit the loop.
 
 child → parent messages:
 
 * ``("result", seq, out, wall_ms)`` — batch ``seq`` finished.
+* ``("result", seq, out, wall_ms, span_info)`` — traced completion;
+  ``span_info`` is ``{"handle_ms", "wall_ms"}`` — *relative* durations
+  (total submit-handling and the timed execution), because the child's
+  ``perf_counter`` epoch is meaningless to the parent.  The parent
+  anchors the reconstructed ``worker.execute`` span at its own receive
+  stamp.
 * ``("error", seq, repr_str)`` — batch ``seq`` raised; the exception is
   flattened to its ``repr`` (arbitrary exceptions may not pickle).
 
@@ -24,6 +33,8 @@ pipe as a pickled ndarray — the real message boundary the cluster's
 fault model is built on.
 """
 from __future__ import annotations
+
+import time
 
 
 def worker_main(conn, factory) -> None:
@@ -47,9 +58,21 @@ def worker_main(conn, factory) -> None:
                 continue
             if op == "submit":
                 seq, name, batch, n_steps = msg[1], msg[2], msg[3], msg[4]
+                traced = len(msg) > 5 and bool(msg[5])
                 try:
+                    t0 = time.perf_counter()
                     out, wall_ms = backend.run_batch(name, batch, n_steps)
-                    conn.send(("result", seq, out, float(wall_ms)))
+                    if traced:
+                        handle_ms = (time.perf_counter() - t0) * 1e3
+                        span_info = {
+                            "handle_ms": handle_ms,
+                            "wall_ms": float(wall_ms),
+                        }
+                        conn.send(
+                            ("result", seq, out, float(wall_ms), span_info)
+                        )
+                    else:
+                        conn.send(("result", seq, out, float(wall_ms)))
                 except BaseException as e:
                     conn.send(("error", seq, repr(e)))
                 continue

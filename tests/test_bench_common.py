@@ -1,0 +1,91 @@
+"""Benchmark result plumbing: the ``results/BENCH_<bench>.json`` schema,
+merge-by-row-name semantics for partial re-runs, and round-tripping.
+"""
+import json
+
+import pytest
+
+from benchmarks.common import (
+    RESULTS,
+    SCHEMA_VERSION,
+    emit,
+    reset_results,
+    write_results,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_accumulator():
+    reset_results()
+    yield
+    reset_results()
+
+
+def _read(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_write_results_schema(tmp_path, capsys):
+    emit("serving/x", 12.34, "note=a")
+    emit("serving/y", 5.0, "note=b")
+    path = write_results("serving", out_dir=str(tmp_path))
+    payload = _read(path)
+    assert payload["schema_version"] == SCHEMA_VERSION
+    assert payload["bench"] == "serving"
+    assert [r["name"] for r in payload["rows"]] == ["serving/x", "serving/y"]
+    assert payload["rows"][0] == {
+        "name": "serving/x", "us_per_call": 12.34, "derived": "note=a"
+    }
+    # The accumulator was flushed.
+    assert RESULTS == []
+    # emit also printed the CSV line.
+    out = capsys.readouterr().out
+    assert "serving/x,12.3,note=a" in out
+
+
+def test_partial_rerun_merges_by_row_name(tmp_path):
+    emit("serving/x", 1.0, "v1")
+    emit("serving/y", 2.0, "v1")
+    emit("serving/z", 3.0, "v1")
+    write_results("serving", out_dir=str(tmp_path))
+
+    # A partial re-run: updates one existing row, appends one new row.
+    emit("serving/y", 20.0, "v2")
+    emit("serving/new", 4.0, "v2")
+    path = write_results("serving", out_dir=str(tmp_path))
+
+    rows = {r["name"]: r for r in _read(path)["rows"]}
+    assert set(rows) == {"serving/x", "serving/y", "serving/z", "serving/new"}
+    assert rows["serving/x"]["derived"] == "v1"  # untouched rows survive
+    assert rows["serving/y"]["us_per_call"] == 20.0  # fresh rows win
+    assert rows["serving/new"]["derived"] == "v2"
+    # File row order stays stable for the pre-existing names.
+    names = [r["name"] for r in _read(path)["rows"]]
+    assert names[:3] == ["serving/x", "serving/y", "serving/z"]
+
+
+def test_round_trip_preserves_rows_exactly(tmp_path):
+    emit("serving/a", 0.0, "zero-cost row")
+    emit("serving/b", 123.456, "p99=1.0ms")
+    path = write_results("serving", out_dir=str(tmp_path))
+    first = _read(path)
+
+    # Writing an empty accumulator round-trips the file unchanged.
+    path2 = write_results("serving", out_dir=str(tmp_path))
+    assert path2 == path
+    assert _read(path) == first
+
+
+def test_mismatched_or_corrupt_existing_file_is_overwritten(tmp_path):
+    path = tmp_path / "BENCH_serving.json"
+    path.write_text("{not json")
+    emit("serving/x", 1.0, "v")
+    write_results("serving", out_dir=str(tmp_path))
+    assert [r["name"] for r in _read(path)["rows"]] == ["serving/x"]
+
+    # A different bench's file never merges into this one's rows.
+    emit("other/row", 2.0, "v")
+    other = write_results("other", out_dir=str(tmp_path))
+    assert other != str(path)
+    assert [r["name"] for r in _read(other)["rows"]] == ["other/row"]
